@@ -1,0 +1,136 @@
+"""Shared benchmark substrate.
+
+The paper evaluates on seven pretrained diffusion models (Table I). No
+pretrained checkpoints exist offline, so every benchmark TRAINS reduced
+diffusion models on synthetic mixtures (cached under
+experiments/bench_models/) and measures the paper's quantities on them:
+
+    ddpm*  pixel-space uncond,  linear schedule, DDIM 50   (DDPM analogue)
+    dit*   latent-space cond,   cosine schedule, DDIM 25   (DiT analogue)
+    sdm*   latent-space cond,   cosine schedule, PLMS 25   (SDM analogue)
+
+Class statistics (value ranges, zero/low/full fractions, similarities) are
+measured at this reduced scale; cycle/energy economics are priced at
+paper-scale layer dimensions via sim.scale_records (DESIGN.md §8.2-3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import diffusion
+from repro.data.synthetic import DataCfg, batch_for
+from repro.launch import steps as steps_mod
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench_models")
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchModel:
+    name: str
+    arch: configs.ArchConfig
+    sampler: str
+    steps: int
+    schedule: str  # linear | cosine
+    train_steps: int = 300
+    # dimension multipliers to the paper-scale model this stands in for
+    t_mult: float = 64.0  # tokens (batch x patches) scale-up
+    d_mult: float = 18.0  # width scale-up
+    seq_mult: float = 4.0  # tokens-per-sample scale-up (attention dims)
+
+
+def _base_arch(**kw):
+    a = configs.get("dit-xl2").smoke()
+    return dataclasses.replace(a, **kw)
+
+
+MODELS: dict[str, BenchModel] = {
+    "ddpm*": BenchModel(
+        "ddpm*",
+        _base_arch(n_layers=3, d_model=64, input_size=16, in_channels=3, n_classes=0),
+        sampler="ddim", steps=50, schedule="linear", t_mult=48, d_mult=8,
+    ),
+    "dit*": BenchModel(
+        "dit*",
+        _base_arch(n_layers=3, d_model=64, input_size=16, in_channels=4, n_classes=8),
+        sampler="ddim", steps=25, schedule="cosine", t_mult=64, d_mult=18,
+    ),
+    "sdm*": BenchModel(
+        "sdm*",
+        _base_arch(n_layers=3, d_model=64, input_size=16, in_channels=4, n_classes=8),
+        sampler="plms", steps=25, schedule="cosine", train_steps=360, t_mult=64, d_mult=20,
+    ),
+}
+
+
+def schedule_for(bm: BenchModel):
+    return diffusion.linear_schedule(1000) if bm.schedule == "linear" else diffusion.cosine_schedule(1000)
+
+
+def train_or_load(bm: BenchModel):
+    """Returns (dit_cfg, params). Trains once, caches to disk."""
+    dcfg = steps_mod.make_dit_model(bm.arch)
+    opt = steps_mod.make_optimizer(bm.arch, base_lr=2e-3, total=bm.train_steps)
+    state = steps_mod.init_state(bm.arch, jax.random.PRNGKey(hash(bm.name) % 2**31), opt)
+    mgr = CheckpointManager(os.path.join(BENCH_DIR, bm.name.replace("*", "_s")))
+    latest = mgr.latest_step()
+    if latest is not None and latest >= bm.train_steps:
+        state = mgr.restore(latest, state)
+        return dcfg, state["params"]
+    train = jax.jit(steps_mod.make_train_step(bm.arch, opt))
+    dc = DataCfg(seed=1, batch=16, seq_len=1)
+    start = int(jax.device_get(state["opt"]["step"])) if latest else 0
+    if latest:
+        state = mgr.restore(latest, state)
+    for step in range(start, bm.train_steps):
+        state, metrics = train(state, batch_for(bm.arch, dc, step))
+    mgr.save(bm.train_steps, state)
+    print(f"# trained {bm.name}: loss={float(metrics['loss']):.4f}", file=sys.stderr)
+    return dcfg, state["params"]
+
+
+def sample_inputs(bm: BenchModel, *, batch=4, seed=7):
+    key = jax.random.PRNGKey(seed)
+    a = bm.arch
+    x = jax.random.normal(key, (batch, a.input_size, a.input_size, a.in_channels))
+    labels = (jnp.arange(batch) % a.n_classes) if a.n_classes else None
+    return x, labels
+
+
+def collect(bm: BenchModel, *, batch=4, steps=None):
+    """One exact engine pass with full per-mode stats."""
+    from repro.sim import harness
+
+    dcfg, params = train_or_load(bm)
+    sched = schedule_for(bm)
+    x, labels = sample_inputs(bm, batch=batch)
+    n = steps or bm.steps
+    records, sample, eng = harness.collect_records(
+        params, dcfg, sched, x, labels, steps=n, sampler=bm.sampler
+    )
+    return {"records": records, "sample": sample, "engine": eng,
+            "params": params, "dcfg": dcfg, "sched": sched, "x": x, "labels": labels}
+
+
+_CACHE: dict = {}
+
+
+def collect_cached(name: str, **kw):
+    key = (name, tuple(sorted(kw.items())))
+    if key not in _CACHE:
+        _CACHE[key] = collect(MODELS[name], **kw)
+    return _CACHE[key]
+
+
+def emit(rows: list[tuple]):
+    """CSV protocol: name,us_per_call,derived"""
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

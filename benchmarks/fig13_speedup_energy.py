@@ -1,0 +1,36 @@
+"""Fig. 13 analogue: speedup and energy across hardware designs,
+normalized to ITC. Paper: Ditto 1.5x speedup / 17.74% energy saving over
+ITC; Ditto+ 1.06x over Ditto; Cambricon-D slower + higher energy on
+transformer-block models; all accelerators beat the GPU.
+"""
+import numpy as np
+
+import common
+from repro.sim import harness
+
+
+def run():
+    rows = []
+    sp_d, en_d = [], []
+    for name in common.MODELS:
+        bm = common.MODELS[name]
+        recs = common.collect_cached(name)["records"]
+        res = harness.run_designs(recs, t_mult=bm.t_mult, d_mult=bm.d_mult, seq_mult=bm.seq_mult)
+        t_itc, e_itc = res["itc"]["time_s"], res["itc"]["energy_j"]
+        for design in ("gpu-a100", "diffy", "cambricon-d", "ditto", "ditto+"):
+            r = res[design]
+            rows.append((f"fig13/{name}/{design}_speedup", round(r["time_s"] * 1e6, 1),
+                         round(t_itc / r["time_s"], 3)))
+            rows.append((f"fig13/{name}/{design}_rel_energy", 0,
+                         round(r["energy_j"] / e_itc, 3)))
+        sp_d.append(t_itc / res["ditto"]["time_s"])
+        en_d.append(1 - res["ditto"]["energy_j"] / e_itc)
+        assert res["ditto"]["time_s"] < res["itc"]["time_s"], name
+        assert res["ditto"]["time_s"] < res["cambricon-d"]["time_s"], name
+    rows.append(("fig13/avg_ditto_speedup_x", 0, round(float(np.mean(sp_d)), 3)))
+    rows.append(("fig13/avg_ditto_energy_saving_pct", 0, round(100 * float(np.mean(en_d)), 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

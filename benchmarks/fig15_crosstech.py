@@ -1,0 +1,37 @@
+"""Fig. 15 analogue: cross-applying software techniques.
+
+Original Cambricon-D (full-bit attention, no dependency-aware bypass) vs
+Cambricon-D + Ditto software (attention diffs); paper: +1.16x from the
+Ditto techniques, yet still slower than Ditto hardware.
+"""
+import common
+from repro.sim import cycles, harness
+from repro.core.ditto import CAMBRICON_D
+
+
+def run():
+    rows = []
+    for name in common.MODELS:
+        bm = common.MODELS[name]
+        recs = cycles.scale_records(common.collect_cached(name)["records"],
+                                    t_mult=bm.t_mult, d_mult=bm.d_mult, seq_mult=bm.seq_mult)
+        # original: attention at full bit-width
+        orig = cycles.simulate(
+            recs, CAMBRICON_D, cycles.mode_fn_for("cambricon-d", recs, CAMBRICON_D, attention_diff=False)
+        )
+        # + Ditto software: attention difference processing
+        plus = cycles.simulate(
+            recs, CAMBRICON_D, cycles.mode_fn_for("cambricon-d", recs, CAMBRICON_D, attention_diff=True)
+        )
+        res = harness.run_designs(recs, designs=("ditto",))
+        rows.append((f"fig15/{name}/camd_plus_ditto_sw_speedup", 0,
+                     round(orig["time_s"] / plus["time_s"], 3)))
+        rows.append((f"fig15/{name}/ditto_vs_camd_orig", 0,
+                     round(orig["time_s"] / res["ditto"]["time_s"], 3)))
+        assert plus["time_s"] <= orig["time_s"], name
+        assert res["ditto"]["time_s"] < plus["time_s"], name  # hw still wins
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

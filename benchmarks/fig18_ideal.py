@@ -1,0 +1,28 @@
+"""Fig. 18 analogue: Ditto / Ditto+ vs ideal (100%-accurate Defo oracle).
+
+Paper: Ditto reaches 98.8% (Ditto+ 95.8%) of the ideal design.
+"""
+import common
+from repro.core.ditto import DITTO_HW
+from repro.sim import cycles
+
+
+def run():
+    rows = []
+    for name in common.MODELS:
+        bm = common.MODELS[name]
+        recs = cycles.scale_records(common.collect_cached(name)["records"],
+                                    t_mult=bm.t_mult, d_mult=bm.d_mult, seq_mult=bm.seq_mult)
+        for plus in (False, True):
+            tag = "ditto+" if plus else "ditto"
+            real = cycles.simulate(recs, DITTO_HW, cycles.mode_fn_for(tag, recs, DITTO_HW))
+            oracle = cycles.oracle_modes(recs, DITTO_HW, plus=plus)
+            ideal = cycles.simulate(recs, DITTO_HW, lambda r: oracle[(r["layer"], r["step"])])
+            frac = ideal["cycles"] / real["cycles"]
+            rows.append((f"fig18/{name}/{tag}_frac_of_ideal", 0, round(frac, 4)))
+            assert frac <= 1.0 + 1e-9 and frac > 0.7, (name, tag, frac)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

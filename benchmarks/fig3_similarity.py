@@ -1,0 +1,76 @@
+"""Fig. 3 analogue: temporal vs spatial cosine similarity of activations.
+
+Paper: temporal >= 0.947 per model (avg 0.983); spatial ~ 0.31. Also adds
+the AR-decode counterexample backing DESIGN.md §Arch-applicability: the
+technique's precondition does NOT hold for token-by-token LM decode.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common
+
+
+def _cos(a, b):
+    a, b = a.ravel(), b.ravel()
+    return float(np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+
+
+def run():
+    rows = []
+    for name in common.MODELS:
+        c = common.collect_cached(name)
+        eng = c["engine"]
+        # temporal: cosine of layer inputs between adjacent steps, from the
+        # engine's stored x_prev trail — recompute by re-running a spy pass
+        temporal, spatial = [], []
+        from repro.core.ditto import engine as eng_mod
+
+        captured = {}
+        orig = eng_mod.DittoEngine.linear
+
+        def spy(self, nm, x):
+            captured.setdefault(nm, []).append(np.asarray(x, dtype=np.float32))
+            return orig(self, nm, x)
+
+        eng_mod.DittoEngine.linear = spy
+        try:
+            common._CACHE.pop((name, ()), None)
+            c2 = common.collect(common.MODELS[name], steps=8)
+        finally:
+            eng_mod.DittoEngine.linear = orig
+        for nm, xs in captured.items():
+            for a, b in zip(xs[1:], xs[:-1]):
+                temporal.append(_cos(a, b))
+            x0 = xs[0].reshape(-1, xs[0].shape[-1])
+            for i in range(1, min(len(x0), 32)):
+                spatial.append(_cos(x0[i], x0[i - 1]))
+        t, s = float(np.mean(temporal)), float(np.mean(spatial))
+        rows.append((f"fig3/{name}/temporal_cos", 0, round(t, 4)))
+        rows.append((f"fig3/{name}/spatial_cos", 0, round(s, 4)))
+        assert t > s, (name, t, s)
+
+    # AR-decode counterexample (qwen3 smoke): consecutive decode-step
+    # hidden states are NOT similar -> Ditto inapplicable to LM decode
+    from repro import configs
+    from repro.models.lm import LM
+    from repro.nn import core as nncore
+
+    arch = configs.get("qwen3-0.6b").smoke()
+    model = LM(arch)
+    params, _ = nncore.split(model.init(jax.random.PRNGKey(0)))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, arch.vocab_size)
+    cache = model.init_cache(2, 16)
+    hs = []
+    for i in range(16):
+        lg, cache = model.decode_step(params, cache, pos=jnp.int32(i), tokens=tokens[:, i : i + 1])
+        hs.append(np.asarray(lg, dtype=np.float32))
+    dec_cos = float(np.mean([_cos(a, b) for a, b in zip(hs[1:], hs[:-1])]))
+    rows.append(("fig3/lm_decode/temporal_cos", 0, round(dec_cos, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

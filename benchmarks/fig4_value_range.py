@@ -1,0 +1,47 @@
+"""Fig. 4 analogue: value range of activations vs temporal differences.
+
+Paper: differences are on average 8.96x narrower (2.44x..25.02x).
+"""
+import numpy as np
+
+import common
+
+
+def run():
+    rows = []
+    ratios = []
+    for name in common.MODELS:
+        c = common.collect_cached(name)
+        from repro.core.ditto import engine as eng_mod
+
+        captured = {}
+        orig = eng_mod.DittoEngine.linear
+
+        def spy(self, nm, x):
+            captured.setdefault(nm, []).append(np.asarray(x, dtype=np.float32))
+            return orig(self, nm, x)
+
+        eng_mod.DittoEngine.linear = spy
+        try:
+            c2 = common.collect(common.MODELS[name], steps=8)
+        finally:
+            eng_mod.DittoEngine.linear = orig
+        act_range, diff_range = [], []
+        for nm, xs in captured.items():
+            for a, b in zip(xs[1:], xs[:-1]):
+                act_range.append(float(a.max() - a.min()))
+                d = a - b
+                diff_range.append(float(d.max() - d.min()))
+        ar, dr = float(np.mean(act_range)), float(np.mean(diff_range))
+        ratio = ar / max(dr, 1e-9)
+        ratios.append(ratio)
+        rows.append((f"fig4/{name}/act_range", 0, round(ar, 3)))
+        rows.append((f"fig4/{name}/diff_range", 0, round(dr, 3)))
+        rows.append((f"fig4/{name}/narrowing_x", 0, round(ratio, 2)))
+        assert ratio > 1.5, (name, ratio)
+    rows.append(("fig4/avg_narrowing_x", 0, round(float(np.mean(ratios)), 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

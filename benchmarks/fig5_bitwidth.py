@@ -1,0 +1,47 @@
+"""Fig. 5 analogue: bit-width requirement of activations vs spatial vs
+temporal differences (zero %, <=4-bit %).
+
+Paper: temporal zeros 44.48%, <=4-bit incl zero 96.01%; activations have
+26.12% fewer zeros; spatial in between.
+"""
+import numpy as np
+
+import common
+
+
+def _agg(records, key):
+    zs, ls = [], []
+    w = []
+    for r in records:
+        if r["step"] < 1 or key not in r:
+            continue
+        z, l, f = r[key]
+        zs.append(z)
+        ls.append(z + l)
+        w.append(r["macs"])
+    w = np.asarray(w)
+    return float(np.average(zs, weights=w)), float(np.average(ls, weights=w))
+
+
+def run():
+    rows = []
+    for name in common.MODELS:
+        recs = common.collect_cached(name)["records"]
+        za, la = _agg(recs, "cls_act")
+        zt, lt = _agg(recs, "cls_diff")
+        zs, ls = _agg(recs, "cls_spatial")
+        rows += [
+            (f"fig5/{name}/act_zero_pct", 0, round(100 * za, 2)),
+            (f"fig5/{name}/act_le4_pct", 0, round(100 * la, 2)),
+            (f"fig5/{name}/spatial_zero_pct", 0, round(100 * zs, 2)),
+            (f"fig5/{name}/spatial_le4_pct", 0, round(100 * ls, 2)),
+            (f"fig5/{name}/temporal_zero_pct", 0, round(100 * zt, 2)),
+            (f"fig5/{name}/temporal_le4_pct", 0, round(100 * lt, 2)),
+        ]
+        assert zt > za, (name, zt, za)  # temporal diffs have more zeros
+        assert lt > 0.5, (name, lt)  # majority representable <= 4 bits
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,62 @@
+"""Fig. 6 analogue: relative BOPs of temporal / spatial diff processing vs
+the quantized baseline, per model (6a) and per time step (6b).
+
+Paper: temporal 53.3% fewer BOPs on average; spatial 38.8% fewer.
+"""
+import numpy as np
+
+import common
+from repro.core.ditto import bops as bops_mod
+
+
+def _bops(recs, key):
+    tot, base = 0.0, 0.0
+    for r in recs:
+        if r["step"] < 1:
+            tot += bops_mod.bops_act(r["macs"])
+            base += bops_mod.bops_act(r["macs"])
+            continue
+        base += bops_mod.bops_act(r["macs"])
+        if key in r:
+            z, l, f = r[key]
+            tot += bops_mod.bops_mixed(r["macs"], z, l, f)
+        else:
+            tot += bops_mod.bops_act(r["macs"])
+    return tot / base
+
+
+def run():
+    rows = []
+    t_all, s_all = [], []
+    for name in common.MODELS:
+        recs = common.collect_cached(name)["records"]
+        rt = _bops(recs, "cls_diff")
+        rs = _bops(recs, "cls_spatial")
+        t_all.append(rt)
+        s_all.append(rs)
+        rows.append((f"fig6a/{name}/temporal_rel_bops", 0, round(rt, 3)))
+        rows.append((f"fig6a/{name}/spatial_rel_bops", 0, round(rs, 3)))
+        assert rt < 1.0 and rt < rs, (name, rt, rs)
+    rows.append(("fig6a/avg_temporal_reduction_pct", 0, round(100 * (1 - float(np.mean(t_all))), 1)))
+    rows.append(("fig6a/avg_spatial_reduction_pct", 0, round(100 * (1 - float(np.mean(s_all))), 1)))
+
+    # 6b: per-step relative BOPs for the SDM analogue
+    recs = common.collect_cached("sdm*")["records"]
+    steps = sorted({r["step"] for r in recs if r["step"] >= 1})
+    per_step = []
+    for s in steps:
+        srecs = [r for r in recs if r["step"] == s]
+        num = sum(
+            bops_mod.bops_mixed(r["macs"], *r["cls_diff"]) if "cls_diff" in r else bops_mod.bops_act(r["macs"])
+            for r in srecs
+        )
+        den = sum(bops_mod.bops_act(r["macs"]) for r in srecs)
+        per_step.append(num / den)
+    rows.append(("fig6b/sdm*/first_steps_rel_bops", 0, round(float(np.mean(per_step[:3])), 3)))
+    rows.append(("fig6b/sdm*/last_steps_rel_bops", 0, round(float(np.mean(per_step[-3:])), 3)))
+    rows.append(("fig6b/sdm*/all_steps_below_1", 0, int(all(p < 1.0 for p in per_step))))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

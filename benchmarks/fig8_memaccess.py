@@ -1,0 +1,36 @@
+"""Fig. 8 + Fig. 14 analogue: memory accesses of temporal difference
+processing, and how Defo reduces them.
+
+Paper: naive temporal diff processing = 2.75x the accesses of act
+processing; Cambricon-D 1.95x, Ditto 1.56x, Ditto+ 1.36x (all vs ITC).
+"""
+import numpy as np
+
+import common
+from repro.sim import cycles
+from repro.core.ditto import DITTO_HW
+
+
+def run():
+    rows = []
+    for name in common.MODELS:
+        bm = common.MODELS[name]
+        recs = cycles.scale_records(common.collect_cached(name)["records"],
+                                    t_mult=bm.t_mult, d_mult=bm.d_mult, seq_mult=bm.seq_mult)
+        act = sum(cycles._mem_bytes(r, "act") for r in recs)
+        naive = sum(cycles._mem_bytes(r, "diff" if r["step"] >= 1 and "cls_diff" in r else "act")
+                    for r in recs)
+        rows.append((f"fig8/{name}/naive_diff_rel_mem", 0, round(naive / act, 2)))
+        # hardware designs (fig 14)
+        from repro.sim import harness
+
+        res = harness.run_designs(recs, designs=("itc", "diffy", "cambricon-d", "ditto", "ditto+"))
+        base = res["itc"]["mem_bytes"]
+        for design in ("cambricon-d", "ditto", "ditto+"):
+            rows.append((f"fig14/{name}/{design}_rel_mem", 0, round(res[design]["mem_bytes"] / base, 2)))
+        assert res["ditto"]["mem_bytes"] <= naive  # Defo reduces the overhead
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

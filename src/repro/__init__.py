@@ -1,0 +1,2 @@
+"""repro: Ditto (temporal-value-similarity diffusion acceleration)
+reproduction + multi-pod JAX training/serving framework."""

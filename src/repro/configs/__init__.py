@@ -1,0 +1,14 @@
+from .base import SHAPES, ArchConfig, ShapeCell, cell_applicable, input_specs
+from .registry import ASSIGNED, REGISTRY, get, names
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "ShapeCell",
+    "cell_applicable",
+    "input_specs",
+    "ASSIGNED",
+    "REGISTRY",
+    "get",
+    "names",
+]

@@ -1,0 +1,8 @@
+# The paper's primary contribution lives here:
+#   core/diffusion.py — noise schedules + DDIM/PLMS samplers (the temporal
+#                       loop Ditto exploits)
+#   core/ditto/       — quantization, temporal/spatial difference engine,
+#                       Defo execution-flow optimization, BOPs/cycle models
+from . import diffusion, ditto
+
+__all__ = ["diffusion", "ditto"]

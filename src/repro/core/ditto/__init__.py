@@ -1,0 +1,22 @@
+from . import bops, classify, defo, quant
+from .dit_runner import DittoDiT, make_denoise_fn
+from .engine import DittoEngine, LayerMeta
+from .hwmodel import ALL_HW, CAMBRICON_D, DEFAULT_HW, DIFFY, DITTO_HW, ITC, HwModel
+
+__all__ = [
+    "bops",
+    "classify",
+    "defo",
+    "quant",
+    "DittoDiT",
+    "make_denoise_fn",
+    "DittoEngine",
+    "LayerMeta",
+    "ALL_HW",
+    "CAMBRICON_D",
+    "DEFAULT_HW",
+    "DIFFY",
+    "DITTO_HW",
+    "ITC",
+    "HwModel",
+]

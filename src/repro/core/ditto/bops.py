@@ -1,0 +1,36 @@
+"""Bit-Operations accounting (paper §III-B, refs [5],[50]).
+
+BOPs of one MAC = bits_activation * bits_weight. With A8W8 quantization a
+dense layer costs MACs * 64 BOPs. Difference processing pays per-element:
+zero -> 0, low (<=4 bit) -> 32, full -> 64. The paper's headline numbers —
+44.48% zeros, 96.01% <=4-bit, 53.3% BOPs reduction — are reproduced by
+benchmarks/fig5_bitwidth.py and fig6_bops.py with these formulas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+W_BITS = 8
+A_FULL = 8
+A_LOW = 4
+
+
+def bops_act(macs: float, q=None) -> float:
+    """Direct quantized execution: all MACs at full activation width."""
+    return float(macs) * A_FULL * W_BITS
+
+
+def bops_mixed(macs: float, zero: float, low: float, full: float) -> float:
+    """Difference execution with zero-skipping and 4-bit ops."""
+    return float(macs) * (low * A_LOW * W_BITS + full * A_FULL * W_BITS)
+
+
+def bops_elementwise(d: jnp.ndarray, macs_per_element: float) -> float:
+    """Exact BOPs from a difference tensor (no class rounding)."""
+    from .classify import LOW_BIT_MAX
+
+    a = jnp.abs(d.astype(jnp.int32))
+    low = (a > 0) & (a <= LOW_BIT_MAX)
+    full = a > LOW_BIT_MAX
+    bops = (jnp.sum(low) * A_LOW + jnp.sum(full) * A_FULL) * W_BITS
+    return float(bops) * macs_per_element

@@ -1,0 +1,70 @@
+"""Bit-width classification of (difference) tensors — paper §III-B / §V-B.
+
+Element classes over an int domain tensor:
+    zero : d == 0                      (skipped entirely)
+    low  : |d| <= 7  (signed 4-bit)    (single 4-bit multiplier)
+    full : otherwise                   (two multipliers + shift)
+
+``bitwidth_requirement`` is the paper's "minimum number of bits required to
+represent the value" (sign-magnitude, +1 sign bit, 0 for zero).
+
+Tile classification is the TPU adaptation (DESIGN.md §3): a (tq, tk) tile
+is zero iff all its elements are zero, low iff max|d| <= 7.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LOW_BIT_MAX = 7  # signed 4-bit
+
+
+def element_classes(d: jnp.ndarray) -> dict:
+    """Fractions of zero / low(<=4b, excl zero) / full elements."""
+    a = jnp.abs(d.astype(jnp.int32))
+    zero = a == 0
+    low = (a > 0) & (a <= LOW_BIT_MAX)
+    full = a > LOW_BIT_MAX
+    n = d.size
+    return {
+        "zero": jnp.sum(zero) / n,
+        "low": jnp.sum(low) / n,
+        "full": jnp.sum(full) / n,
+        "zero_mask": zero,
+        "low_mask": low,
+        "full_mask": full,
+    }
+
+
+def bitwidth_requirement(d: jnp.ndarray) -> jnp.ndarray:
+    """Per-element minimum bits (0 for zero values, else ceil(log2)+sign)."""
+    a = jnp.abs(d.astype(jnp.int32))
+    bits = jnp.ceil(jnp.log2(jnp.maximum(a, 1) + 1)).astype(jnp.int32) + 1
+    return jnp.where(a == 0, 0, bits)
+
+
+def tile_classes(d: jnp.ndarray, tile: tuple[int, int] = (128, 128)) -> dict:
+    """Per-tile class over the last two dims (pad-free: dims must divide)."""
+    tq, tk = tile
+    m, k = d.shape[-2], d.shape[-1]
+    lead = d.shape[:-2]
+    dd = d.reshape(lead + (m // tq, tq, k // tk, tk))
+    amax = jnp.max(jnp.abs(dd.astype(jnp.int32)), axis=(-3, -1))  # (..., m/tq, k/tk)
+    return {
+        "zero": amax == 0,
+        "low": (amax > 0) & (amax <= LOW_BIT_MAX),
+        "full": amax > LOW_BIT_MAX,
+        "amax": amax,
+    }
+
+
+def spatial_diff(q: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    """Diffy-style spatial differences along ``axis`` (row dimension): the
+    first row keeps its full value, later rows store deltas to the previous
+    row. Exact in the int domain."""
+    q32 = q.astype(jnp.int32)
+    shifted = jnp.roll(q32, 1, axis=axis)
+    idx = [slice(None)] * q.ndim
+    idx[axis] = slice(0, 1)
+    first = q32[tuple(idx)]
+    d = q32 - shifted
+    return jnp.concatenate([first, jnp.take(d, jnp.arange(1, q.shape[axis]), axis=axis)], axis=axis)

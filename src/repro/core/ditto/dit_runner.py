@@ -1,0 +1,117 @@
+"""DiT denoiser executed through the DittoEngine (quantized serving path).
+
+Mirrors repro.nn.dit.apply with every linear op routed through the engine
+(per-block python loop — each layer's execution mode may differ, which is
+the point of Defo). Weights are registered once from the same param tree
+used for training; fp32-mode equivalence against nn.dit.apply is tested in
+tests/test_ditto_engine.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...nn import core as nncore
+from ...nn import dit as dit_mod
+from . import defo
+from .engine import DittoEngine, LayerMeta
+
+
+def _v(tree, *path):
+    cur = tree
+    for p in path:
+        cur = cur[p]
+    return np.asarray(nncore.val(cur))
+
+
+class DittoDiT:
+    def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine):
+        self.cfg = cfg
+        self.engine = engine
+        self.params = params
+        metas = defo.analyze(defo.dit_graph(cfg.n_layers))
+        blocks = params["blocks"]
+
+        def blk(i, *path):
+            cur = blocks
+            for p in path:
+                cur = cur[p]
+            return np.asarray(nncore.val(cur))[i]
+
+        for i in range(cfg.n_layers):
+            b = f"blk{i}"
+            engine.register_linear(metas[f"{b}.mod"], blk(i, "mod", "w"), blk(i, "mod", "b"))
+            for nm, pth in (("wq", ("attn", "wq")), ("wk", ("attn", "wk")), ("wv", ("attn", "wv")),
+                            ("wo", ("attn", "wo"))):
+                w = blk(i, *pth, "w")
+                bias = blk(i, *pth, "b")
+                engine.register_linear(metas[f"{b}.{nm}"], w, bias)
+            engine.register_attention(metas[f"{b}.qk"])
+            engine.register_attention(metas[f"{b}.pv"])
+            engine.register_linear(metas[f"{b}.wi"], blk(i, "mlp", "wi", "w"), blk(i, "mlp", "wi", "b"))
+            engine.register_linear(metas[f"{b}.wd"], blk(i, "mlp", "wo", "w"), blk(i, "mlp", "wo", "b"))
+        engine.register_linear(metas["final.out"], _v(params, "final_out", "w"), _v(params, "final_out", "b"))
+
+    # ---------------------------------------------------------------- apply
+    def __call__(self, latents, t, labels=None):
+        cfg = self.cfg
+        eng = self.engine
+        params = self.params
+        b, hh, ww, ch = latents.shape
+        pp = cfg.patch
+        x = latents.reshape(b, hh // pp, pp, ww // pp, pp, ch)
+        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, cfg.n_tokens, cfg.patch_dim)
+        # patch embed + conditioning stay in fp32 (VPU-side ops)
+        x = nncore.dense(params["patch_embed"], x) + nncore.val(params["pos_embed"])[None]
+        c = dit_mod.timestep_embedding(t, 256)
+        c = nncore.dense(params["t_mlp2"], jax.nn.silu(nncore.dense(params["t_mlp1"], c)))
+        if labels is not None and "label_embed" in params:
+            c = c + nncore.val(params["label_embed"])[labels]
+        c_act = jax.nn.silu(c)
+
+        nh = cfg.n_heads
+        hd = cfg.head_dim
+        scale = 1.0 / math.sqrt(hd)
+        for i in range(cfg.n_layers):
+            bk = f"blk{i}"
+            mod = eng.linear(f"{bk}.mod", c_act)
+            sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
+            h = dit_mod._modulate(dit_mod._ln(x), sh_a, sc_a)
+            q = eng.linear(f"{bk}.wq", h).reshape(b, cfg.n_tokens, nh, hd)
+            k = eng.linear(f"{bk}.wk", h).reshape(b, cfg.n_tokens, nh, hd)
+            v = eng.linear(f"{bk}.wv", h).reshape(b, cfg.n_tokens, nh, hd)
+            qf = q.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
+            kf = k.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
+            vf = v.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
+            scores = eng.attention_matmul(f"{bk}.qk", qf, kf) * scale
+            probs = jax.nn.softmax(scores, axis=-1)
+            av = eng.attention_matmul(f"{bk}.pv", probs, vf.swapaxes(-1, -2))
+            av = av.reshape(b, nh, cfg.n_tokens, hd).transpose(0, 2, 1, 3).reshape(b, cfg.n_tokens, nh * hd)
+            a = eng.linear(f"{bk}.wo", av)
+            x = x + g_a[:, None, :] * a
+            h = dit_mod._modulate(dit_mod._ln(x), sh_m, sc_m)
+            hmid = jax.nn.gelu(eng.linear(f"{bk}.wi", h))
+            x = x + g_m[:, None, :] * eng.linear(f"{bk}.wd", hmid)
+
+        modf = nncore.dense(params["final_mod"], c_act)
+        shift, scl = jnp.split(modf, 2, axis=-1)
+        x = dit_mod._modulate(dit_mod._ln(x), shift, scl)
+        x = eng.linear("final.out", x)
+        x = x.reshape(b, hh // pp, ww // pp, pp, pp, ch).transpose(0, 1, 3, 2, 4, 5)
+        return x.reshape(b, hh, ww, ch)
+
+
+def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine):
+    """denoise_fn(x, t, labels) for repro.core.diffusion samplers; calls
+    engine.end_step() after each sampler step."""
+    runner = DittoDiT(params, cfg, engine)
+
+    def fn(x, t, labels):
+        out = runner(x, t, labels)
+        engine.end_step()
+        return out
+
+    return fn

@@ -1,0 +1,288 @@
+"""The Ditto temporal-difference processing engine (paper §IV).
+
+The engine intercepts every linear operation of a denoiser during the
+reverse-diffusion loop and executes it in one of three modes:
+
+  act     : direct quantized GEMM  y = W_q · q_t                (step 1, and
+            layers Defo decides to keep)
+  diff    : temporal differences   y_t = y_{t+1} + W_q · Δq     (steps >= 2)
+  spatial : Diffy-style row deltas (Defo+ for act-mode layers)
+
+All difference math is exact in the integer domain (int16 deltas, int32
+accumulation), so `diff` is bit-identical to `act` under a shared scale —
+property-tested. Per layer and per step the engine records zero/low/full
+fractions, BOPs, simulated memory traffic and cycle estimates; Defo uses
+the step-1 (act) and step-2 (diff) cycles to fix each layer's mode for the
+remaining steps (§IV-B), with 'defo+' additionally allowing spatial mode.
+
+Layers declare ``boundary_in/out`` metadata from the static graph analysis
+(defo.py): when False, the diff-domain passes through (difference
+calculation / summation bypass), removing the extra x_prev/y_prev traffic
+the paper measures in Fig. 8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bops as bops_mod
+from . import classify, quant
+from .hwmodel import HwModel, DEFAULT_HW
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    name: str
+    kind: str = "dense"  # dense | attn_qk | attn_pv
+    boundary_in: bool = True  # input produced by a non-linear op
+    boundary_out: bool = True  # output consumed by a non-linear op
+
+
+@dataclasses.dataclass
+class _LayerState:
+    w: quant.QTensor | None = None
+    bias: jax.Array | None = None
+    x_scale: jax.Array | None = None
+    x_prev: jax.Array | None = None  # int8 of previous step
+    y_prev: jax.Array | None = None  # int32 accumulation of previous step
+    mode: str = "act"
+    # attention state
+    a_prev: jax.Array | None = None  # lhs int8 of previous step
+    b_prev: jax.Array | None = None  # rhs int8 of previous step
+    a_scale: jax.Array | None = None
+    b_scale: jax.Array | None = None
+
+
+class DittoEngine:
+    """policy: 'act' | 'diff' | 'spatial' | 'defo' | 'defo+'."""
+
+    def __init__(self, policy: str = "defo", hw: HwModel = DEFAULT_HW, collect_oracle: bool = False):
+        assert policy in ("act", "diff", "spatial", "defo", "defo+")
+        self.policy = policy
+        self.hw = hw
+        self.collect_oracle = collect_oracle
+        self.layers: dict[str, _LayerState] = {}
+        self.meta: dict[str, LayerMeta] = {}
+        self.step_idx = 0
+        self.records: list[dict] = []  # one per (layer, step)
+        self._decided = False
+
+    # ------------------------------------------------------------- weights
+    def register_linear(self, meta: LayerMeta, w: jax.Array, bias: jax.Array | None = None):
+        st = _LayerState(w=quant.quantize_weight(np.asarray(w)), bias=bias)
+        self.layers[meta.name] = st
+        self.meta[meta.name] = meta
+
+    def register_attention(self, meta: LayerMeta):
+        self.layers[meta.name] = _LayerState()
+        self.meta[meta.name] = meta
+
+    # --------------------------------------------------------------- steps
+    def begin_sample(self):
+        self.step_idx = 0
+        self._decided = False
+        self.records = []
+        for st in self.layers.values():
+            st.x_prev = st.y_prev = None
+            st.a_prev = st.b_prev = None
+            st.x_scale = st.a_scale = st.b_scale = None
+            st.mode = "act"
+
+    def end_step(self):
+        self.step_idx += 1
+        if self.step_idx == 2 and self.policy in ("defo", "defo+") and not self._decided:
+            self._defo_decide()
+            self._decided = True
+
+    def _defo_decide(self):
+        """Fix per-layer modes from step-1 (act) vs step-2 (diff) cycles."""
+        by_layer: dict[str, dict[int, dict]] = {}
+        for r in self.records:
+            by_layer.setdefault(r["layer"], {})[r["step"]] = r
+        for name, steps in by_layer.items():
+            if 0 not in steps or 1 not in steps:
+                continue
+            c_act = steps[0]["cycles"]
+            c_diff = steps[1]["cycles"]
+            st = self.layers[name]
+            if self.policy == "defo+":
+                c_spatial = steps[0].get("cycles_spatial", np.inf)
+                best = min((c_diff, "diff"), (c_act, "act"), (c_spatial, "spatial"))
+                st.mode = best[1]
+            else:
+                st.mode = "diff" if c_diff < c_act else "act"
+
+    # -------------------------------------------------------------- linear
+    def linear(self, name: str, x: jax.Array) -> jax.Array:
+        """x: (..., K) fp32 -> (..., N) fp32 through the quantized path."""
+        st = self.layers[name]
+        meta = self.meta[name]
+        x2 = x.reshape(-1, x.shape[-1])
+        t, k = x2.shape
+        n = st.w.q.shape[1]
+
+        if st.x_scale is None:  # first-step calibration, held afterwards
+            st.x_scale = quant.compute_scale(x2)
+        q_t = quant.quantize(x2, st.x_scale)
+
+        mode = self._mode_for_step(st)
+        rec: dict[str, Any] = {"layer": name, "step": self.step_idx, "mode": mode, "kind": meta.kind,
+                               "macs": t * k * n}
+
+        if mode == "act" or st.x_prev is None:
+            y_i32 = quant.int_matmul(q_t, st.w.q)
+            d_for_stats = None
+            mode = "act"
+        elif mode == "spatial":
+            d_sp = classify.spatial_diff(q_t, axis=0)  # exact reconstructable
+            # y rows: y[0] = W q[0]; y[i] = y[i-1] + W d[i] — mathematically
+            # W·q via prefix sums; numerically identical to act:
+            y_i32 = quant.int_matmul(q_t, st.w.q)
+            d_for_stats = d_sp[1:]  # first row stays full-precision
+        else:  # temporal diff
+            d = q_t.astype(jnp.int16) - st.x_prev.astype(jnp.int16)
+            y_i32 = st.y_prev + quant.int_matmul(d, st.w.q)
+            d_for_stats = d
+
+        # ---- statistics / cost model ----
+        self._account(rec, t, k, n, q_t, d_for_stats, meta)
+        self.records.append(rec)
+
+        st.x_prev = q_t
+        st.y_prev = y_i32
+        y = y_i32.astype(jnp.float32) * st.x_scale * st.w.scale[None, :]
+        if st.bias is not None:
+            y = y + st.bias
+        return y.reshape(x.shape[:-1] + (n,))
+
+    # ----------------------------------------------------------- attention
+    def attention_matmul(self, name: str, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Two-operand matmul a @ b^T where BOTH change across steps
+        (Q·K^T and P·V). Paper identity:
+            A_t B_t^T = A_{t+1}B_{t+1}^T + A_t ΔB^T + ΔA B_{t+1}^T
+        a: (..., M, D), b: (..., N, D) -> (..., M, N). Quantized per step
+        with held scales; the two sub-operations run on Δ operands.
+        """
+        st = self.layers[name]
+        meta = self.meta[name]
+        lead = a.shape[:-2]
+        m, d_ = a.shape[-2], a.shape[-1]
+        n = b.shape[-2]
+        a2 = a.reshape(-1, m, d_)
+        b2 = b.reshape(-1, n, d_)
+
+        if st.a_scale is None:
+            st.a_scale = quant.compute_scale(a2)
+            st.b_scale = quant.compute_scale(b2)
+        qa = quant.quantize(a2, st.a_scale)
+        qb = quant.quantize(b2, st.b_scale)
+
+        mode = self._mode_for_step(st)
+        rec: dict[str, Any] = {"layer": name, "step": self.step_idx, "mode": mode, "kind": meta.kind,
+                               "macs": a2.shape[0] * m * n * d_}
+
+        def bmm(x_, y_):
+            return jnp.einsum("bmd,bnd->bmn", x_.astype(jnp.int32), y_.astype(jnp.int32))
+
+        if mode in ("act", "spatial") or st.a_prev is None:
+            y_i32 = bmm(qa, qb)
+            d_for_stats = None
+            mode = "act"
+        else:
+            da = qa.astype(jnp.int16) - st.a_prev.astype(jnp.int16)
+            db = qb.astype(jnp.int16) - st.b_prev.astype(jnp.int16)
+            #   A_t ΔB^T + ΔA B_{t+1}^T  (A_t treated as weight, B_prev as weight)
+            y_i32 = st.y_prev + bmm(qa, db.astype(jnp.int32)) + bmm(da.astype(jnp.int32), st.b_prev)
+            d_for_stats = jnp.concatenate([da.reshape(-1), db.reshape(-1)])
+
+        self._account(rec, a2.shape[0] * m, d_, n, jnp.concatenate([qa.reshape(-1), qb.reshape(-1)]),
+                      d_for_stats, meta, attention=True)
+        self.records.append(rec)
+
+        st.a_prev, st.b_prev, st.y_prev = qa, qb, y_i32
+        y = y_i32.astype(jnp.float32) * st.a_scale * st.b_scale
+        return y.reshape(lead + (m, n))
+
+    # ------------------------------------------------------------ internals
+    def _mode_for_step(self, st: _LayerState) -> str:
+        if self.step_idx == 0:
+            return "spatial" if self.policy in ("spatial", "defo+") else "act"
+        if self.policy == "act":
+            return "act"
+        if self.policy == "diff":
+            return "diff"
+        if self.policy == "spatial":
+            return "spatial"
+        if self.step_idx == 1:  # defo probes diff on step 2
+            return "diff"
+        return st.mode
+
+    def _account(self, rec, t, k, n, q_t, d, meta, *, attention=False):
+        hw = self.hw
+        macs = rec["macs"]
+        rec.update(t=t, k=k, n=n, attention=attention,
+                   boundary_in=meta.boundary_in, boundary_out=meta.boundary_out)
+        # --- class fractions, per candidate mode (the simulator re-prices
+        # each hardware design from these; see repro.sim) ---
+        q_cls = classify.element_classes(q_t)
+        rec["cls_act"] = (float(q_cls["zero"]), 0.0, float(q_cls["low"] + q_cls["full"]))
+        if d is not None:
+            cls = classify.element_classes(d)
+            zero, low, full = float(cls["zero"]), float(cls["low"]), float(cls["full"])
+            rec["cls_diff"] = (zero, low, full)
+        else:
+            zero, low, full = rec["cls_act"]
+        rec.update(zero=zero, low=low, full=full)
+        # --- BOPs ---
+        rec["bops_act"] = bops_mod.bops_act(macs, q_t)
+        rec["bops"] = bops_mod.bops_mixed(macs, zero, low, full) if d is not None else rec["bops_act"]
+        # --- memory traffic (bytes; mirrors repro.sim.cycles._mem_split) ---
+        w_bytes = k * n if not attention else 0  # weights stream once
+        act_bytes = t * k + t * n  # read x, write y (int8)
+        mem = w_bytes + act_bytes
+        if rec["mode"] == "diff":
+            extra = 4 * t * n  # y_prev read + y_t write (16-bit store)
+            if meta.boundary_in:
+                extra += 2 * t * k  # x_prev read + x_t write
+            mem += extra
+        rec["mem_bytes"] = mem
+        # --- cycles (Ditto hardware: adder-tree PEs, 4-bit multipliers) ---
+        eff_macs = macs * (low * 1.0 + full * 2.0) if d is not None else macs * 2.0
+        compute_cycles = eff_macs / (hw.n_pe * hw.mults_per_pe)
+        mem_cycles = mem / hw.bytes_per_cycle
+        rec["cycles"] = max(compute_cycles, mem_cycles) + min(compute_cycles, mem_cycles) * hw.overlap_slack
+        rec["compute_cycles"] = compute_cycles
+        rec["mem_cycles"] = mem_cycles
+        # spatial-mode counterfactual for Defo+ / the simulator
+        if (self.step_idx == 0 and self.policy in ("defo+",)) or self.collect_oracle:
+            q2 = q_t.reshape(t, k) if not attention else None
+            if q2 is not None and t > 1:
+                ds = classify.spatial_diff(q2, axis=0)[1:]
+                cs = classify.element_classes(ds)
+                z2, l2, f2 = float(cs["zero"]), float(cs["low"]), float(cs["full"])
+                # the first row stays full precision
+                w0 = 1.0 / t
+                rec["cls_spatial"] = (z2 * (1 - w0), l2 * (1 - w0), f2 * (1 - w0) + w0)
+                eff2 = macs * ((1 - w0) * (l2 * 1.0 + f2 * 2.0) + w0 * 2.0)
+                cc2 = eff2 / (hw.n_pe * hw.mults_per_pe)
+                rec["cycles_spatial"] = max(cc2, mem_cycles) + min(cc2, mem_cycles) * hw.overlap_slack
+                rec["bops_spatial"] = bops_mod.bops_mixed(macs, *rec["cls_spatial"])
+
+    # -------------------------------------------------------------- summary
+    def summary(self) -> dict:
+        import collections
+
+        total = collections.defaultdict(float)
+        for r in self.records:
+            total["macs"] += r["macs"]
+            total["bops"] += r["bops"]
+            total["bops_act"] += r["bops_act"]
+            total["mem_bytes"] += r["mem_bytes"]
+            total["cycles"] += r["cycles"]
+        steps = max((r["step"] for r in self.records), default=0) + 1
+        modes = {name: st.mode for name, st in self.layers.items()}
+        return {"steps": steps, **dict(total), "modes": modes}

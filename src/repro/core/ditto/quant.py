@@ -1,0 +1,61 @@
+"""Symmetric INT8 quantization for the Ditto pipeline.
+
+The paper's analyses use "simple dynamic quantization with 8-bit activation
+and weight" (§III-B). Ditto's difference math requires that q-values of
+adjacent steps be comparable, i.e. share a scale: activations are
+calibrated per layer on the first denoising step and the scale is then
+HELD for the remaining steps (temporal differences Δq = q_t - q_{t+1} are
+exact int16 under a shared scale — the property tests rely on this).
+Weights are quantized per output channel once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class QTensor:
+    q: jax.Array  # int8
+    scale: jax.Array  # f32 scalar (per-tensor) or (N,) per-channel
+
+    def dequant(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+jax.tree_util.register_pytree_node(
+    QTensor, lambda t: ((t.q, t.scale), None), lambda _, c: QTensor(*c)
+)
+
+
+def compute_scale(x: jax.Array, *, axis=None) -> jax.Array:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def quantize_tensor(x: jax.Array) -> QTensor:
+    s = compute_scale(x)
+    return QTensor(quantize(x, s), s)
+
+
+def quantize_weight(w: jax.Array) -> QTensor:
+    """Per-output-channel symmetric int8. w: (K, N) -> scale (N,)."""
+    s = compute_scale(w, axis=0)  # (1, N)
+    return QTensor(quantize(w, s), s.reshape(-1))
+
+
+def int_matmul(a_int: jax.Array, b_int: jax.Array) -> jax.Array:
+    """Exact integer matmul with int32 accumulation."""
+    return jax.lax.dot_general(
+        a_int.astype(jnp.int32),
+        b_int.astype(jnp.int32),
+        (((a_int.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .diff_encode import diff_encode
+from .ditto_diff_matmul import ditto_diff_matmul
+from .int8_matmul import int8_matmul
+
+__all__ = ["ops", "ref", "diff_encode", "ditto_diff_matmul", "int8_matmul"]

@@ -1,0 +1,56 @@
+"""Encoding-Unit kernel: temporal-difference classification per tile.
+
+TPU adaptation of the paper's Encoding Unit (§V-B): instead of
+element-granular zero/low/full classification + reorder queues (an ASIC
+datapath the MXU cannot express), one pass over (x_t, x_prev) produces a
+per-(bm, bk)-tile class:
+
+    0 = zero tile (max|Δ| == 0)   -> the matmul kernel skips it entirely
+    1 = low  tile (max|Δ| <= 7)   -> 4-bit-eligible (accounting / int4 HW)
+    2 = full tile                 -> full 8-bit path
+
+The Δ itself is NOT written back to HBM: the consumer kernel re-derives it
+from the same int8 operands in VMEM (subtract-on-the-fly, exactly like the
+Encoding Unit feeding the Compute Unit through the pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOW_BIT_MAX = 7
+
+
+def _kernel(xt_ref, xp_ref, cls_ref):
+    d = xt_ref[...].astype(jnp.int32) - xp_ref[...].astype(jnp.int32)
+    amax = jnp.max(jnp.abs(d))
+    cls_ref[0, 0] = jnp.where(amax == 0, 0, jnp.where(amax <= LOW_BIT_MAX, 1, 2)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def diff_encode(
+    x_t: jax.Array,
+    x_prev: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """x_*: (M, K) int8 -> tile classes (M/bm, K/bk) int32."""
+    m, k = x_t.shape
+    assert m % bm == 0 and k % bk == 0, (x_t.shape, bm, bk)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m // bm, k // bk), jnp.int32),
+        interpret=interpret,
+    )(x_t, x_prev)

@@ -1,0 +1,87 @@
+"""Ditto Compute-Unit kernel: tile-skipping temporal-difference matmul.
+
+    y_t = y_prev + (x_t - x_prev) @ W        (all-int32 exact)
+
+TPU adaptation of the paper's zero-skipping adder-tree PE (DESIGN.md §3):
+the grid runs over (M/bm, N/bn, K/bk); for each (i, kk) the per-tile class
+from ``diff_encode`` gates the MXU contribution with ``@pl.when`` — a
+zero-class tile issues NO dot (its Δ is all-zero, so skipping is exact).
+Low-class tiles are int8 on the MXU (no int4 path on v5e); they are gated
+separately only for accounting, so an int4-capable backend can split the
+predicate. The Δ is recomputed in VMEM from the int8 operands
+(subtract-on-the-fly), so no Δ tensor ever lands in HBM.
+
+``classes`` rides the scalar-prefetch slot (PrefetchScalarGridSpec) so a
+production TPU lowering can in principle skip the HBM->VMEM copies of
+skipped tiles too; in interpret mode it is a plain operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(cls_ref, xt_ref, xp_ref, w_ref, yp_ref, o_ref, acc_ref, *, n_k: int):
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = yp_ref[...]
+
+    tile_cls = cls_ref[i, kk]
+
+    @pl.when(tile_cls > 0)
+    def _accum():
+        d = xt_ref[...].astype(jnp.int32) - xp_ref[...].astype(jnp.int32)
+        acc_ref[...] += jax.lax.dot(
+            d, w_ref[...].astype(jnp.int32), preferred_element_type=jnp.int32
+        )
+
+    @pl.when(kk == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ditto_diff_matmul(
+    x_t: jax.Array,
+    x_prev: jax.Array,
+    w_q: jax.Array,
+    y_prev: jax.Array,
+    classes: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """x_*: (M,K) int8; w_q: (K,N) int8; y_prev: (M,N) int32;
+    classes: (M/bm, K/bk) int32 from diff_encode. Returns y_t int32."""
+    m, k = x_t.shape
+    k2, n = w_q.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert classes.shape == (m // bm, k // bk), (classes.shape, (m // bm, k // bk))
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, cls: (i, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk, cls: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, cls: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk, cls: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, cls: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(classes, x_t, x_prev, w_q, y_prev)

@@ -1,0 +1,92 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` auto-detects the backend: real TPU lowers natively; anywhere
+else the kernel body executes in interpret mode (bit-identical math, used
+for all CPU validation in this repo).
+
+The high-level entry is :func:`ditto_linear_step`: quantized temporal-
+difference linear layer = diff_encode -> ditto_diff_matmul (+ scales), plus
+:func:`attention_delta` composing the paper's two-sub-op attention identity
+from the same diff kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .diff_encode import diff_encode
+from .ditto_diff_matmul import ditto_diff_matmul
+from .int8_matmul import int8_matmul
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(a, bm, bk, fill=0):
+    m, k = a.shape
+    pm, pk = (-m) % bm, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)), constant_values=fill)
+    return a
+
+
+def quantized_matmul(x_q, w_q, x_scale, w_scale, *, bm=128, bn=128, bk=128, interpret=None):
+    """int8 x int8 -> fp32 with scales (baseline act-mode path)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    xp = _pad2(x_q, bm, bk)
+    wp = _pad2(w_q, bk, bn)
+    y = int8_matmul(xp, wp, bm=bm, bn=bn, bk=bk, interpret=interpret)[:m, :n]
+    return y.astype(jnp.float32) * x_scale * w_scale[None, :]
+
+
+def encode_classes(x_t_q, x_prev_q, *, bm=128, bk=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    xt = _pad2(x_t_q, bm, bk)
+    xp = _pad2(x_prev_q, bm, bk)
+    return diff_encode(xt, xp, bm=bm, bk=bk, interpret=interpret)
+
+
+def ditto_linear_step(
+    x_t_q, x_prev_q, w_q, y_prev_i32, *, bm=128, bn=128, bk=128, interpret=None
+):
+    """One temporal-difference linear step, tile-skipped.
+
+    Returns (y_t_i32 (M,N), classes (M/bm, K/bk)) — exact int32, equal to
+    y_prev + (x_t - x_prev) @ W regardless of how many tiles were skipped.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = x_t_q.shape
+    n = w_q.shape[1]
+    xt = _pad2(x_t_q, bm, bk)
+    xp = _pad2(x_prev_q, bm, bk)
+    wp = _pad2(w_q, bk, bn)
+    yp = _pad2(y_prev_i32, bm, bn)
+    classes = diff_encode(xt, xp, bm=bm, bk=bk, interpret=interpret)
+    y = ditto_diff_matmul(xt, xp, wp, yp, classes, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n], classes
+
+
+def attention_delta(q_t, q_prev, k_t, k_prev, s_prev_i32, *, interpret=None, **blk):
+    """Paper §IV-A attention identity via two diff-matmuls:
+
+        S_t = S_prev + Q_t ΔK^T + ΔQ K_prev^T
+
+    q_*: (M, D) int8; k_*: (N, D) int8; s_prev: (M, N) int32. Exact.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    # Q_t ΔK^T: weight = ΔK^T derived on the fly is not expressible as a
+    # static weight; reuse the diff kernel with roles swapped:
+    #   Q_t ΔK^T  = (x_t - x_prev) @ W with x = K (rows), W = Q_t^T, then T
+    #   ΔQ K_prev = (q_t - q_prev) @ K_prev^T
+    y1, _ = ditto_linear_step(k_t, k_prev, q_t.T,
+                              jnp.zeros((k_t.shape[0], q_t.shape[0]), jnp.int32),
+                              interpret=interpret, **blk)
+    y2, cls = ditto_linear_step(q_t, q_prev, k_prev.T,
+                                jnp.zeros((q_t.shape[0], k_prev.shape[0]), jnp.int32),
+                                interpret=interpret, **blk)
+    return s_prev_i32 + y1.T + y2, cls

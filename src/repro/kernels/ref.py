@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOW_BIT_MAX = 7
+
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """(M,K) int8 @ (K,N) int8 -> (M,N) int32."""
+    return jax.lax.dot(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def diff_encode_ref(x_t: jax.Array, x_prev: jax.Array, tile: tuple[int, int]) -> jax.Array:
+    """Per-tile class of Δ = x_t - x_prev: 0 zero / 1 low(<=4b) / 2 full.
+
+    x_*: (M, K) int8; returns (M/tm, K/tk) int32.
+    """
+    tm, tk = tile
+    m, k = x_t.shape
+    d = x_t.astype(jnp.int32) - x_prev.astype(jnp.int32)
+    dd = jnp.abs(d).reshape(m // tm, tm, k // tk, tk)
+    amax = dd.max(axis=(1, 3))
+    return jnp.where(amax == 0, 0, jnp.where(amax <= LOW_BIT_MAX, 1, 2)).astype(jnp.int32)
+
+
+def ditto_diff_matmul_ref(
+    x_t: jax.Array, x_prev: jax.Array, w_q: jax.Array, y_prev: jax.Array
+) -> jax.Array:
+    """y_t = y_prev + (x_t - x_prev) @ W  — exact int32.
+
+    x_*: (M,K) int8; w_q: (K,N) int8; y_prev: (M,N) int32.
+    """
+    d = x_t.astype(jnp.int32) - x_prev.astype(jnp.int32)
+    return y_prev + jax.lax.dot(d, w_q.astype(jnp.int32), preferred_element_type=jnp.int32)
+
+
+def masked_diff_matmul_ref(x_t, x_prev, w_q, y_prev, tile_class, tile):
+    """Oracle for the tile-skipping kernel: zero-class tiles contribute
+    nothing BY CONSTRUCTION (their Δ is all-zero), so the result equals
+    ditto_diff_matmul_ref — this oracle verifies the skip changes nothing."""
+    del tile_class, tile
+    return ditto_diff_matmul_ref(x_t, x_prev, w_q, y_prev)

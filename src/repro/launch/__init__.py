@@ -1,0 +1,5 @@
+# NB: do not import dryrun here — it sets XLA_FLAGS at import time and must
+# only ever be imported as the main module of its own process.
+from . import mesh, roofline, steps
+
+__all__ = ["mesh", "roofline", "steps"]

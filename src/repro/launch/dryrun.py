@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 256/512-chip production
+# meshes out of host placeholder devices; smoke tests/benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell and record memory/cost/collective analyses for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+# (no `from __future__ import annotations` — the XLA_FLAGS lines must stay
+# the very first statements of this module.)
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.base import SHAPES, ArchConfig, ShapeCell, cell_applicable, input_specs
+from ..distributed import sharding as sh
+from ..models.lm import LM
+from ..optim import AdamW
+from . import hlo_analysis, roofline, steps as steps_mod
+from .mesh import make_production_mesh
+
+
+# --------------------------------------------------------------------------
+# sharding trees for state / batch / cache
+# --------------------------------------------------------------------------
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def state_shardings(arch: ArchConfig, mesh, rules, opt: AdamW):
+    axes, shapes = steps_mod.param_axes(arch)
+    is_axes = lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    p_sh = jax.tree.map(
+        lambda ax, sds: NamedSharding(mesh, sh.spec_for(ax, sds.shape, rules, mesh)),
+        axes,
+        shapes,
+        is_leaf=is_axes,
+    )
+    # optimizer moments are flat lists in params-leaf order; v leaves may be
+    # factored {"row","col"} dicts whose specs drop the corresponding dim
+    p_sh_leaves = jax.tree.leaves(p_sh)
+    shape_leaves = jax.tree.leaves(shapes)
+    m_sh = list(p_sh_leaves)
+    v_sh = []
+    for psh, sds in zip(p_sh_leaves, shape_leaves):
+        if opt.factored and len(sds.shape) >= 2:
+            spec = psh.spec
+            spec = tuple(spec) + (None,) * (len(sds.shape) - len(spec))
+            v_sh.append(
+                {
+                    "row": NamedSharding(mesh, P(*spec[:-1])),
+                    "col": NamedSharding(mesh, P(*(spec[:-2] + (spec[-1],)))),
+                }
+            )
+        else:
+            v_sh.append(psh)
+    return {
+        "params": p_sh,
+        "opt": {"m": m_sh, "v": v_sh, "step": _ns(mesh)},
+        "rng": _ns(mesh),
+    }
+
+
+def batch_shardings(arch: ArchConfig, shape: ShapeCell, mesh, rules):
+    b_axes = rules["batch"]
+    avail = tuple(a for a in (b_axes or ()) if a in mesh.axis_names)
+
+    def spec(sds):
+        if sds.ndim == 0:
+            return _ns(mesh)
+        import math
+
+        size = math.prod(mesh.shape[a] for a in avail) if avail else 1
+        if avail and sds.shape[0] % size == 0:
+            first = avail[0] if len(avail) == 1 else avail
+            return NamedSharding(mesh, P(first, *([None] * (sds.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * sds.ndim)))
+
+    specs = input_specs(arch, shape)
+    return {k: spec(v) for k, v in specs.items()}, specs
+
+
+def cache_shardings_dict(arch, mesh, rules, cache_shapes: dict):
+    out = {}
+    batch_axis = tuple(a for a in rules["batch"] if a in mesh.axis_names)
+
+    def div(n, axis="model"):
+        return n % mesh.shape[axis] == 0
+
+    import math
+
+    bprod = math.prod(mesh.shape[a] for a in batch_axis) if batch_axis else 1
+    b_first = batch_axis[0] if len(batch_axis) == 1 else (batch_axis if batch_axis else None)
+
+    for key, sds in cache_shapes.items():
+        shp = sds.shape
+
+        def bat(dim):
+            return b_first if (batch_axis and shp[dim] % bprod == 0) else None
+
+        if key in ("k", "v"):
+            if div(shp[3]):
+                spec = P(None, bat(1), None, "model", None)
+            elif div(shp[2]):
+                spec = P(None, bat(1), "model", None, None)
+            else:
+                spec = P(None, bat(1), None, None, None)
+        elif key in ("m_C", "m_n", "m_m"):
+            rest = [None] * (len(shp) - 3)
+            if len(shp) > 3 and div(shp[3]):
+                rest[0] = "model"
+            elif len(shp) > 4 and div(shp[4]):
+                rest[1] = "model"
+            spec = P(None, None, bat(2), *rest)
+        elif key.startswith("s_"):
+            rest = [None] * (len(shp) - 2)
+            if div(shp[-1]):
+                rest[-1] = "model"
+            spec = P(None, bat(1), *rest)
+        elif key in ("m_h", "m_conv"):
+            rest = [None] * (len(shp) - 3)
+            if key == "m_h" and div(shp[3]):
+                rest[0] = "model"
+            if key == "m_conv" and div(shp[4]):
+                rest[1] = "model"
+            spec = P(None, None, bat(2), *rest)
+        elif key in ("t_h", "t_conv"):
+            rest = [None] * (len(shp) - 2)
+            if key == "t_h" and div(shp[2]):
+                rest[0] = "model"
+            if key == "t_conv" and div(shp[3]):
+                rest[1] = "model"
+            spec = P(None, bat(1), *rest)
+        elif key in ("a_k", "a_v"):
+            if div(shp[3]):
+                spec = P(None, bat(1), None, "model", None)
+            elif div(shp[2]):
+                spec = P(None, bat(1), "model", None, None)
+            else:
+                spec = P(None, bat(1), None, None, None)
+        else:  # a_p and friends: replicated
+            spec = P(*([None] * len(shp)))
+        out[key] = NamedSharding(mesh, spec)
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-cell lower+compile
+# --------------------------------------------------------------------------
+
+
+def _batch_shards(mesh, rules) -> int:
+    import math as _math
+
+    axes = tuple(a for a in rules["batch"] if a in mesh.axis_names)
+    return _math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False, variant: str = "") -> dict:
+    arch = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rec: dict = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": n_chips,
+        "kind": shape.kind,
+    }
+    if not ok and not (arch.family == "diffusion" and shape.kind != "train"):
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+
+    rules = sh.make_rules(arch, multi_pod=multi_pod)
+    shard = sh.make_shard_fn(rules, mesh)
+    opt = steps_mod.make_optimizer(arch)
+
+    t0 = time.monotonic()
+    with mesh:
+        if arch.family == "diffusion":
+            # diffusion cells: train_4k -> train_step; prefill/decode ->
+            # serve_denoise at the cell's batch size
+            if shape.kind == "train":
+                fn = steps_mod.make_train_step(arch, opt, shard=shard, batch_shards=_batch_shards(mesh, rules))
+                st_sh = state_shardings(arch, mesh, rules, opt)
+                b_sh, b_specs = batch_shardings(arch, shape, mesh, rules)
+                state_shapes = jax.eval_shape(
+                    lambda k: steps_mod.init_state(arch, k, opt), jax.random.PRNGKey(0)
+                )
+                lowered = jax.jit(
+                    fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None), donate_argnums=(0,)
+                ).lower(state_shapes, b_specs)
+            else:
+                fn = steps_mod.make_denoise_step(arch, int8=variant == "int8")
+                b_sh, b_specs = batch_shardings(arch, shape, mesh, rules)
+                axes, shapes = steps_mod.param_axes(arch, int8=variant == "int8")
+                p_sh = jax.tree.map(
+                    lambda ax, sds: NamedSharding(mesh, sh.spec_for(ax, sds.shape, rules, mesh)),
+                    axes,
+                    shapes,
+                    is_leaf=lambda x: isinstance(x, tuple)
+                    and all(isinstance(e, (str, type(None))) for e in x),
+                )
+                lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(shapes, b_specs)
+        elif shape.kind == "train":
+            fn = steps_mod.make_train_step(arch, opt, shard=shard, batch_shards=_batch_shards(mesh, rules))
+            st_sh = state_shardings(arch, mesh, rules, opt)
+            b_sh, b_specs = batch_shardings(arch, shape, mesh, rules)
+            state_shapes = jax.eval_shape(
+                lambda k: steps_mod.init_state(arch, k, opt), jax.random.PRNGKey(0)
+            )
+            lowered = jax.jit(
+                fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None), donate_argnums=(0,)
+            ).lower(state_shapes, b_specs)
+        elif shape.kind == "prefill":
+            fn = steps_mod.make_prefill_step(arch, shard=shard)
+            b_sh, b_specs = batch_shardings(arch, shape, mesh, rules)
+            axes, shapes = steps_mod.param_axes(arch)
+            p_sh = jax.tree.map(
+                lambda ax, sds: NamedSharding(mesh, sh.spec_for(ax, sds.shape, rules, mesh)),
+                axes,
+                shapes,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            )
+            # the returned cache must come out sharded, not replicated
+            _, cache_out_shapes = jax.eval_shape(fn, shapes, b_specs)
+            c_out_sh = cache_shardings_dict(arch, mesh, rules, cache_out_shapes)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=(None, c_out_sh)).lower(
+                shapes, b_specs
+            )
+        else:  # decode
+            fn = steps_mod.make_decode_step(arch, shard=shard)
+            b_sh, b_specs = batch_shardings(arch, shape, mesh, rules)
+            axes, shapes = steps_mod.param_axes(arch)
+            p_sh = jax.tree.map(
+                lambda ax, sds: NamedSharding(mesh, sh.spec_for(ax, sds.shape, rules, mesh)),
+                axes,
+                shapes,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            )
+            model = LM(arch, shard=shard)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            c_sh = cache_shardings_dict(arch, mesh, rules, cache_shapes)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, c_sh, b_sh), out_shardings=(None, c_sh), donate_argnums=(1,)
+            ).lower(shapes, cache_shapes, b_specs)
+        rec["lower_s"] = round(time.monotonic() - t0, 2)
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.monotonic() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+            "output_bytes_per_device": int(ma.output_size_in_bytes),
+            "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+            "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes
+            ),
+        }
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        # primary source: HLO analyzer (cost_analysis counts while bodies
+        # once -> undercounts scan-over-layers models; see hlo_analysis.py)
+        hh = hlo_analysis.analyze(txt)
+        flops = float(hh["flops"])
+        bytes_acc = float(hh["hbm_bytes"])
+        rec["cost"] = {
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_acc,
+            "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
+            "xla_cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+        }
+        rec["collectives"] = {
+            "total_wire_bytes": float(hh["wire_bytes"]),
+            "by_op": hh["coll_by_op"],
+            "unrolled_parse": roofline.collective_summary(txt),
+        }
+        mf = roofline.model_flops(arch, shape)
+        rec["variant"] = variant
+        rec["roofline"] = roofline.roofline_terms(
+            flops,
+            bytes_acc,
+            float(hh["wire_bytes"]),
+            model_flops_global=mf,
+            n_chips=n_chips,
+            peak_flops=roofline.PEAK_FLOPS_INT8 if variant == "int8" else roofline.PEAK_FLOPS,
+        )
+        rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.names())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="", choices=["", "int8"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for arch_name in configs.names():
+            for shape_name in SHAPES:
+                for mp in meshes:
+                    cells.append((arch_name, shape_name, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch_name, shape_name, mp in cells:
+        suffix = f"_{args.variant}" if args.variant else ""
+        tag = f"{arch_name}_{shape_name}_{'512' if mp else '256'}{suffix}"
+        try:
+            rec = run_cell(arch_name, shape_name, multi_pod=mp, variant=args.variant)
+        except Exception as e:  # a failing cell is a bug — record it loudly
+            rec = {
+                "arch": arch_name,
+                "shape": shape_name,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        results.append(rec)
+        path = os.path.join(args.out, f"{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (
+                f" dom={r['dominant']} comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                f"coll={r['collective_s']:.3e}s peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB"
+                f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+            )
+        elif status == "skip":
+            extra = f" ({rec['reason']})"
+        else:
+            extra = f" !! {rec.get('error','')[:160]}"
+        print(f"[dryrun] {tag:44s} {status}{extra}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {sum(r['status']=='skip' for r in results)} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

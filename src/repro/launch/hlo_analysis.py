@@ -1,0 +1,265 @@
+"""Compiled-HLO static analyzer: true FLOP / byte / collective totals.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers model (ours: all of them) is undercounted by the trip
+count. The compiled HLO text, however, records every while's
+``known_trip_count`` backend config. This module parses the compiled
+module, builds the computation call graph, and rolls up:
+
+  * flops             — dot/convolution ops (2 * prod(result) * prod(K)),
+                        traversing fusion bodies, multiplying while bodies
+                        by their trip counts (nested scans multiply);
+  * hbm_bytes         — per top-level instruction: operand + result bytes
+                        (fusions count their boundary only — exactly the
+                        traffic fusion saves), same while multipliers;
+  * collective wire bytes by op, ring-algorithm factors as in roofline.py.
+
+This is the dry-run "profiler": benchmarks and the §Perf loop read these
+totals. Parsing is defensive: unknown ops contribute zero flops and their
+shapes' bytes, so results are a structural lower bound on compute and an
+HBM-roundtrip estimate equivalent to XLA's own bytes-accessed convention.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any
+
+from .roofline import _DTYPE_BYTES, _wire_factor
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?(?P<name>[\w.\-]+)\s*\((?P<params>[^)]*)\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.*)$"
+)
+_SHAPE = re.compile(r"(?P<dt>(?:pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128|f8e4m3fn|f8e5m2))\[(?P<dims>[0-9,]*)\]")
+_OP = re.compile(r"^(?:\([^)]*\)|[a-z0-9\[\]{},.\s]*?)\s*(?P<op>[a-z][\w\-]*)\(")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS = re.compile(r"(?:calls=|body=|to_apply=)%?([\w.\-]+)")
+_COND_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_FALSE = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast", "after-all", "iota"}
+
+
+def _shape_list(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE.finditer(text):
+        dims = [int(d) for d in m.group("dims").split(",") if d] if m.group("dims") else []
+        out.append((m.group("dt"), dims))
+    return out
+
+
+def _nbytes(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    result_shapes: list
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)  # name -> shapes
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            stripped = line.strip()
+            if stripped.endswith("{") and "->" in stripped:
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+                if m:
+                    cur = Computation(m.group(1))
+                    comps[cur.name] = cur
+                    # params live between the first '(' and the last ') ->'
+                    pstart = stripped.index("(") + 1
+                    pend = stripped.rfind(") ->")
+                    params = stripped[pstart:pend] if pend > pstart else ""
+                    for pm in re.finditer(r"(?P<pn>[\w.\-]+):\s*(?P<pt>[^,]+(?:\[[^\]]*\])?)", params):
+                        cur.symbols[pm.group("pn")] = _shape_list(pm.group("pt"))
+                    continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        rest = im.group("rest")
+        # result shapes: up to the op name token '... op('
+        opm = re.search(r"\b([a-z][\w\-]*)\(", rest)
+        op = opm.group(1) if opm else "unknown"
+        result_part = rest[: opm.start()] if opm else rest
+        result_shapes = _shape_list(result_part)
+        # operands: %names inside the first (...) after op
+        operands = []
+        if opm:
+            depth = 0
+            args = ""
+            for ch in rest[opm.end() - 1 :]:
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                args += ch
+            operands = re.findall(r"%([\w.\-]+)", args)
+        inst = Instr(im.group("name"), op, result_shapes, operands, line)
+        cur.instrs.append(inst)
+        cur.symbols[inst.name] = result_shapes
+    return comps
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    res = 1
+    for _, dims in inst.result_shapes:
+        for d in dims:
+            res *= d
+    cm = _CONTRACT.search(inst.line)
+    k = 1
+    if cm and inst.operands:
+        lhs_shapes = comp.symbols.get(inst.operands[0], [])
+        if lhs_shapes:
+            _, ldims = lhs_shapes[0]
+            for idx in (int(i) for i in cm.group(1).split(",") if i):
+                if idx < len(ldims):
+                    k *= ldims[idx]
+    return 2.0 * res * k
+
+
+def _conv_flops(inst: Instr, comp: Computation) -> float:
+    res = 1
+    for _, dims in inst.result_shapes:
+        for d in dims:
+            res *= d
+    k = 1
+    if len(inst.operands) >= 2:
+        rhs = comp.symbols.get(inst.operands[1], [])
+        if rhs:
+            _, kd = rhs[0]
+            # HWIO kernel: all dims except the output-feature dim
+            if len(kd) >= 2:
+                prod = 1
+                for d in kd[:-1]:
+                    prod *= d
+                k = prod
+    return 2.0 * res * k
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.coll_by_op.items():
+            d = self.coll_by_op.setdefault(k, {"count": 0.0, "wire_bytes": 0.0})
+            d["count"] += v["count"] * mult
+            d["wire_bytes"] += v["wire_bytes"] * mult
+
+
+def analyze(text: str, *, entry: str | None = None) -> dict[str, Any]:
+    comps = parse_module(text)
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY %?([\w.\-]+)", text, re.M)
+        entry_name = m.group(1) if m else next(iter(comps))
+    cache: dict[str, Totals] = {}
+
+    def comp_totals(name: str, *, for_flops_only: bool = False) -> Totals:
+        key = name + ("#f" if for_flops_only else "")
+        if key in cache:
+            return cache[key]
+        t = Totals()
+        comp = comps.get(name)
+        if comp is None:
+            cache[key] = t
+            return t
+        for inst in comp.instrs:
+            op = inst.op
+            if op == "dot":
+                t.flops += _dot_flops(inst, comp)
+            elif op == "convolution":
+                t.flops += _conv_flops(inst, comp)
+            if op in _COLLECTIVES or any(op == c + "-start" for c in _COLLECTIVES):
+                base = op.replace("-start", "")
+                rb = _nbytes(inst.result_shapes)
+                gm = _GROUPS_RE.search(inst.line)
+                gsize = int(gm.group("gs")) if gm else 1
+                wb = rb * _wire_factor(base, gsize)
+                t.wire_bytes += wb
+                d = t.coll_by_op.setdefault(base, {"count": 0, "wire_bytes": 0.0})
+                d["count"] += 1
+                d["wire_bytes"] += wb
+            # ---- bytes: boundary traffic of top-level instructions ----
+            if not for_flops_only and op not in _NO_TRAFFIC and not op.endswith("-done"):
+                ob = sum(_nbytes(comp.symbols.get(o, [])) for o in inst.operands)
+                t.hbm_bytes += ob + _nbytes(inst.result_shapes)
+            # ---- recursion ----
+            if op == "while":
+                tm = _TRIP.search(inst.line)
+                trip = int(tm.group(1)) if tm else 1
+                bm = re.search(r"body=%?([\w.\-]+)", inst.line)
+                if bm:
+                    t.add(comp_totals(bm.group(1), for_flops_only=for_flops_only), trip)
+            elif op == "conditional":
+                branches = _COND_BRANCHES.search(inst.line)
+                names = []
+                if branches:
+                    names = re.findall(r"%?([\w.\-]+)", branches.group(1))
+                else:
+                    names = _TRUE_FALSE.findall(inst.line)
+                if names:
+                    subs = [comp_totals(n, for_flops_only=for_flops_only) for n in names]
+                    best = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                    t.add(best, 1.0)
+            elif op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", inst.line)
+                if cm:
+                    # fusion internals: flops yes, bytes no (boundary counted)
+                    t.add(comp_totals(cm.group(1), for_flops_only=True), 1.0)
+            elif op == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", inst.line)
+                if cm:
+                    t.add(comp_totals(cm.group(1), for_flops_only=for_flops_only), 1.0)
+        cache[key] = t
+        return t
+
+    t = comp_totals(entry_name)
+    return {
+        "flops": t.flops,
+        "hbm_bytes": t.hbm_bytes,
+        "wire_bytes": t.wire_bytes,
+        "coll_by_op": t.coll_by_op,
+        "n_computations": len(comps),
+    }

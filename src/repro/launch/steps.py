@@ -1,0 +1,255 @@
+"""Jittable train / serve step builders for every architecture family.
+
+These are what the dry-run lowers and what launch/train.py drives. All
+steps are pure functions of (state|params, batch|cache) suitable for
+jax.jit with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import diffusion
+from ..models.lm import LM
+from ..nn import dit as dit_mod
+from ..optim import AdamW
+
+
+def cross_entropy(logits, labels):
+    """Mean CE in fp32. logits (B,S,V), labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_optimizer(arch: ArchConfig, *, base_lr: float = 3e-4, warmup: int = 100, total: int = 10000) -> AdamW:
+    from ..optim import make_schedule
+
+    return AdamW(
+        lr=make_schedule(arch.lr_schedule, base_lr, warmup=warmup, total=total),
+        moment_dtype=jnp.dtype(arch.optimizer_dtype),
+        factored=arch.factored_second_moment,
+    )
+
+
+def make_dit_model(arch: ArchConfig):
+    return dit_mod.DiTCfg(
+        d_model=arch.d_model,
+        n_layers=arch.n_layers,
+        n_heads=arch.n_heads,
+        patch=arch.patch,
+        in_channels=arch.in_channels,
+        input_size=arch.input_size,
+        n_classes=arch.n_classes,
+    )
+
+
+def make_train_step(
+    arch: ArchConfig, opt: AdamW, *, shard=None, aux_weight: float = 0.01,
+    batch_shards: int = 1,
+) -> Callable:
+    """(state, batch) -> (state, metrics); state = {params, opt, rng}.
+
+    ``batch_shards``: number of devices the batch dim is sharded over —
+    grad_accum is capped so each microbatch still divides the shards
+    (otherwise the microbatch activations silently replicate)."""
+    if arch.family == "diffusion":
+        dcfg = make_dit_model(arch)
+        sched = diffusion.cosine_schedule(1000)
+
+        def train_step(state, batch):
+            rng = jax.random.fold_in(state["rng"], state["opt"]["step"])
+            kt, ke = jax.random.split(rng)
+            x0 = batch["x0"].astype(jnp.dtype(arch.activation_dtype))
+            t = jax.random.randint(kt, (x0.shape[0],), 0, sched.T)
+            eps = jax.random.normal(ke, x0.shape, x0.dtype)
+            x_t = diffusion.q_sample(sched, x0, t, eps)
+
+            def loss_fn(params):
+                eps_hat = dit_mod.apply(params, dcfg, x_t, t, batch.get("labels"))
+                return jnp.mean(jnp.square(eps_hat.astype(jnp.float32) - eps.astype(jnp.float32)))
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            new_params, new_opt, stats = opt.update(grads, state["opt"], state["params"])
+            return {"params": new_params, "opt": new_opt, "rng": state["rng"]}, {"loss": loss, **stats}
+
+        return train_step
+
+    model = LM(arch, shard=shard)
+    nf = arch.n_frontend_tokens if arch.frontend == "vision" else 0
+
+    def loss_for(params, mb):
+        kwargs = {}
+        if arch.frontend == "audio":
+            kwargs["embeds"] = mb["embeds"]
+        else:
+            kwargs["tokens"] = mb["tokens"]
+        if nf:
+            kwargs["frontend_embeds"] = mb["frontend_embeds"]
+        logits, aux = model.forward(params, **kwargs)
+        if nf:
+            logits = logits[:, nf:]
+        ce = cross_entropy(logits, mb["labels"])
+        return ce + aux_weight * aux, (ce, aux)
+
+    accum = max(arch.grad_accum, 1)
+
+    def _effective_accum(total_batch: int) -> int:
+        a = min(accum, max(total_batch // max(batch_shards, 1), 1))
+        while a > 1 and (total_batch % a or (total_batch // a) % max(batch_shards, 1)):
+            a -= 1
+        return a
+
+    def train_step(state, batch):
+        params = state["params"]
+        accum_eff = _effective_accum(jax.tree.leaves(batch)[0].shape[0])
+        if accum_eff == 1:
+            (_, (ce, aux)), grads = jax.value_and_grad(loss_for, has_aux=True)(params, batch)
+        else:
+            # microbatched gradient accumulation: activation memory drops
+            # ~accum x, and each microbatch's grad reduction overlaps the
+            # next microbatch's backward under the XLA scheduler. The
+            # microbatch axis is dim 1 — dim 0 keeps the 'batch' sharding;
+            # a leading microbatch dim would force a full reshard (SPMD
+            # "involuntary full rematerialization").
+            mbs = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // accum_eff, accum_eff) + a.shape[1:]), batch
+            )
+            if shard is not None:
+                mbs = jax.tree.map(
+                    lambda a: shard(a, ("batch",) + (None,) * (a.ndim - 1)), mbs
+                )
+
+            acc_dt = jnp.dtype(arch.accum_dtype)
+            # constrain the accumulation carry to the PARAM sharding: an
+            # unconstrained carry makes GSPMD all-reduce each microbatch's
+            # full weight-grad then slice ("involuntary" pattern) instead
+            # of reduce-scattering to the FSDP shard — 2x wire on the
+            # dominant collective of the 480B config (§Perf arctic iter A).
+            if shard is not None:
+                p_axes, _shapes = param_axes(arch)
+
+                def constrain_grads(g):
+                    leaves, tdef = jax.tree_util.tree_flatten(g)
+                    ax_leaves = tdef.flatten_up_to(p_axes)
+                    return jax.tree_util.tree_unflatten(
+                        tdef, [shard(a, ax) for a, ax in zip(leaves, ax_leaves)]
+                    )
+            else:
+                constrain_grads = lambda g: g
+
+            def mb_body(carry, i):
+                g_acc, ce_acc, aux_acc = carry
+                mb = jax.tree.map(lambda a: a[:, i], mbs)
+                (_, (ce, aux)), g = jax.value_and_grad(loss_for, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                g_acc = constrain_grads(g_acc)
+                return (g_acc, ce_acc + ce, aux_acc + aux), None
+
+            zeros = constrain_grads(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (grads, ce, aux), _ = jax.lax.scan(
+                mb_body,
+                (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                jnp.arange(accum_eff),
+            )
+            grads = jax.tree.map(lambda g: g / accum_eff, grads)
+            ce, aux = ce / accum_eff, aux / accum_eff
+        new_params, new_opt, stats = opt.update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt, "rng": state["rng"]}
+        return new_state, {"loss": ce, "aux": aux, **stats}
+
+    return train_step
+
+
+def make_prefill_step(arch: ArchConfig, *, shard=None) -> Callable:
+    model = LM(arch, shard=shard)
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if arch.frontend == "audio":
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        if arch.frontend == "vision" and "frontend_embeds" in batch:
+            kwargs["frontend_embeds"] = batch["frontend_embeds"]
+        logits, cache = model.prefill(params, **kwargs)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(arch: ArchConfig, *, shard=None) -> Callable:
+    model = LM(arch, shard=shard)
+
+    def decode_step(params, cache, batch):
+        kwargs = {}
+        if arch.frontend == "audio":
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        logits, cache = model.decode_step(params, cache, pos=batch["pos"], **kwargs)
+        return logits, cache
+
+    return decode_step
+
+
+def make_denoise_step(arch: ArchConfig, *, int8: bool = False) -> Callable:
+    """One denoiser forward (the unit the Ditto sampler iterates).
+    ``int8``: the W8A8 serving path (models.dit_int8) — §Perf dit hillclimb."""
+    dcfg = make_dit_model(arch)
+    if int8:
+        from ..models import dit_int8
+
+        def denoise_step_q8(qparams, batch):
+            return dit_int8.apply(qparams, dcfg, batch["latents"], batch["t"], batch.get("labels"))
+
+        return denoise_step_q8
+
+    def denoise_step(params, batch):
+        return dit_mod.apply(params, dcfg, batch["latents"], batch["t"], batch.get("labels"))
+
+    return denoise_step
+
+
+def init_state(arch: ArchConfig, key, opt: AdamW):
+    """Initialize {params, opt, rng} for training."""
+    if arch.family == "diffusion":
+        dcfg = make_dit_model(arch)
+        params_p = dit_mod.init(key, dcfg, dtype=jnp.dtype(arch.param_dtype))
+    else:
+        params_p = LM(arch).init(key)
+    from ..nn import core as nncore
+
+    params, _axes = nncore.split(params_p)
+    return {"params": params, "opt": opt.init(params), "rng": jax.random.fold_in(key, 1)}
+
+
+def param_axes(arch: ArchConfig, key=None, *, int8: bool = False):
+    """Logical-axes tree (matching split params) without allocating: eval_shape."""
+    from ..nn import core as nncore
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if arch.family == "diffusion" and int8:
+        from ..models import dit_int8
+
+        dcfg = make_dit_model(arch)
+        tree = jax.eval_shape(
+            lambda k: dit_int8.quantize_params(dit_mod.init(k, dcfg, dtype=jnp.dtype(arch.param_dtype)), dcfg),
+            key,
+        )
+        axes = jax.tree.map(lambda _: (), tree)  # replicated (serving weights)
+        return axes, tree
+    if arch.family == "diffusion":
+        dcfg = make_dit_model(arch)
+        tree = jax.eval_shape(lambda k: dit_mod.init(k, dcfg, dtype=jnp.dtype(arch.param_dtype)), key)
+    else:
+        tree = jax.eval_shape(LM(arch).init, key)
+    # eval_shape keeps Param nodes (registered pytree): leaves are SDS
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=nncore.is_param)
+    shapes = jax.tree.map(lambda p: p.value, tree, is_leaf=nncore.is_param)
+    return axes, shapes

@@ -1,0 +1,144 @@
+"""Fault-tolerant training driver.
+
+Features (all exercised by tests/examples on CPU, designed for 1000+ nodes):
+  * resume-from-latest atomic checkpoint (async save off the step path)
+  * deterministic seekable data (batch = f(seed, step)) -> bit-identical
+    restart, including after elastic rescale
+  * straggler mitigation: per-step deadline watchdog; a step exceeding
+    k x rolling-median is logged and counted (on real fleets this signal
+    feeds the reschedule/evict controller; here it is the hook + policy)
+  * preemption safety: SIGTERM triggers an immediate checkpoint + clean exit
+  * optional int8 gradient-compression all-reduce with error feedback
+
+Usage:  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+            --steps 100 --batch 8 --seq 128 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..checkpoint.manager import CheckpointManager
+from ..data.synthetic import DataCfg, batch_for
+from . import steps as steps_mod
+
+
+class TrainDriver:
+    def __init__(
+        self,
+        arch: configs.ArchConfig,
+        *,
+        workdir: str,
+        batch: int = 8,
+        seq: int = 128,
+        base_lr: float = 3e-4,
+        total_steps: int = 100,
+        ckpt_every: int = 50,
+        straggler_factor: float = 3.0,
+        seed: int = 0,
+        mesh=None,
+        shard=None,
+    ):
+        self.arch = arch
+        self.data_cfg = DataCfg(seed=seed, batch=batch, seq_len=seq)
+        self.total_steps = total_steps
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.ckpt = CheckpointManager(workdir)
+        self.opt = steps_mod.make_optimizer(
+            arch, base_lr=base_lr, warmup=min(20, total_steps // 10 + 1), total=total_steps
+        )
+        self.train_step = jax.jit(steps_mod.make_train_step(arch, self.opt, shard=shard), donate_argnums=(0,))
+        self.key = jax.random.PRNGKey(seed)
+        self.mesh = mesh
+        self._preempted = False
+        self.straggler_events: list[int] = []
+        self.metrics_log: list[dict] = []
+
+    # -------------------------------------------------------------- plumbing
+    def _install_signal_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def init_or_restore(self):
+        state = steps_mod.init_state(self.arch, self.key, self.opt)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = self.ckpt.restore(latest, state)
+            start = int(jax.device_get(state["opt"]["step"]))
+        else:
+            start = 0
+        return state, start
+
+    # ------------------------------------------------------------------ run
+    def run(self, *, steps: int | None = None):
+        self._install_signal_handler()
+        state, start = self.init_or_restore()
+        n = steps if steps is not None else self.total_steps
+        durations: list[float] = []
+        step = start
+        while step < start + n and step < self.total_steps:
+            t0 = time.monotonic()
+            batch = batch_for(self.arch, self.data_cfg, step)
+            state, metrics = self.train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            # ---- straggler watchdog ----
+            if len(durations) >= 5:
+                med = statistics.median(durations[-20:])
+                if dt > self.straggler_factor * med:
+                    self.straggler_events.append(step)
+            durations.append(dt)
+            self.metrics_log.append(
+                {"step": step, "loss": float(metrics["loss"]), "dt": dt,
+                 "grad_norm": float(metrics["grad_norm"]), "lr": float(metrics["lr"])}
+            )
+            step += 1
+            if self._preempted:
+                self.ckpt.save(step, state)  # sync: must land before exit
+                return state, step
+            if self.ckpt_every and step % self.ckpt_every == 0:
+                self.ckpt.save_async(step, state)
+        self.ckpt.wait()
+        self.ckpt.save(step, state)
+        return state, step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.names())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    args = ap.parse_args(argv)
+    arch = configs.get(args.arch)
+    if args.smoke:
+        arch = arch.smoke()
+    driver = TrainDriver(
+        arch, workdir=args.workdir, batch=args.batch, seq=args.seq,
+        base_lr=args.lr, total_steps=args.steps,
+    )
+    state, step = driver.run()
+    first = driver.metrics_log[0]["loss"] if driver.metrics_log else float("nan")
+    last = driver.metrics_log[-1]["loss"] if driver.metrics_log else float("nan")
+    print(f"[train] arch={arch.name} steps={step} loss {first:.4f} -> {last:.4f} "
+          f"stragglers={len(driver.straggler_events)}")
+    return driver
+
+
+if __name__ == "__main__":
+    main()

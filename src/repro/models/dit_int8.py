@@ -1,0 +1,108 @@
+"""W8A8 int8 DiT serving path (pure XLA, TPU-deployable).
+
+The paper's premise is an A8W8-quantized denoiser; this module is the
+TPU-native serving step: weights pre-quantized per output channel (int8 +
+fp32 scales), activations quantized per tensor dynamically, every linear
+runs as an int8xint8->int32 dot (lowers to the int8 MXU path on TPU; 2x
+the bf16 peak). Norms / softmax / rope / modulation stay fp32 — exactly
+the engine's VPU split.
+
+This is §Perf iteration 2 of the dit-xl2 serve hillclimb; iteration 3
+(Ditto tile-skipping) multiplies the compute term by the measured nonzero
+tile fraction — the dynamic skip itself is the Pallas kernel path
+(repro.kernels.ditto_diff_matmul), which XLA cannot express statically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import core as nncore
+from ..nn import dit as dit_mod
+
+
+def quantize_params(params, cfg: dit_mod.DiTCfg):
+    """bf16/fp32 DiT param tree -> int8 weights + scales (+fp bias/tables)."""
+
+    def q(w):
+        # per-output-channel scales; axis=-2 is the input dim (weights may
+        # carry a leading stacked-layer dim that scan slices off)
+        w = w.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0
+        scale = jnp.where(scale > 0, scale, 1.0)
+        qw = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        return {"q": qw, "scale": scale}
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                if "w" in v:  # dense layer {w, b?}
+                    out[k] = {"w8": q(nncore.val(v["w"]))}
+                    if "b" in v:
+                        out[k]["w8"]["b"] = nncore.val(v["b"]).astype(jnp.float32)
+                else:
+                    out[k] = walk(v)
+            else:
+                out[k] = nncore.val(v)
+        return out
+
+    return walk(params)
+
+
+def _qdense(w8: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    xs = jnp.where(amax > 0, amax / 127.0, 1.0)
+    xq = jnp.clip(jnp.round(xf / xs), -127, 127).astype(jnp.int8)
+    y = jax.lax.dot_general(
+        xq, w8["q"], (((xq.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    y = y.astype(jnp.float32) * xs * w8["scale"].reshape(-1)
+    if "b" in w8:
+        y = y + w8["b"]
+    return y
+
+
+def apply(qparams, cfg: dit_mod.DiTCfg, latents, t, labels=None):
+    """Mirrors nn.dit.apply with every linear on the int8 path."""
+    b, hh, ww, ch = latents.shape
+    pp = cfg.patch
+    x = latents.reshape(b, hh // pp, pp, ww // pp, pp, ch)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, cfg.n_tokens, cfg.patch_dim)
+    x = _qdense(qparams["patch_embed"]["w8"], x) + qparams["pos_embed"].astype(jnp.float32)[None]
+
+    c = dit_mod.timestep_embedding(t, 256)
+    c = _qdense(qparams["t_mlp2"]["w8"], jax.nn.silu(_qdense(qparams["t_mlp1"]["w8"], c)))
+    if labels is not None and "label_embed" in qparams:
+        c = c + qparams["label_embed"].astype(jnp.float32)[labels]
+    c_act = jax.nn.silu(c)
+
+    nh, hd = cfg.n_heads, cfg.head_dim
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def block(x, bp):
+        mod = _qdense(bp["mod"]["w8"], c_act)
+        sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
+        h = dit_mod._modulate(dit_mod._ln(x), sh_a, sc_a)
+        q = _qdense(bp["attn"]["wq"]["w8"], h).reshape(b, cfg.n_tokens, nh, hd)
+        k = _qdense(bp["attn"]["wk"]["w8"], h).reshape(b, cfg.n_tokens, nh, hd)
+        v = _qdense(bp["attn"]["wv"]["w8"], h).reshape(b, cfg.n_tokens, nh, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        p = jax.nn.softmax(s, axis=-1)
+        a = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, cfg.n_tokens, nh * hd)
+        a = _qdense(bp["attn"]["wo"]["w8"], a)
+        x = x + g_a[:, None, :] * a
+        h = dit_mod._modulate(dit_mod._ln(x), sh_m, sc_m)
+        hmid = jax.nn.gelu(_qdense(bp["mlp"]["wi"]["w8"], h))
+        x = x + g_m[:, None, :] * _qdense(bp["mlp"]["wo"]["w8"], hmid)
+        return x, None
+
+    x, _ = jax.lax.scan(block, x.astype(jnp.float32), qparams["blocks"])
+
+    modf = _qdense(qparams["final_mod"]["w8"], c_act)
+    shift, scl = jnp.split(modf, 2, axis=-1)
+    x = dit_mod._modulate(dit_mod._ln(x), shift, scl)
+    x = _qdense(qparams["final_out"]["w8"], x)
+    x = x.reshape(b, hh // pp, ww // pp, pp, pp, ch).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, hh, ww, ch)

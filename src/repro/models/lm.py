@@ -1,0 +1,527 @@
+"""Decoder LM assembled from an ArchConfig.
+
+Families:
+  dense / vlm / audio : homogeneous (attn + FFN) stack, lax.scan over layers
+  moe                 : same stack with MoE FFN (+ shared / dense-residual)
+  ssm (xlstm)         : super-blocks of (per_super mLSTM + 1 sLSTM)
+  hybrid (zamba2)     : super-blocks of (per_super Mamba2 + 1 *shared* attn
+                        block) + trailing Mamba2; attention weights shared
+                        across all applications (Zamba-style)
+
+API (all pure functions of params):
+  init(key)                                     -> Param tree
+  forward(params, tokens=None, embeds=None,
+          frontend_embeds=None)                 -> (logits, aux)
+  init_cache(batch, cache_len, dtype)           -> cache pytree (zeros)
+  prefill(params, ..., cache_len)               -> (logits, cache)
+  decode_step(params, tokens/embeds, cache, pos)-> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..nn import attention as attn_mod
+from ..nn import core, embedding, mlp, moe, ssm, xlstm
+from ..nn.core import Param, val
+
+
+def _norm_init(cfg: ArchConfig, dim: int, dtype):
+    return core.rmsnorm_init(dim, dtype=dtype) if cfg.norm == "rmsnorm" else core.layernorm_init(dim, dtype=dtype)
+
+
+def _norm(cfg: ArchConfig, p, x):
+    return core.rmsnorm(p, x) if cfg.norm == "rmsnorm" else core.layernorm(p, x)
+
+
+def _stack(trees):
+    """Stack a list of identical Param trees along a new leading 'layer' axis."""
+    return jax.tree.map(
+        lambda *xs: Param(jnp.stack([x.value for x in xs]), ("layer",) + xs[0].axes),
+        *trees,
+        is_leaf=core.is_param,
+    )
+
+
+def _pad_vocab(v: int) -> int:
+    """Pad the vocab to a 256 multiple so the 'vocab' dim shards on any
+    production mesh axis (e.g. minicpm's 122753 -> 122880). Pad logits are
+    masked to -inf in _logits; pad embedding rows are never gathered."""
+    return ((v + 255) // 256) * 256
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, *, shard=None):
+        self.cfg = cfg
+        self.shard = shard or (lambda a, axes: a)
+        self.vocab_padded = _pad_vocab(cfg.vocab_size) if cfg.vocab_size else 0
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+        self.adtype = jnp.dtype(cfg.activation_dtype)
+        hd = cfg.resolved_head_dim
+        self.attn_cfg = attn_mod.AttentionCfg(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=hd,
+            qk_norm=cfg.qk_norm,
+            rope_theta=cfg.rope_theta,
+            bias=cfg.attn_bias,
+            window=cfg.attn_window,
+        )
+        self.mlp_cfg = mlp.MlpCfg(cfg.d_model, cfg.d_ff, act=cfg.act, bias=cfg.attn_bias)
+        if cfg.n_experts:
+            self.moe_cfg = moe.MoeCfg(
+                cfg.d_model,
+                cfg.d_ff,
+                n_experts=cfg.n_experts,
+                top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                d_ff_shared=cfg.d_ff_shared,
+                d_ff_dense=cfg.d_ff_dense,
+                act=cfg.act,
+                w8_gather=cfg.w8_gather,
+                ep_ff_data=cfg.ep_ff_data,
+            )
+        if cfg.family in ("ssm",):
+            self.xl_cfg = xlstm.XlstmCfg(cfg.d_model, n_heads=cfg.n_heads)
+        if cfg.family in ("hybrid",):
+            self.mamba_cfg = ssm.MambaCfg(
+                cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim
+            )
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = self.pdtype
+        keys = jax.random.split(key, 6)
+        p: dict = {"final_norm": _norm_init(cfg, cfg.d_model, dt)}
+        if cfg.vocab_size:
+            p["embed"] = embedding.embed_init(keys[0], self.vocab_padded, cfg.d_model, dtype=dt)
+            if not cfg.tie_embeddings:
+                p["head"] = embedding.head_init(keys[1], cfg.d_model, self.vocab_padded, dtype=dt)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            def one(k):
+                k1, k2 = jax.random.split(k)
+                blk = {
+                    "ln1": _norm_init(cfg, cfg.d_model, dt),
+                    "attn": attn_mod.init(k1, self.attn_cfg, dtype=dt),
+                    "ln2": _norm_init(cfg, cfg.d_model, dt),
+                }
+                if cfg.n_experts:
+                    blk["moe"] = moe.init(k2, self.moe_cfg, dtype=dt)
+                else:
+                    blk["mlp"] = mlp.init(k2, self.mlp_cfg, dtype=dt)
+                return blk
+
+            p["blocks"] = _stack([one(k) for k in jax.random.split(keys[2], cfg.n_layers)])
+
+        elif cfg.family == "ssm":  # xlstm: supers of (per_super mLSTM + 1 sLSTM)
+            def m_one(k):
+                return {"ln": _norm_init(cfg, cfg.d_model, dt), "cell": xlstm.mlstm_init(k, self.xl_cfg, dtype=dt)}
+
+            def s_one(k):
+                return {"ln": _norm_init(cfg, cfg.d_model, dt), "cell": xlstm.slstm_init(k, self.xl_cfg, dtype=dt)}
+
+            mk = jax.random.split(keys[2], cfg.n_super * cfg.per_super)
+            sk = jax.random.split(keys[3], cfg.n_super)
+            m_stack = [_stack([m_one(mk[i * cfg.per_super + j]) for j in range(cfg.per_super)]) for i in range(cfg.n_super)]
+            p["mlstm"] = jax.tree.map(
+                lambda *xs: Param(jnp.stack([x.value for x in xs]), ("super",) + xs[0].axes),
+                *m_stack,
+                is_leaf=core.is_param,
+            )
+            p["slstm"] = _stack([s_one(k) for k in sk])
+
+        elif cfg.family == "hybrid":  # zamba2
+            def mb_one(k):
+                return {"ln": _norm_init(cfg, cfg.d_model, dt), "cell": ssm.init(k, self.mamba_cfg, dtype=dt)}
+
+            n_m = cfg.n_super * cfg.per_super
+            mk = jax.random.split(keys[2], n_m)
+            m_stack = [_stack([mb_one(mk[i * cfg.per_super + j]) for j in range(cfg.per_super)]) for i in range(cfg.n_super)]
+            p["mamba"] = jax.tree.map(
+                lambda *xs: Param(jnp.stack([x.value for x in xs]), ("super",) + xs[0].axes),
+                *m_stack,
+                is_leaf=core.is_param,
+            )
+            if cfg.n_trailing:
+                tk = jax.random.split(keys[3], cfg.n_trailing)
+                p["trailing"] = _stack([mb_one(k) for k in tk])
+            k1, k2 = jax.random.split(keys[4])
+            p["shared_attn"] = {
+                "ln1": _norm_init(cfg, cfg.d_model, dt),
+                "attn": attn_mod.init(k1, self.attn_cfg, dtype=dt),
+                "ln2": _norm_init(cfg, cfg.d_model, dt),
+                "mlp": mlp.init(k2, self.mlp_cfg, dtype=dt),
+            }
+        else:
+            raise ValueError(f"family {cfg.family} not built by LM")
+        return p
+
+    # ------------------------------------------------------------- embedding
+    def _embed_in(self, params, tokens, embeds, frontend_embeds):
+        cfg = self.cfg
+        if embeds is not None:  # audio stub: frame embeddings in
+            x = embeds.astype(self.adtype)
+        else:
+            x = embedding.embed(params["embed"], tokens).astype(self.adtype)
+        if frontend_embeds is not None:  # vlm stub: patch embeddings prefix
+            x = jnp.concatenate([frontend_embeds.astype(self.adtype), x], axis=1)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = x.astype(jnp.float32)
+        if cfg.tie_embeddings:
+            logits = embedding.logits(None, x, tied_table=params["embed"]["table"])
+        else:
+            logits = embedding.logits(params["head"], x)
+        if self.vocab_padded != cfg.vocab_size:  # mask pad columns
+            pad_mask = jnp.arange(self.vocab_padded) < cfg.vocab_size
+            logits = jnp.where(pad_mask, logits, -1e9)
+        return logits
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, *, tokens=None, embeds=None, frontend_embeds=None):
+        """Full-sequence forward (train / prefill math). -> (logits, aux)."""
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, embeds, frontend_embeds)
+        x = self.shard(x, ("batch", None, None))
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            def body(carry, bp):
+                x, aux = carry
+                h = _norm(cfg, bp["ln1"], x)
+                a, _ = attn_mod.apply(bp["attn"], self.attn_cfg, h, positions=positions)
+                x = x + a
+                h = _norm(cfg, bp["ln2"], x)
+                if cfg.n_experts:
+                    f, a_loss = moe.apply(bp["moe"], self.moe_cfg, h, shard=self.shard)
+                    aux = aux + a_loss
+                else:
+                    f = mlp.apply(bp["mlp"], self.mlp_cfg, h)
+                return (x + f, aux), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+        elif cfg.family == "ssm":
+            def m_body(x, bp):
+                y, _ = xlstm.mlstm_apply(bp["cell"], self.xl_cfg, _norm(cfg, bp["ln"], x))
+                return x + y, None
+
+            def super_body(x, sp):
+                x, _ = jax.lax.scan(m_body, x, sp["m"])
+                y, _ = xlstm.slstm_apply(sp["s"]["cell"], self.xl_cfg, _norm(cfg, sp["s"]["ln"], x))
+                return x + y, None
+
+            if cfg.remat:
+                super_body = jax.checkpoint(super_body)
+            x, _ = jax.lax.scan(super_body, x, {"m": params["mlstm"], "s": params["slstm"]})
+
+        elif cfg.family == "hybrid":
+            sa = params["shared_attn"]
+
+            def m_body(x, bp):
+                y, _ = ssm.apply(bp["cell"], self.mamba_cfg, _norm(cfg, bp["ln"], x))
+                return x + y, None
+
+            if cfg.remat:
+                # remat at the *layer* granularity: the inner scan would
+                # otherwise stack every mamba layer's fp32 intermediates as
+                # backward residuals (§Perf zamba2 iteration 4)
+                m_body = jax.checkpoint(m_body)
+
+            def super_body(x, sp):
+                x, _ = jax.lax.scan(m_body, x, sp)
+                h = _norm(cfg, sa["ln1"], x)
+                a, _ = attn_mod.apply(sa["attn"], self.attn_cfg, h, positions=positions)
+                x = x + a
+                x = x + mlp.apply(sa["mlp"], self.mlp_cfg, _norm(cfg, sa["ln2"], x))
+                return x, None
+
+            if cfg.remat:
+                super_body = jax.checkpoint(super_body)
+            x, _ = jax.lax.scan(super_body, x, params["mamba"])
+            if cfg.n_trailing:
+                x, _ = jax.lax.scan(m_body, x, params["trailing"])
+
+        x = _norm(cfg, params["final_norm"], x)
+        return self._logits(params, x), aux
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, cache_len: int, dtype=None) -> dict:
+        cfg = self.cfg
+        dt = dtype or self.adtype
+        hd = cfg.resolved_head_dim
+        kvh = cfg.n_kv_heads
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            shape = (cfg.n_layers, batch, cache_len, kvh, hd)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if cfg.family == "ssm":
+            xc = self.xl_cfg
+            return {
+                "m_C": jnp.zeros((cfg.n_super, cfg.per_super, batch, xc.n_heads, xc.head_dim, xc.head_dim), jnp.float32),
+                "m_n": jnp.zeros((cfg.n_super, cfg.per_super, batch, xc.n_heads, xc.head_dim), jnp.float32),
+                "m_m": jnp.full((cfg.n_super, cfg.per_super, batch, xc.n_heads), -1e30, jnp.float32),
+                "s_c": jnp.zeros((cfg.n_super, batch, cfg.d_model), jnp.float32),
+                "s_n": jnp.zeros((cfg.n_super, batch, cfg.d_model), jnp.float32),
+                "s_h": jnp.zeros((cfg.n_super, batch, cfg.d_model), jnp.float32),
+                "s_m": jnp.full((cfg.n_super, batch, xc.n_heads), -1e30, jnp.float32),
+            }
+        if cfg.family == "hybrid":
+            mc = self.mamba_cfg
+            w = cfg.attn_window or cache_len
+            w = min(w, cache_len)
+            conv_dim = mc.d_inner + 2 * mc.n_groups * mc.d_state
+            cache = {
+                "m_h": jnp.zeros((cfg.n_super, cfg.per_super, batch, mc.n_heads, mc.head_dim, mc.d_state), jnp.float32),
+                "m_conv": jnp.zeros((cfg.n_super, cfg.per_super, batch, mc.conv_width - 1, conv_dim), jnp.float32),
+                "a_k": jnp.zeros((cfg.n_super, batch, w, kvh, hd), dt),
+                "a_v": jnp.zeros((cfg.n_super, batch, w, kvh, hd), dt),
+                "a_p": jnp.full((cfg.n_super, w), -1, jnp.int32),  # ring slot -> abs pos
+            }
+            if cfg.n_trailing:
+                cache["t_h"] = jnp.zeros((cfg.n_trailing, batch, mc.n_heads, mc.head_dim, mc.d_state), jnp.float32)
+                cache["t_conv"] = jnp.zeros((cfg.n_trailing, batch, mc.conv_width - 1, conv_dim), jnp.float32)
+            return cache
+        raise ValueError(cfg.family)
+
+    # ----------------------------------------------------------- decode step
+    def decode_step(self, params, cache: dict, *, tokens=None, embeds=None, pos=None):
+        """One decode step. tokens: (B,1) (or embeds (B,1,D)); pos: scalar."""
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, embeds, None)
+        positions = pos + jnp.arange(x.shape[1], dtype=jnp.int32)
+        new_cache = dict(cache)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            def body(x, xs):
+                bp, ck, cv = xs
+                h = _norm(cfg, bp["ln1"], x)
+                a, nc = attn_mod.apply(
+                    bp["attn"], self.attn_cfg, h, positions=positions,
+                    cache={"k": ck, "v": cv}, cache_pos=pos,
+                )
+                x = x + a
+                h = _norm(cfg, bp["ln2"], x)
+                if cfg.n_experts:
+                    f, _ = moe.apply(bp["moe"], self.moe_cfg, h, shard=self.shard)
+                else:
+                    f = mlp.apply(bp["mlp"], self.mlp_cfg, h)
+                return x + f, (nc["k"], nc["v"])
+
+            x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+            new_cache = {"k": nk, "v": nv}
+
+        elif cfg.family == "ssm":
+            def m_body(x, xs):
+                bp, C, n, m = xs
+                y, (C2, n2, m2) = xlstm.mlstm_apply(bp["cell"], self.xl_cfg, _norm(cfg, bp["ln"], x), state=(C, n, m))
+                return x + y, (C2, n2, m2)
+
+            def super_body(x, xs):
+                sp, mC, mn, mm, sc, sn, sh, sm = xs
+                x, (C2, n2, m2) = jax.lax.scan(m_body, x, (sp["m"], mC, mn, mm))
+                y, st = xlstm.slstm_apply(sp["s"]["cell"], self.xl_cfg, _norm(cfg, sp["s"]["ln"], x), state=(sc, sn, sh, sm))
+                return x + y, (C2, n2, m2) + st
+
+            x, ys = jax.lax.scan(
+                super_body,
+                x,
+                ({"m": params["mlstm"], "s": params["slstm"]},
+                 cache["m_C"], cache["m_n"], cache["m_m"],
+                 cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"]),
+            )
+            new_cache = dict(zip(["m_C", "m_n", "m_m", "s_c", "s_n", "s_h", "s_m"], ys))
+
+        elif cfg.family == "hybrid":
+            sa = params["shared_attn"]
+            w = cache["a_k"].shape[2]
+
+            def m_body(x, xs):
+                bp, h0, cv0 = xs
+                y, (h2, cv2) = ssm.apply(bp["cell"], self.mamba_cfg, _norm(cfg, bp["ln"], x), state=h0, conv_state=cv0)
+                return x + y, (h2, cv2)
+
+            def super_body(x, xs):
+                sp, mh, mcv, ak, av, ap = xs
+                x, (h2, cv2) = jax.lax.scan(m_body, x, (sp, mh, mcv))
+                h = _norm(cfg, sa["ln1"], x)
+                a, nc = _ring_attend(sa["attn"], self.attn_cfg, h, ak, av, ap, pos)
+                x = x + a
+                x = x + mlp.apply(sa["mlp"], self.mlp_cfg, _norm(cfg, sa["ln2"], x))
+                return x, (h2, cv2, nc["k"], nc["v"], nc["p"])
+
+            x, ys = jax.lax.scan(
+                super_body,
+                x,
+                (params["mamba"], cache["m_h"], cache["m_conv"], cache["a_k"], cache["a_v"], cache["a_p"]),
+            )
+            new_cache = dict(cache)
+            new_cache.update(dict(zip(["m_h", "m_conv", "a_k", "a_v", "a_p"], ys)))
+            if cfg.n_trailing:
+                x, (th, tcv) = jax.lax.scan(m_body, x, (params["trailing"], cache["t_h"], cache["t_conv"]))
+                new_cache["t_h"], new_cache["t_conv"] = th, tcv
+
+        x = _norm(cfg, params["final_norm"], x)
+        return self._logits(params, x), new_cache
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, *, tokens=None, embeds=None, frontend_embeds=None):
+        """Process a full prompt; returns (last-position logits, live cache).
+
+        The cache length equals the prompt length (callers append decode
+        budget by padding the cache before stepping, or re-init a longer
+        cache; the dry-run prefill cells measure exactly this step).
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, embeds, frontend_embeds)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            def body(x, bp):
+                h = _norm(cfg, bp["ln1"], x)
+                a, nc = attn_mod.apply(bp["attn"], self.attn_cfg, h, positions=positions)
+                x = x + a
+                h = _norm(cfg, bp["ln2"], x)
+                if cfg.n_experts:
+                    f, _ = moe.apply(bp["moe"], self.moe_cfg, h, shard=self.shard)
+                else:
+                    f = mlp.apply(bp["mlp"], self.mlp_cfg, h)
+                return x + f, (nc["k"].astype(self.adtype), nc["v"].astype(self.adtype))
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+            cache = {"k": ks, "v": vs}
+            x = _norm(cfg, params["final_norm"], x[:, -1:])
+            return self._logits(params, x), cache
+
+        # recurrent families: prefill == forward with state threading. Run
+        # decode-style cells over the sequence via the chunked scan inside
+        # each cell; here we reuse decode_step-compatible state by running
+        # the full forward and capturing final states.
+        if cfg.family == "ssm":
+            cache = self.init_cache(x.shape[0], s)
+
+            def m_body(x, xs):
+                bp, C, n, m = xs
+                y, st = xlstm.mlstm_apply(bp["cell"], self.xl_cfg, _norm(cfg, bp["ln"], x), state=(C, n, m))
+                return x + y, st
+
+            def super_body(x, xs):
+                sp, mC, mn, mm, sc, sn, sh, sm = xs
+                x, st_m = jax.lax.scan(m_body, x, (sp["m"], mC, mn, mm))
+                y, st_s = xlstm.slstm_apply(sp["s"]["cell"], self.xl_cfg, _norm(cfg, sp["s"]["ln"], x), state=(sc, sn, sh, sm))
+                return x + y, st_m + st_s
+
+            if cfg.remat:
+                super_body = jax.checkpoint(super_body)
+            x, ys = jax.lax.scan(
+                super_body,
+                x,
+                ({"m": params["mlstm"], "s": params["slstm"]},
+                 cache["m_C"], cache["m_n"], cache["m_m"],
+                 cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"]),
+            )
+            cache = dict(zip(["m_C", "m_n", "m_m", "s_c", "s_n", "s_h", "s_m"], ys))
+            x = _norm(cfg, params["final_norm"], x[:, -1:])
+            return self._logits(params, x), cache
+
+        if cfg.family == "hybrid":
+            cache = self.init_cache(x.shape[0], s)
+            sa = params["shared_attn"]
+            w = cache["a_k"].shape[2]
+
+            def m_body(x, xs):
+                bp, h0, cv0 = xs
+                y, st = ssm.apply(bp["cell"], self.mamba_cfg, _norm(cfg, bp["ln"], x), state=h0, conv_state=cv0)
+                return x + y, st
+
+            def super_body(x, xs):
+                sp, mh, mcv, ak, av, ap = xs
+                x, (h2, cv2) = jax.lax.scan(m_body, x, (sp, mh, mcv))
+                h = _norm(cfg, sa["ln1"], x)
+                a, nc = attn_mod.apply(sa["attn"], self.attn_cfg, h, positions=positions)
+                x = x + a
+                x = x + mlp.apply(sa["mlp"], self.mlp_cfg, _norm(cfg, sa["ln2"], x))
+                # fold the last `w` keys/values into the ring cache layout
+                nk, nv, np_ = _ring_from_full(nc["k"].astype(self.adtype), nc["v"].astype(self.adtype), w)
+                return x, (h2, cv2, nk, nv, np_)
+
+            if cfg.remat:
+                super_body = jax.checkpoint(super_body)
+            x, ys = jax.lax.scan(
+                super_body,
+                x,
+                (params["mamba"], cache["m_h"], cache["m_conv"], cache["a_k"], cache["a_v"], cache["a_p"]),
+            )
+            new_cache = dict(cache)
+            new_cache.update(dict(zip(["m_h", "m_conv", "a_k", "a_v", "a_p"], ys)))
+            if cfg.n_trailing:
+                x, (th, tcv) = jax.lax.scan(m_body, x, (params["trailing"], cache["t_h"], cache["t_conv"]))
+                new_cache["t_h"], new_cache["t_conv"] = th, tcv
+            x = _norm(cfg, params["final_norm"], x[:, -1:])
+            return self._logits(params, x), new_cache
+
+        raise ValueError(cfg.family)
+
+
+def _ring_attend(attn_params, acfg, h, ak, av, ap, pos):
+    """Windowed decode attention over a ring-buffer cache.
+
+    ak/av: (B, W, KV, hd); ap: (W,) absolute positions (-1 = empty).
+    Writes the new token at slot pos % W, attends over valid slots.
+    """
+    import math as _math
+
+    from ..nn import attention as A
+    from ..nn import core as C
+    from ..nn.rotary import apply_rope
+
+    b, s, _ = h.shape
+    w = ak.shape[1]
+    hd = acfg.head_dim
+    q = C.dense(attn_params["wq"], h).reshape(b, s, acfg.n_heads, hd)
+    k = C.dense(attn_params["wk"], h).reshape(b, s, acfg.n_kv_heads, hd)
+    v = C.dense(attn_params["wv"], h).reshape(b, s, acfg.n_kv_heads, hd)
+    if acfg.qk_norm:
+        q = A._headnorm(attn_params["q_norm"]["scale"], q)
+        k = A._headnorm(attn_params["k_norm"]["scale"], k)
+    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    q = apply_rope(q, positions, theta=acfg.rope_theta)
+    k = apply_rope(k, positions, theta=acfg.rope_theta)
+    slot = jnp.mod(pos, w)
+    ak = jax.lax.dynamic_update_slice(ak, k.astype(ak.dtype), (0, slot, 0, 0))
+    av = jax.lax.dynamic_update_slice(av, v.astype(av.dtype), (0, slot, 0, 0))
+    ap = jax.lax.dynamic_update_slice(ap, positions, (slot,))
+    mask = (ap >= 0) & (ap <= pos)  # (W,)
+    mask = mask[None, None, None, None, :]  # (B,KV,G,Sq,W)
+    y = A._sdpa(q, ak.astype(q.dtype), av.astype(q.dtype), mask=mask, scale=1.0 / _math.sqrt(hd))
+    y = y.reshape(b, s, acfg.n_heads * hd)
+    return C.dense(attn_params["wo"], y), {"k": ak, "v": av, "p": ap}
+
+
+def _ring_from_full(k_full, v_full, w):
+    """Convert full prefill K/V (B,S,KV,hd) to ring layout of width w."""
+    s = k_full.shape[1]
+    take = min(s, w)
+    positions = jnp.arange(s - take, s, dtype=jnp.int32)  # abs positions kept
+    slots = jnp.mod(positions, w)
+    nk = jnp.zeros(k_full.shape[:1] + (w,) + k_full.shape[2:], k_full.dtype)
+    nv = jnp.zeros_like(nk)
+    nk = nk.at[:, slots].set(k_full[:, -take:])
+    nv = nv.at[:, slots].set(v_full[:, -take:])
+    np_ = jnp.full((w,), -1, jnp.int32).at[slots].set(positions)
+    return nk, nv, np_

@@ -1,0 +1,17 @@
+from . import attention, core, dit, embedding, mlp, moe, rotary, ssm, xlstm
+from .core import Param, split, val
+
+__all__ = [
+    "attention",
+    "core",
+    "dit",
+    "embedding",
+    "mlp",
+    "moe",
+    "rotary",
+    "ssm",
+    "xlstm",
+    "Param",
+    "split",
+    "val",
+]

@@ -1,0 +1,163 @@
+"""Grouped-query attention with optional qk-norm, RoPE and KV cache.
+
+Shapes
+------
+x:        (B, S, D)
+q:        (B, S, H, hd)     k/v: (B, S, KV, hd)
+cache k/v:(B, S_max, KV, hd)   (decode: S == 1, write at ``pos``)
+
+Sharding: projections are constrained on their *flattened* feature dims
+(logical axes 'heads' / 'kv'), which stays valid for head counts that do
+not divide the mesh axis (e.g. smollm's 15 heads) — GSPMD re-shards around
+the head-split einsums as needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import core
+from .core import Param, val
+from .rotary import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    bias: bool = False
+    causal: bool = True
+    # sliding window (tokens); None = full attention
+    window: int | None = None
+
+
+def init(key, cfg: AttentionCfg, *, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    qd, kvd = cfg.n_heads * cfg.head_dim, cfg.n_kv_heads * cfg.head_dim
+    p = {
+        "wq": core.dense_init(kq, cfg.d_model, qd, bias=cfg.bias, axes=("embed", "heads"), dtype=dtype),
+        "wk": core.dense_init(kk, cfg.d_model, kvd, bias=cfg.bias, axes=("embed", "kv"), dtype=dtype),
+        "wv": core.dense_init(kv, cfg.d_model, kvd, bias=cfg.bias, axes=("embed", "kv"), dtype=dtype),
+        "wo": core.dense_init(ko, qd, cfg.d_model, bias=cfg.bias, axes=("heads", "embed"), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": Param(jnp.ones((cfg.head_dim,), dtype), (None,))}
+        p["k_norm"] = {"scale": Param(jnp.ones((cfg.head_dim,), dtype), (None,))}
+    return p
+
+
+def _headnorm(scale, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * val(scale).astype(jnp.float32)).astype(dt)
+
+
+def _sdpa(q, k, v, *, mask, scale):
+    """q: (B,Sq,H,hd) k/v: (B,Sk,KV,hd). GQA via head grouping."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, sq, kvh, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+# query-chunk size above which the full (Sq, Sk) score matrix is never
+# materialized (prefill at 32k would need O(S^2) HBM otherwise)
+CHUNK_Q = 4096
+
+
+def _sdpa_chunked(q, k, v, *, qpos, kpos, window, scale, chunk=CHUNK_Q):
+    """Query-chunked attention: peak memory O(chunk * Sk) instead of O(Sq*Sk).
+
+    Equivalent math (softmax is per-query-row). Serial lax.map over chunks
+    keeps one chunk's scores live at a time.
+    """
+    b, sq, h, hd = q.shape
+    n_chunks = sq // chunk
+
+    def fchunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, i * chunk, chunk, axis=0)
+        mask = qp[:, None] >= kpos[None, :]
+        if window is not None:
+            mask = mask & (qp[:, None] - kpos[None, :] < window)
+        return _sdpa(qs, k, v, mask=mask[None, None, None], scale=scale)
+
+    ys = jax.lax.map(fchunk, jnp.arange(n_chunks))  # (n_chunks, B, chunk, H, hd)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, sq, h, hd)
+
+
+def apply(
+    params: dict,
+    cfg: AttentionCfg,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: dict | None = None,
+    cache_pos: jax.Array | None = None,
+):
+    """Returns (y, new_cache). ``cache`` is None for training (full causal).
+
+    Decode: x is (B, 1, D), cache holds (B, S_max, KV, hd); new k/v written
+    at ``cache_pos`` (scalar int32) and attention runs over positions
+    <= cache_pos.
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = core.dense(params["wq"], x).reshape(b, s, h, hd)
+    k = core.dense(params["wk"], x).reshape(b, s, kvh, hd)
+    v = core.dense(params["wv"], x).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = _headnorm(params["q_norm"]["scale"], q)
+        k = _headnorm(params["k_norm"]["scale"], k)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+
+    if cache is None:
+        # training / prefill without a pre-allocated cache
+        qp = positions if positions.ndim else positions[None]
+        if cfg.causal and qp.ndim == 1 and s > CHUNK_Q and s % CHUNK_Q == 0:
+            y = _sdpa_chunked(q, k, v, qpos=qp, kpos=qp, window=cfg.window, scale=scale)
+        else:
+            if cfg.causal:
+                mask = qp[..., :, None] >= qp[..., None, :]  # (S,S) or (B,S,S)
+            else:  # bidirectional (DiT blocks)
+                mask = jnp.ones(qp.shape[-1:] + qp.shape[-1:], bool)
+            if cfg.window is not None:
+                mask = mask & (qp[..., :, None] - qp[..., None, :] < cfg.window)
+            if mask.ndim == 2:  # -> (1, 1, 1, Sq, Sk)
+                mask = mask[None, None, None]
+            else:  # (B, S, S) -> (B, 1, 1, Sq, Sk)
+                mask = mask[:, None, None]
+            y = _sdpa(q, k, v, mask=mask, scale=scale)
+        new_cache = {"k": k, "v": v}
+    else:
+        ck, cv = cache["k"], cache["v"]
+        s_max = ck.shape[1]
+        pos0 = cache_pos if cache_pos is not None else jnp.int32(0)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos0, 0, 0))
+        kpos = jnp.arange(s_max, dtype=jnp.int32)
+        qpos = pos0 + jnp.arange(s, dtype=jnp.int32)
+        mask = qpos[:, None] >= kpos[None, :]
+        if cfg.window is not None:
+            mask = mask & (qpos[:, None] - kpos[None, :] < cfg.window)
+        mask = mask[None, None, None]  # (1,1,1,Sq,Sk)
+        y = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask=mask, scale=scale)
+        new_cache = {"k": ck, "v": cv}
+
+    y = y.reshape(b, s, h * hd)
+    return core.dense(params["wo"], y), new_cache

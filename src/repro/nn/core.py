@@ -1,0 +1,255 @@
+"""Minimal functional NN substrate.
+
+Params are nested dicts of jnp arrays. Every parameter is created through
+:class:`Param`, which records a *logical axis name tuple* alongside the
+array. ``split(tree)`` separates the two so that the distributed layer can
+map logical names -> mesh PartitionSpecs (see repro.distributed.sharding).
+
+Apply functions accept either Param leaves (fresh from init, convenient in
+tests) or raw arrays (the common case inside jitted train/serve steps) —
+``val`` normalizes.
+
+No flax/haiku dependency: everything is explicit pytrees + pure functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Param plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Param:
+    """An array tagged with logical sharding axes (one name or None per dim).
+
+    Registered as a pytree node (axes are static aux data) so Param trees
+    pass transparently through jit/scan/grad; ``split`` strips the tags for
+    the hot paths.
+    """
+
+    value: jax.Array
+    axes: tuple[str | None, ...]
+    # NB: no rank validation — transforms like scan slice the value while the
+    # static axes tag keeps its stacked-rank form; axes are only interpreted
+    # by split()/sharding at the top level where ranks do line up.
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def val(x: Any) -> jax.Array:
+    return x.value if isinstance(x, Param) else x
+
+
+def split(tree: Any) -> tuple[Any, Any]:
+    """Split a tree of Params into (values, logical-axes) trees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _fan_in_out(shape: tuple[int, ...], in_axis=-2, out_axis=-1):
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = 1
+    for i, s in enumerate(shape):
+        if i not in (in_axis % len(shape), out_axis % len(shape)):
+            receptive *= s
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def lecun_init(key, shape, in_axis=-2, out_axis=-1, dtype=jnp.float32):
+    fan_in, _ = _fan_in_out(shape, in_axis, out_axis)
+    return (jax.random.normal(key, shape) / math.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / Conv
+# ---------------------------------------------------------------------------
+
+
+def dense_init(
+    key,
+    in_dim: int,
+    out_dim: int,
+    *,
+    bias: bool = False,
+    axes: tuple[str | None, str | None] = (None, None),
+    init: Callable = lecun_init,
+    dtype=jnp.float32,
+) -> dict:
+    p = {"w": Param(init(key, (in_dim, out_dim), dtype=dtype), axes)}
+    if bias:
+        p["b"] = Param(jnp.zeros((out_dim,), dtype), (axes[1],))
+    return p
+
+
+def dense(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ val(params["w"]).astype(x.dtype)
+    if "b" in params:
+        y = y + val(params["b"]).astype(y.dtype)
+    return y
+
+
+def conv2d_init(
+    key,
+    in_ch: int,
+    out_ch: int,
+    kernel: int,
+    *,
+    bias: bool = True,
+    axes=(None, None, None, "model"),
+    dtype=jnp.float32,
+) -> dict:
+    shape = (kernel, kernel, in_ch, out_ch)
+    p = {"w": Param(lecun_init(key, shape, in_axis=-2, out_axis=-1, dtype=dtype), axes)}
+    if bias:
+        p["b"] = Param(jnp.zeros((out_ch,), dtype), (axes[-1],))
+    return p
+
+
+def conv2d(params: dict, x: jax.Array, *, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x,
+        val(params["w"]).astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in params:
+        y = y + val(params["b"]).astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, *, dtype=jnp.float32) -> dict:
+    return {"scale": Param(jnp.ones((dim,), dtype), (None,))}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * val(params["scale"]).astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(dim: int, *, bias: bool = True, dtype=jnp.float32) -> dict:
+    p = {"scale": Param(jnp.ones((dim,), dtype), (None,))}
+    if bias:
+        p["b"] = Param(jnp.zeros((dim,), dtype), (None,))
+    return p
+
+
+def layernorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * val(params["scale"]).astype(jnp.float32)
+    if "b" in params:
+        y = y + val(params["b"]).astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def groupnorm_init(dim: int, *, dtype=jnp.float32) -> dict:
+    return {
+        "scale": Param(jnp.ones((dim,), dtype), (None,)),
+        "b": Param(jnp.zeros((dim,), dtype), (None,)),
+    }
+
+
+def groupnorm(params: dict, x: jax.Array, *, groups: int = 32, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the channel (last) dim of NHWC / (..., C) input."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    c = x.shape[-1]
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    shape = x.shape[:-1] + (g, c // g)
+    xg = x.reshape(shape)
+    red = tuple(range(1, len(shape) - 2)) + (len(shape) - 1,)
+    mu = jnp.mean(xg, axis=red, keepdims=True)
+    var = jnp.var(xg, axis=red, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(x.shape) * val(params["scale"]) + val(params["b"])
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (remat) scan — recurrent layers at long sequence length
+# ---------------------------------------------------------------------------
+
+
+def segmented_scan(cell: Callable, init, xs, *, segment: int = 256):
+    """lax.scan over time with gradient checkpointing at segment boundaries.
+
+    ``xs`` leaves are time-leading. Backward recomputes within each segment,
+    so residual memory is O(S/segment * state) instead of O(S * state) —
+    what makes 4k-token training of the recurrent archs feasible.
+    Numerically identical to a plain scan.
+    """
+    import numpy as np
+
+    length = jax.tree.leaves(xs)[0].shape[0]
+    seg = int(np.gcd(segment, length)) if length % segment else segment
+    if seg <= 1 or length <= seg:
+        return jax.lax.scan(cell, init, xs)
+    n_seg = length // seg
+    xs_seg = jax.tree.map(lambda a: a.reshape((n_seg, seg) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def seg_body(carry, seg_xs):
+        return jax.lax.scan(cell, carry, seg_xs)
+
+    carry, ys = jax.lax.scan(seg_body, init, xs_seg)
+    ys = jax.tree.map(lambda a: a.reshape((length,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Activations (the Ditto graph layer references these by name)
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "softmax": jax.nn.softmax,
+    "identity": lambda x: x,
+}

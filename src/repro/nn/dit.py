@@ -1,0 +1,141 @@
+"""DiT (Diffusion Transformer) building blocks — the paper's own arch family.
+
+adaLN-Zero conditioning per Peebles & Xie (DiT): each block receives a
+conditioning vector c (timestep [+ class]) and produces shift/scale/gate
+for both the attention and MLP branches. Final layer: adaLN + linear to
+patch pixels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import core, mlp
+from .core import Param, val
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTCfg:
+    d_model: int
+    n_layers: int
+    n_heads: int
+    patch: int = 2
+    in_channels: int = 4
+    input_size: int = 32  # latent H=W
+    mlp_ratio: float = 4.0
+    n_classes: int = 0  # 0 = unconditional
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.input_size // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.in_channels
+
+
+def timestep_embedding(t: jax.Array, dim: int, *, max_period: float = 10000.0) -> jax.Array:
+    """Sinusoidal embedding of (B,) timesteps -> (B, dim). float32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def init(key, cfg: DiTCfg, *, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {
+        "patch_embed": core.dense_init(keys[0], cfg.patch_dim, d, bias=True, axes=(None, "embed"), dtype=dtype),
+        "pos_embed": Param(core.normal_init(keys[1], (cfg.n_tokens, d), stddev=0.02, dtype=dtype), (None, "embed")),
+        "t_mlp1": core.dense_init(keys[2], 256, d, bias=True, axes=(None, "embed"), dtype=dtype),
+        "t_mlp2": core.dense_init(keys[3], d, d, bias=True, axes=("embed", "embed2"), dtype=dtype),
+        "final_mod": core.dense_init(keys[4], d, 2 * d, bias=True, axes=("embed", None), dtype=dtype),
+        "final_out": core.dense_init(keys[5], d, cfg.patch_dim, bias=True, axes=("embed", None), dtype=dtype),
+    }
+    if cfg.n_classes:
+        p["label_embed"] = Param(
+            core.normal_init(keys[6], (cfg.n_classes + 1, d), stddev=0.02, dtype=dtype), (None, "embed")
+        )
+    # stacked per-layer params (scan over layers)
+    acfg = attn.AttentionCfg(d, cfg.n_heads, cfg.n_heads, cfg.head_dim, causal=False, bias=True)
+    mcfg = mlp.MlpCfg(d, int(cfg.mlp_ratio * d), act="gelu", bias=True)
+
+    def one_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "attn": attn.init(k1, acfg, dtype=dtype),
+            "mlp": mlp.init(k2, mcfg, dtype=dtype),
+            # adaLN-zero: output 6*d, zero-init
+            "mod": core.dense_init(k3, d, 6 * d, bias=True, axes=("embed", None), init=core.zeros_init, dtype=dtype),
+        }
+
+    blocks = [one_block(k) for k in jax.random.split(keys[7], cfg.n_layers)]
+    p["blocks"] = jax.tree.map(
+        lambda *xs: Param(jnp.stack([x.value for x in xs]), ("layer",) + xs[0].axes),
+        *blocks,
+        is_leaf=core.is_param,
+    )
+    return p
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _ln(x, eps=1e-6):
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+    return ((x.astype(jnp.float32) - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def block_apply(bp: dict, cfg: DiTCfg, x: jax.Array, c: jax.Array) -> jax.Array:
+    """One DiT block. x: (B,T,D), c: (B,D)."""
+    d = cfg.d_model
+    acfg = attn.AttentionCfg(d, cfg.n_heads, cfg.n_heads, cfg.head_dim, causal=False, bias=True)
+    mcfg = mlp.MlpCfg(d, int(cfg.mlp_ratio * d), act="gelu", bias=True)
+    mod = core.dense(bp["mod"], jax.nn.silu(c))
+    sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    h = _modulate(_ln(x), sh_a, sc_a)
+    a, _ = attn.apply(bp["attn"], acfg, h, positions=positions)
+    x = x + g_a[:, None, :] * a
+    h = _modulate(_ln(x), sh_m, sc_m)
+    x = x + g_m[:, None, :] * mlp.apply(bp["mlp"], mcfg, h)
+    return x
+
+
+def apply(params: dict, cfg: DiTCfg, latents: jax.Array, t: jax.Array, labels: jax.Array | None = None):
+    """latents: (B, H, W, C) -> predicted noise (B, H, W, C). t: (B,)."""
+    b, hh, ww, ch = latents.shape
+    pp = cfg.patch
+    # patchify (B, T, patch_dim)
+    x = latents.reshape(b, hh // pp, pp, ww // pp, pp, ch)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, cfg.n_tokens, cfg.patch_dim)
+    x = core.dense(params["patch_embed"], x) + val(params["pos_embed"]).astype(latents.dtype)[None]
+
+    c = timestep_embedding(t, 256)
+    c = core.dense(params["t_mlp2"], jax.nn.silu(core.dense(params["t_mlp1"], c.astype(latents.dtype))))
+    if labels is not None and "label_embed" in params:
+        c = c + val(params["label_embed"]).astype(latents.dtype)[labels]
+
+    def body(x, bp):
+        return block_apply(bp, cfg, x, c), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    mod = core.dense(params["final_mod"], jax.nn.silu(c))
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    x = _modulate(_ln(x), shift, scale)
+    x = core.dense(params["final_out"], x)  # (B, T, patch_dim)
+    # unpatchify
+    x = x.reshape(b, hh // pp, ww // pp, pp, pp, ch).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, hh, ww, ch)

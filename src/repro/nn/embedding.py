@@ -1,0 +1,28 @@
+"""Token embedding + LM head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import core
+from .core import Param, val
+
+
+def embed_init(key, vocab: int, d_model: int, *, dtype=jnp.float32) -> dict:
+    return {"table": Param(core.normal_init(key, (vocab, d_model), stddev=0.02, dtype=dtype), ("vocab", "embed"))}
+
+
+def embed(params: dict, tokens: jax.Array, *, scale: float = 1.0) -> jax.Array:
+    table = val(params["table"])
+    y = jnp.take(table, tokens, axis=0)
+    return y * jnp.asarray(scale, y.dtype) if scale != 1.0 else y
+
+
+def head_init(key, d_model: int, vocab: int, *, dtype=jnp.float32) -> dict:
+    return {"w": Param(core.normal_init(key, (d_model, vocab), stddev=0.02, dtype=dtype), ("embed", "vocab"))}
+
+
+def logits(params: dict, x: jax.Array, *, tied_table: jax.Array | None = None) -> jax.Array:
+    if tied_table is not None:
+        return x @ val(tied_table).astype(x.dtype).T
+    return x @ val(params["w"]).astype(x.dtype)

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU / GELU MLPs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import core
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpCfg:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"  # swiglu | gelu | silu | geglu
+    bias: bool = False
+
+
+def init(key, cfg: MlpCfg, *, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wg": core.dense_init(k1, cfg.d_model, cfg.d_ff, bias=cfg.bias, axes=("embed", "mlp"), dtype=dtype),
+            "wu": core.dense_init(k2, cfg.d_model, cfg.d_ff, bias=cfg.bias, axes=("embed", "mlp"), dtype=dtype),
+            "wd": core.dense_init(k3, cfg.d_ff, cfg.d_model, bias=cfg.bias, axes=("mlp", "embed"), dtype=dtype),
+        }
+    return {
+        "wi": core.dense_init(k1, cfg.d_model, cfg.d_ff, bias=cfg.bias, axes=("embed", "mlp"), dtype=dtype),
+        "wo": core.dense_init(k2, cfg.d_ff, cfg.d_model, bias=cfg.bias, axes=("mlp", "embed"), dtype=dtype),
+    }
+
+
+def apply(params: dict, cfg: MlpCfg, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        return core.dense(params["wd"], jax.nn.silu(core.dense(params["wg"], x)) * core.dense(params["wu"], x))
+    if cfg.act == "geglu":
+        return core.dense(params["wd"], jax.nn.gelu(core.dense(params["wg"], x)) * core.dense(params["wu"], x))
+    act = core.ACTIVATIONS[cfg.act]
+    return core.dense(params["wo"], act(core.dense(params["wi"], x)))

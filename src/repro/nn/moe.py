@@ -1,0 +1,184 @@
+"""Mixture-of-Experts layer (top-k routing, grouped capacity dispatch).
+
+Dispatch is *group-local* scatter/gather: tokens are split into groups
+(one group per sequence for train/prefill), each group routes into its own
+(E, C_g, D) buffer with group-relative indices. Because every index is
+local to a group and groups ride the batch ('data') mesh axis, GSPMD
+partitions the scatter/gather over groups instead of replicating global
+token indices — this is what keeps the 480B-config MoE cells inside HBM
+(a global-index variant replicates O(T*D) buffers per device).
+
+HLO FLOPs stay proportional to *active* experts (no GShard one-hot
+dispatch einsum), keeping the roofline MODEL_FLOPS/HLO_FLOPs ratio honest.
+
+Supports shared experts with sigmoid gate (qwen2-moe), a parallel dense
+residual FFN (arctic), and a switch-style load-balancing aux loss. Expert
+weights are stacked on a leading 'expert' logical axis (EP over 'model'
+when E divides the axis; replicated otherwise, e.g. qwen2-moe's 60).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import core, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # shared experts (qwen2-moe): ff dim of the always-on expert, 0 = none
+    d_ff_shared: int = 0
+    shared_gate: bool = True
+    # arctic-style dense residual FFN running in parallel, 0 = none
+    d_ff_dense: int = 0
+    act: str = "swiglu"
+    # int8 FSDP weight gathers (straight-through): halves the all-gather
+    # wire bytes of FSDP-sharded expert weights (tried for the 480B config;
+    # REFUTED in §Perf arctic iteration B — kept as an option)
+    w8_gather: bool = False
+    # shard the expert ff dim over 'data' instead of FSDP'ing the embed dim:
+    # the contractions then REDUCE small activation buffers across data
+    # instead of ALL-GATHERING expert weights every microbatch (§Perf C)
+    ep_ff_data: bool = False
+
+
+def init(key, cfg: MoeCfg, *, dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd, ks, ksg, kdn = jax.random.split(key, 7)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+
+    def stacked(k, shape, axes):
+        return core.Param(core.lecun_init(k, shape, in_axis=-2, out_axis=-1, dtype=dtype), axes)
+
+    if cfg.ep_ff_data:  # EP + ff-over-data: no weight gathers (§Perf C)
+        wg_axes, wu_axes = ("expert", None, "moe_ff"), ("expert", None, "moe_ff")
+        wd_axes = ("expert", "moe_ff", None)
+    else:  # EP + FSDP over embed (default)
+        wg_axes, wu_axes = ("expert", "embed", "mlp"), ("expert", "embed", "mlp")
+        wd_axes = ("expert", "mlp", "embed")
+    p = {
+        "router": core.dense_init(kr, d, e, axes=("embed", None), dtype=jnp.float32),
+        "wg": stacked(kg, (e, d, f), wg_axes),
+        "wu": stacked(ku, (e, d, f), wu_axes),
+        "wd": stacked(kd, (e, f, d), wd_axes),
+    }
+    if cfg.d_ff_shared:
+        p["shared"] = mlp.init(ks, mlp.MlpCfg(d, cfg.d_ff_shared, act=cfg.act), dtype=dtype)
+        if cfg.shared_gate:
+            p["shared_gate"] = core.dense_init(ksg, d, 1, axes=("embed", None), dtype=dtype)
+    if cfg.d_ff_dense:
+        p["dense"] = mlp.init(kdn, mlp.MlpCfg(d, cfg.d_ff_dense, act=cfg.act), dtype=dtype)
+    return p
+
+
+def _choose_groups(b: int, s: int) -> int:
+    # one group per sequence for long inputs; single group for decode
+    return b if s >= 64 else 1
+
+
+def _make_w8_gather(shard):
+    """Quantize-then-gather for FSDP expert weights, straight-through grad.
+
+    The int8 payload is explicitly resharded (constraint drops the 'embed'
+    FSDP axis) so the all-gather moves 1 byte/element instead of 2; the
+    bf16 master is never gathered. Backward is identity: the cotangent
+    reshards back to the FSDP layout and the usual grad reduction follows.
+    """
+
+    @jax.custom_vjp
+    def w8(w):
+        scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1, keepdims=True) / 127.0
+        scale = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        q = shard(q, ("expert", None, None))  # <- int8 all-gather site
+        return q.astype(w.dtype) * scale.astype(w.dtype)
+
+    def fwd(w):
+        return w8(w), None
+
+    def bwd(_, g):
+        return (g,)
+
+    w8.defvjp(fwd, bwd)
+    return w8
+
+
+def apply(params: dict, cfg: MoeCfg, x: jax.Array, *, shard=None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    ``shard``: optional fn(array, logical_axes) -> array applying a sharding
+    constraint (wired from repro.distributed.sharding); identity if None.
+    """
+    shard = shard or (lambda a, _axes: a)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = _choose_groups(b, s)
+    n = t // g  # tokens per group
+    xg = x.reshape(g, n, d)
+    xg = shard(xg, ("batch", None, None))
+
+    logits = (xg.astype(jnp.float32) @ core.val(params["router"]["w"])).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, N, E)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (G, N, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- load-balancing aux (switch-style) ----
+    density = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_probs)
+
+    # ---- group-local capacity dispatch ----
+    cap = max(int(cfg.capacity_factor * n * k / e), 1)
+    flat_e = top_i.reshape(g, n * k)  # group-local expert ids
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (G, N*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    pos = jnp.where(keep, pos, cap - 1)
+    tok_idx = jnp.repeat(jnp.arange(n), k)  # (N*k,) group-relative, static
+
+    def scatter_group(xg_n, eid, p_, kp):
+        contrib = jnp.where(kp[:, None], xg_n[tok_idx], 0)
+        return jnp.zeros((e, cap, d), x.dtype).at[eid, p_].add(contrib, mode="drop")
+
+    buf = jax.vmap(scatter_group)(xg, flat_e, pos, keep)  # (G, E, C, D)
+    buf = shard(buf, ("batch", "expert", None, None))
+
+    # ---- expert FFNs on stacked weights (batch dims g,e stay local) ----
+    wg, wu, wd = core.val(params["wg"]), core.val(params["wu"]), core.val(params["wd"])
+    if cfg.w8_gather:
+        w8 = _make_w8_gather(shard)
+        wg, wu, wd = w8(wg), w8(wu), w8(wd)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg.astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, wu.astype(x.dtype))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, wd.astype(x.dtype))  # (G, E, C, D)
+    out_buf = shard(out_buf, ("batch", None, None, None))  # gather experts per group
+
+    # ---- combine (group-local gather) ----
+    wts = (top_p.reshape(g, n * k) * keep).astype(x.dtype)
+
+    def combine_group(ob, eid, p_, w_):
+        y_slots = ob[eid, p_] * w_[:, None]
+        return jnp.zeros((n, d), x.dtype).at[tok_idx].add(y_slots)
+
+    y = jax.vmap(combine_group)(out_buf, flat_e, pos, wts)  # (G, N, D)
+    y = y.reshape(b, s, d)
+
+    # shared / dense-residual paths stay on (b, s, d): reshaping to (t, d)
+    # would merge the ('pod','data')-sharded batch dim and GSPMD falls back
+    # to full replication on the multi-pod mesh.
+    if "shared" in params:
+        sh_out = mlp.apply(params["shared"], mlp.MlpCfg(d, cfg.d_ff_shared, act=cfg.act), x)
+        if "shared_gate" in params:
+            gate = jax.nn.sigmoid(core.dense(params["shared_gate"], x).astype(jnp.float32))
+            sh_out = sh_out * gate.astype(x.dtype)
+        y = y + sh_out
+    if "dense" in params:
+        y = y + mlp.apply(params["dense"], mlp.MlpCfg(d, cfg.d_ff_dense, act=cfg.act), x)
+    return y, aux

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for half the head dim. float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float = 10000.0) -> jnp.ndarray:
+    """Apply RoPE to ``x`` of shape (..., seq, heads, head_dim).
+
+    ``positions`` broadcasts against the seq dim: shape (seq,) or (batch, seq).
+    Uses the split-halves convention (rotate_half), fp32 internally.
+    """
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta=theta)  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    # align ranks: x is (..., seq, heads, head_dim) -> angles (..., seq, 1, half)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)

@@ -1,0 +1,201 @@
+"""Mamba2-style selective state-space block (recurrent formulation).
+
+State: h (B, H, P, N)  with H=n_heads, P=head_dim, N=d_state.
+Recurrence per step t:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = (h_t @ C_t) + D * x_t
+Projections are kept *separate* (wz/wx/wB/wC/wdt) instead of one fused
+in_proj so each output dim carries a clean logical sharding axis; a
+depthwise causal conv precedes x/B/C (equivalent to Mamba2's conv over the
+concatenated xBC since the conv is depthwise).
+
+Train path scans over time (compact While HLO, remat-friendly); decode
+path is the same cell applied once with carried state — O(1) per token,
+which is what makes the 500k-decode cells sub-quadratic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import core
+from .core import Param, val
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    n_groups: int = 1
+    # 'ssd' (chunked matmul form, production) | 'recurrent' (reference).
+    # SSD materializes state only at chunk boundaries: HBM state traffic
+    # drops by ~chunk_size and the inner work becomes MXU matmuls — see
+    # EXPERIMENTS.md §Perf (zamba2 train_4k hillclimb).
+    impl: str = "ssd"
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init(key, cfg: MambaCfg, *, dtype=jnp.float32) -> dict:
+    kz, kx, kb, kc, kdt, ko, kcv = jax.random.split(key, 7)
+    d, di = cfg.d_model, cfg.d_inner
+    gn = cfg.n_groups * cfg.d_state
+    conv_dim = di + 2 * gn
+    p = {
+        "wz": core.dense_init(kz, d, di, axes=("embed", "mlp"), dtype=dtype),
+        "wx": core.dense_init(kx, d, di, axes=("embed", "mlp"), dtype=dtype),
+        "wB": core.dense_init(kb, d, gn, axes=("embed", None), dtype=dtype),
+        "wC": core.dense_init(kc, d, gn, axes=("embed", None), dtype=dtype),
+        "wdt": core.dense_init(kdt, d, cfg.n_heads, axes=("embed", None), dtype=dtype),
+        "conv_w": Param(core.lecun_init(kcv, (cfg.conv_width, conv_dim), dtype=dtype), (None, "mlp")),
+        "conv_b": Param(jnp.zeros((conv_dim,), dtype), ("mlp",)),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(jnp.float32), (None,)),
+        "D": Param(jnp.ones((cfg.n_heads,), jnp.float32), (None,)),
+        "dt_bias": Param(jnp.zeros((cfg.n_heads,), jnp.float32), (None,)),
+        "norm": core.rmsnorm_init(di, dtype=dtype),
+        "wo": core.dense_init(ko, di, d, axes=("mlp", "embed"), dtype=dtype),
+    }
+    return p
+
+
+def _causal_depthwise_conv(w, b, x, conv_state=None):
+    """x: (B, S, C); w: (W, C). Returns (y, new_conv_state (B, W-1, C))."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(width))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1) :, :] if width > 1 else pad
+    return y, new_state
+
+
+def _cell(h, inputs, *, A, D, n_heads, head_dim, d_state):
+    """One recurrence step. h: (B,H,P,N); inputs: per-step tensors."""
+    x_t, b_t, c_t, dt_t = inputs  # (B,DI) (B,N) (B,N) (B,H)
+    bsz = x_t.shape[0]
+    xh = x_t.reshape(bsz, n_heads, head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A)[..., None, None]  # (B,H,1,1) A<0
+    upd = (dt_t.astype(jnp.float32)[..., None, None]
+           * xh[..., None] * b_t.astype(jnp.float32)[:, None, None, :])
+    h = h * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(jnp.float32))
+    y = y + D[None, :, None] * xh
+    return h, y.reshape(bsz, n_heads * head_dim)
+
+
+def apply(params, cfg: MambaCfg, x, *, state=None, conv_state=None):
+    """x: (B, S, D). Returns (y, (ssm_state, conv_state))."""
+    b, s, _ = x.shape
+    z = core.dense(params["wz"], x)
+    xi = core.dense(params["wx"], x)
+    bb = core.dense(params["wB"], x)
+    cc = core.dense(params["wC"], x)
+    dt = core.dense(params["wdt"], x)
+
+    conv_in = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_out, new_conv = _causal_depthwise_conv(val(params["conv_w"]), val(params["conv_b"]), conv_in, conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    xi, bb, cc = conv_out[..., :di], conv_out[..., di : di + gn], conv_out[..., di + gn :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + val(params["dt_bias"]))
+    A = -jnp.exp(val(params["A_log"]))  # (H,), negative
+    D = val(params["D"])
+
+    if state is None:
+        state = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32)
+
+    if cfg.impl == "ssd" and s % cfg.chunk == 0 and s > 1:
+        y, new_state = _ssd_chunked(xi, bb, cc, dt, state, A=A, D=D, cfg=cfg)
+    else:
+        def step(h, ins):
+            return _cell(h, ins, A=A, D=D, n_heads=cfg.n_heads, head_dim=cfg.head_dim, d_state=cfg.d_state)
+
+        # scan over time (axis 1 -> axis 0)
+        xs = (
+            jnp.moveaxis(xi, 1, 0),
+            jnp.moveaxis(bb, 1, 0),
+            jnp.moveaxis(cc, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+        )
+        new_state, ys = core.segmented_scan(step, state, xs)
+        y = jnp.moveaxis(ys, 0, 1)  # (B, S, DI)
+    y = y.astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = core.rmsnorm(params["norm"], y)
+    return core.dense(params["wo"], y), (new_state, new_conv)
+
+
+def _ssd_chunked(xi, bb, cc, dt, h0, *, A, D, cfg: MambaCfg):
+    """Chunked SSD (Mamba2) — numerically equal to the recurrence.
+
+    Within a chunk the causal mix is an attention-like masked matmul
+    (C_i·B_j decayed); states materialize only at chunk boundaries:
+        y_i   = exp(cum_i) C_i h_prev                       (inter-chunk)
+              + sum_{j<=i} (C_i·B_j) exp(cum_i - cum_j) dt_j x_j   (intra)
+        h_new = exp(cum_last) h_prev + sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    All decay exponents are <= 0 (A < 0, dt > 0): numerically stable.
+    """
+    b, s, _ = xi.shape
+    hh, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    c = cfg.chunk
+    nch = s // c
+    # streaming tensors stay in the activation dtype (bf16 on TPU): the
+    # fp32 copies doubled the dominant HBM traffic (§Perf iteration 3);
+    # the gate/decay math and the carried state stay fp32 (exp precision
+    # and cross-chunk accumulation).
+    sdt = xi.dtype
+    xh = xi.reshape(b, nch, c, hh, p)
+    bbc = bb.reshape(b, nch, c, n)
+    ccc = cc.reshape(b, nch, c, n)
+    dtc = dt.astype(jnp.float32).reshape(b, nch, c, hh)
+
+    def chunk_body(h_prev, ins):
+        xck, bck, cck, dck = ins  # (b,c,h,p) (b,c,n) (b,c,n) (b,c,h)
+        a_log = dck * A  # (b,c,h) fp32, negative
+        cum = jnp.cumsum(a_log, axis=1)  # (b,c,h)
+        # inter-chunk: decayed read of the carried state
+        y_inter = jnp.einsum("bcn,bhpn->bchp", cck.astype(jnp.float32), h_prev,
+                             preferred_element_type=jnp.float32)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # intra-chunk: causal decayed attention-like mix. The exponent is
+        # masked BEFORE exp: for j > i it is positive and overflows, and
+        # where(mask, inf, 0) still propagates NaN gradients.
+        cb = jnp.einsum("bin,bjn->bij", cck, bck, preferred_element_type=jnp.float32)
+        mask = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+        expo = cum[:, :, None, :] - cum[:, None, :, :]  # (b,i,j,h)
+        ldecay = jnp.exp(jnp.where(mask, expo, -jnp.inf))
+        scores = (cb[..., None] * ldecay * dck[:, None, :, :]).astype(sdt)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xck,
+                             preferred_element_type=jnp.float32)
+        # carry update (fp32)
+        w = jnp.exp(cum[:, -1:, :] - cum) * dck  # (b,c,h)
+        h_new = (
+            jnp.exp(cum[:, -1])[..., None, None] * h_prev
+            + jnp.einsum("bch,bcn,bchp->bhpn", w, bck.astype(jnp.float32),
+                         xck.astype(jnp.float32), preferred_element_type=jnp.float32)
+        )
+        y = y_inter + y_intra + D[None, None, :, None] * xck.astype(jnp.float32)
+        return h_new, y.astype(sdt).reshape(b, c, hh * p)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xh, bbc, ccc, dtc))
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)  # ys: (nch, b, c, di)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, hh * p)
+    return y, h_final

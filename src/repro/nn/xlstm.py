@@ -1,0 +1,249 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to arXiv:2405.04517 at the block level with stabilized
+exponential gating; recurrent scan over time (decode is the same cell with
+carried state -> O(1)/token, sub-quadratic at 500k context).
+
+mLSTM state: C (B,H,P,P), n (B,H,P), m (B,H)    [P = head dim]
+sLSTM state: c,n,h (B,H,P), m (B,H)             [h feeds back recurrently]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import core
+from .core import Param, val
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmCfg:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0  # mLSTM up-projection
+    slstm_ffn_factor: float = 1.3333  # sLSTM post-FFN
+    # mLSTM execution: 'chunked' (matmul form — state hits HBM only at
+    # chunk boundaries, same idea as Mamba2 SSD; see EXPERIMENTS.md §Perf)
+    # or 'recurrent' (reference cell). Decode always uses the cell.
+    impl: str = "chunked"
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: XlstmCfg, *, dtype=jnp.float32) -> dict:
+    ku, kg, kq, kk, kv, ki, kf, ko, kn = jax.random.split(key, 9)
+    d, di = cfg.d_model, cfg.d_inner
+    return {
+        "w_up": core.dense_init(ku, d, di, axes=("embed", "mlp"), dtype=dtype),
+        "w_gate": core.dense_init(kg, d, di, axes=("embed", "mlp"), dtype=dtype),
+        "wq": core.dense_init(kq, di, di, axes=("mlp", "heads"), dtype=dtype),
+        "wk": core.dense_init(kk, di, di, axes=("mlp", "heads"), dtype=dtype),
+        "wv": core.dense_init(kv, di, di, axes=("mlp", "heads"), dtype=dtype),
+        "wi": core.dense_init(ki, di, cfg.n_heads, axes=("mlp", None), dtype=dtype),
+        "wf": core.dense_init(kf, di, cfg.n_heads, axes=("mlp", None), dtype=dtype),
+        "norm": core.rmsnorm_init(di, dtype=dtype),
+        "w_down": core.dense_init(ko, di, d, axes=("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _mlstm_cell(state, ins, *, n_heads, head_dim):
+    C, n, m = state
+    q, k, v, it, ft = ins  # (B,DI) (B,DI) (B,DI) (B,H) (B,H)
+    bsz = q.shape[0]
+    qh = q.reshape(bsz, n_heads, head_dim).astype(jnp.float32) / jnp.sqrt(head_dim)
+    kh = k.reshape(bsz, n_heads, head_dim).astype(jnp.float32) / jnp.sqrt(head_dim)
+    vh = v.reshape(bsz, n_heads, head_dim).astype(jnp.float32)
+    it = it.astype(jnp.float32)
+    ft = ft.astype(jnp.float32)
+    # stabilized exponential gating
+    log_f = -jax.nn.softplus(-ft)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, it)
+    i_g = jnp.exp(it - m_new)[..., None, None]
+    f_g = jnp.exp(log_f + m - m_new)[..., None, None]
+    C = f_g * C + i_g * (vh[..., :, None] * kh[..., None, :])  # (B,H,P,P)
+    n = f_g[..., 0] * n + i_g[..., 0] * kh
+    num = jnp.einsum("bhpq,bhq->bhp", C, qh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qh)), 1.0)[..., None]
+    y = (num / den).reshape(bsz, n_heads * head_dim)
+    return (C, n, m_new), y
+
+
+def mlstm_apply(params, cfg: XlstmCfg, x, *, state=None):
+    """x: (B,S,D) -> (y, state)."""
+    b, s, _ = x.shape
+    h, p = cfg.n_heads, cfg.head_dim
+    up = core.dense(params["w_up"], x)
+    gate = jax.nn.silu(core.dense(params["w_gate"], x))
+    q = core.dense(params["wq"], up)
+    k = core.dense(params["wk"], up)
+    v = core.dense(params["wv"], up)
+    it = core.dense(params["wi"], up)
+    ft = core.dense(params["wf"], up)
+    if state is None:
+        state = (
+            jnp.zeros((b, h, p, p), jnp.float32),
+            jnp.zeros((b, h, p), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32),
+        )
+    if cfg.impl == "chunked" and s % cfg.chunk == 0 and s > 1:
+        y, new_state = _mlstm_chunked(q, k, v, it, ft, state, n_heads=h, head_dim=p, chunk=cfg.chunk)
+    else:
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, it, ft))
+        new_state, ys = core.segmented_scan(
+            lambda st, ins: _mlstm_cell(st, ins, n_heads=h, head_dim=p), state, xs
+        )
+        y = jnp.moveaxis(ys, 0, 1)
+    y = y.astype(x.dtype)
+    y = core.rmsnorm(params["norm"], y) * gate
+    return core.dense(params["w_down"], y), new_state
+
+
+def _mlstm_chunked(q, k, v, it, ft, state, *, n_heads, head_dim, chunk):
+    """Chunked (linear-attention) mLSTM, numerically equal to the cell.
+
+    Stabilized gating in chunk form: with per-chunk cumulative log-forget
+    b_j and absolute log-input a_j, the running stabilizer is
+        m_i = b_i + g_i,   g_i = max(m_prev, cummax_{j<=i}(a_j - b_j)),
+    so every exponent (a_j - b_j - g_i, m_prev - g_i) is <= 0 — stable.
+    State (C, n, m) materializes only at chunk boundaries.
+    """
+    b, s, _ = q.shape
+    hh, p = n_heads, head_dim
+    c = chunk
+    nch = s // c
+    sqrt_p = jnp.sqrt(jnp.float32(p))
+
+    def resh(a):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(b, nch, c, hh, p), 1, 0
+        )  # (nch, b, c, h, p)
+
+    qs, ks = resh(q) / sqrt_p, resh(k) / sqrt_p
+    vs = resh(v)  # unscaled, as in the recurrent cell
+    its = jnp.moveaxis(it.astype(jnp.float32).reshape(b, nch, c, hh), 1, 0)
+    fts = jnp.moveaxis(ft.astype(jnp.float32).reshape(b, nch, c, hh), 1, 0)
+
+    def chunk_body(carry, ins):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, ic, fc = ins  # (b,c,h,p) x3, (b,c,h) x2
+        lf = -jax.nn.softplus(-fc)  # log sigmoid(f)
+        bcum = jnp.cumsum(lf, axis=1)  # (b,c,h)
+        a_rel = ic - bcum  # (b,c,h)
+        g = jnp.maximum(jnp.maximum.accumulate(a_rel, axis=1), m_prev[:, None, :])  # (b,c,h)
+        # inter-chunk: C[p, r] = v_p k_r, so q contracts the k-index r
+        inter_w = jnp.exp(m_prev[:, None, :] - g)  # (b,c,h)
+        y_inter = jnp.einsum("bchr,bhpr->bchp", qc, C_prev) * inter_w[..., None]
+        nq_inter = jnp.einsum("bchp,bhp->bch", qc, n_prev) * inter_w
+        # intra-chunk (causal)
+        mask = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+        w_ij = jnp.exp(jnp.where(mask, a_rel[:, None, :, :] - g[:, :, None, :], -jnp.inf))  # (b,i,j,h)
+        qk = jnp.einsum("bihp,bjhp->bijh", qc, kc)  # (b,i,j,h)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", qk * w_ij, vc)
+        nq_intra = jnp.einsum("bijh->bih", qk * w_ij)
+        num = y_inter + y_intra
+        den = jnp.maximum(jnp.abs(nq_inter + nq_intra), 1.0)[..., None]
+        y = num / den
+        # carry update at chunk end
+        g_last = g[:, -1, :]  # (b,h)
+        w_j = jnp.exp(a_rel - g_last[:, None, :])  # (b,j,h)
+        C_new = jnp.exp(m_prev - g_last)[..., None, None] * C_prev + jnp.einsum(
+            "bjh,bjhp,bjhr->bhpr", w_j, vc, kc
+        )
+        n_new = jnp.exp(m_prev - g_last)[..., None] * n_prev + jnp.einsum("bjh,bjhp->bhp", w_j, kc)
+        m_new = bcum[:, -1, :] + g_last  # absolute stabilizer, as the cell carries
+        return (C_new, n_new, m_new), y.reshape(b, c, hh * p)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    (C_f, n_f, m_f), ys = jax.lax.scan(chunk_body, state, (qs, ks, vs, its, fts))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, hh * p)
+    return y, (C_f, n_f, m_f)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: XlstmCfg, *, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 10)
+    d = cfg.d_model
+    hd, nh = cfg.s_head_dim, cfg.n_heads
+    p = {"norm": core.rmsnorm_init(d, dtype=dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = core.dense_init(keys[i], d, d, axes=("embed", "heads"), dtype=dtype)
+        # head-local recurrent weights (B block-diagonal recurrence)
+        p[f"r{g}"] = Param(
+            core.normal_init(keys[4 + i], (nh, hd, hd), stddev=1.0 / jnp.sqrt(hd), dtype=dtype),
+            (None, "heads", None),
+        )
+    f_ff = int(cfg.slstm_ffn_factor * d)
+    p["ffn_up"] = core.dense_init(keys[8], d, f_ff, axes=("embed", "mlp"), dtype=dtype)
+    p["ffn_down"] = core.dense_init(keys[9], f_ff, d, axes=("mlp", "embed"), dtype=dtype)
+    return p
+
+
+def _slstm_cell(state, ins, *, params, n_heads, head_dim):
+    c, n, hprev, m = state
+    xi, xf, xz, xo = ins  # each (B, D)
+    bsz = xi.shape[0]
+
+    def rec(name, h):
+        r = val(params[name]).astype(jnp.float32)
+        return jnp.einsum("bhp,hpq->bhq", h, r).reshape(bsz, n_heads * head_dim)
+
+    hp = hprev.reshape(bsz, n_heads, head_dim)
+    it = (xi.astype(jnp.float32) + rec("ri", hp)).reshape(bsz, n_heads, head_dim)
+    ft = (xf.astype(jnp.float32) + rec("rf", hp)).reshape(bsz, n_heads, head_dim)
+    zt = (xz.astype(jnp.float32) + rec("rz", hp)).reshape(bsz, n_heads, head_dim)
+    ot = (xo.astype(jnp.float32) + rec("ro", hp)).reshape(bsz, n_heads, head_dim)
+    # stabilized exp gating (per head, scalar stabilizer over head dims)
+    log_f = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(log_f + m[..., None], it).max(axis=-1)  # (B,H)
+    i_g = jnp.exp(it - m_new[..., None])
+    f_g = jnp.exp(log_f + m[..., None] - m_new[..., None])
+    c = f_g * c.reshape(bsz, n_heads, head_dim) + i_g * jnp.tanh(zt)
+    n = f_g * n.reshape(bsz, n_heads, head_dim) + i_g
+    h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    flat = lambda a: a.reshape(bsz, n_heads * head_dim)
+    return (flat(c), flat(n), flat(h_new), m_new), flat(h_new)
+
+
+def slstm_apply(params, cfg: XlstmCfg, x, *, state=None):
+    """x: (B,S,D) -> (y, state)."""
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.s_head_dim
+    xi = core.dense(params["wi"], x)
+    xf = core.dense(params["wf"], x)
+    xz = core.dense(params["wz"], x)
+    xo = core.dense(params["wo"], x)
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = (z, z, z, jnp.full((b, nh), -1e30, jnp.float32))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xi, xf, xz, xo))
+    new_state, ys = core.segmented_scan(
+        lambda st, ins: _slstm_cell(st, ins, params=params, n_heads=nh, head_dim=hd),
+        state,
+        xs,
+    )
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = core.rmsnorm(params["norm"], y)
+    y = core.dense(params["ffn_down"], jax.nn.gelu(core.dense(params["ffn_up"], y)))
+    return y, new_state

@@ -1,0 +1,98 @@
+"""AdamW with decoupled weight decay, global-norm clipping, configurable
+moment dtype, and an optional *factored second moment* (Adafactor-style).
+
+The factored mode stores row/col running means instead of a full-size v —
+for the 480B-param arctic config this removes ~1TB of fleet-wide optimizer
+state (the difference between fitting 256 chips and not).
+
+State layout: m and v are *flat lists* in params-leaf order (v leaves are
+either an array or a {"row","col"} dict in factored mode); this keeps the
+pytree machinery simple when v's structure diverges from params'.
+
+Functional: ``init(params) -> state``; ``update(grads, state, params) ->
+(new_params, new_state, stats)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable  # step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: jnp.dtype = jnp.float32
+    factored: bool = False  # Adafactor-style second moment for ndim>=2
+
+    # ------------------------------------------------------------------ init
+    def _is_factored(self, p) -> bool:
+        return self.factored and p.ndim >= 2
+
+    def _v_init(self, p):
+        if self._is_factored(p):
+            return {
+                "row": jnp.zeros(p.shape[:-1], self.moment_dtype),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], self.moment_dtype),
+            }
+        return jnp.zeros(p.shape, self.moment_dtype)
+
+    def init(self, params):
+        leaves = jax.tree.leaves(params)
+        return {
+            "m": [jnp.zeros(p.shape, self.moment_dtype) for p in leaves],
+            "v": [self._v_init(p) for p in leaves],
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    # ---------------------------------------------------------------- update
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12)) if self.clip_norm else 1.0
+        b1, b2 = self.b1, self.b2
+        lr = self.lr(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        new_p, new_m, new_v = [], [], []
+        for g, m, v, p in zip(g_leaves, state["m"], state["v"], p_leaves):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            if isinstance(v, dict):  # factored second moment
+                g2 = jnp.square(g)
+                row = b2 * v["row"].astype(jnp.float32) + (1 - b2) * jnp.mean(g2, axis=-1)
+                col = b2 * v["col"].astype(jnp.float32) + (1 - b2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+                vhat = (row / denom)[..., None] * col[..., None, :]
+                v2 = {"row": row.astype(self.moment_dtype), "col": col.astype(self.moment_dtype)}
+            else:
+                vfull = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+                vhat = vfull
+                v2 = vfull.astype(self.moment_dtype)
+            mhat = m2 / bc1
+            vhat = vhat / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+            new_m.append(m2.astype(self.moment_dtype))
+            new_v.append(v2)
+
+        new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+        new_state = {"m": new_m, "v": new_v, "step": step}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

@@ -1,0 +1,45 @@
+"""LR schedules: cosine, WSD (warmup-stable-decay, MiniCPM), const."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(base_lr: float, warmup: int, total: int, *, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd(base_lr: float, warmup: int, total: int, *, decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (arXiv:2404.06395): linear warmup, long stable
+    plateau, sharp exponential-style decay in the final ``decay_frac``."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        decay = base_lr * (min_ratio ** prog)  # exponential anneal to min_ratio
+        out = jnp.where(step < warmup, warm, base_lr)
+        return jnp.where(step >= decay_start, decay, out)
+
+    return lr
+
+
+def const(base_lr: float, warmup: int = 0, total: int = 0):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        if warmup:
+            return base_lr * jnp.minimum(step / warmup, 1.0)
+        return jnp.full_like(step, base_lr)
+
+    return lr
+
+
+def make(name: str, base_lr: float, warmup: int, total: int):
+    return {"cosine": cosine, "wsd": wsd, "const": const}[name](base_lr, warmup, total)

@@ -1,0 +1,71 @@
+"""Design-point harness: ONE engine pass collects per-mode statistics for
+an identical trajectory; each design is then priced on its hardware at
+(optionally) paper-scale layer dimensions.
+
+Design points (paper Fig. 13): GPU (analytic A100), ITC, Diffy,
+Cambricon-D, Ditto, Ditto+.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core import diffusion
+from ..core.ditto import CAMBRICON_D, DIFFY, DITTO_HW, ITC, DittoEngine, make_denoise_fn
+from ..nn import dit as dit_mod
+from . import cycles
+
+DESIGN_HW = {
+    "itc": ITC,
+    "diffy": DIFFY,
+    "cambricon-d": CAMBRICON_D,
+    "ditto": DITTO_HW,
+    "ditto+": DITTO_HW,
+}
+
+# A100 analytic baseline: 624 TOPS int8 peak; small-batch diffusion
+# inference is launch/memory bound — low single-digit sustained
+# utilization (the paper's GPU bars sit below the 27-TOPS ITC).
+GPU_TOPS = 624e12 * 0.03
+GPU_BW = 1.555e12
+
+
+def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
+                    sampler: str = "ddim"):
+    """One exact engine pass collecting act/diff/spatial stats per record."""
+    eng = DittoEngine(policy="diff", collect_oracle=True)
+    fn = make_denoise_fn(params, cfg, eng)
+    eng.begin_sample()
+    sample = diffusion.SAMPLERS[sampler](sched, fn, x_T, steps=steps, labels=labels)
+    return eng.records, sample, eng
+
+
+def run_designs(records, *, t_mult: float = 1.0, d_mult: float = 1.0, seq_mult: float | None = None,
+                designs=tuple(DESIGN_HW), **mode_kw) -> dict:
+    recs = cycles.scale_records(records, t_mult=t_mult, d_mult=d_mult, seq_mult=seq_mult)
+    out = {}
+    for name in designs:
+        hw = DESIGN_HW[name]
+        fn = cycles.mode_fn_for(name, recs, hw, **mode_kw)
+        out[name] = cycles.simulate(recs, hw, fn)
+    out["gpu-a100"] = gpu_baseline(recs)
+    return out
+
+
+def gpu_baseline(records) -> dict:
+    total_macs = sum(r["macs"] for r in records)
+    total_bytes = sum(cycles._mem_bytes(r, "act") for r in records)
+    t = max(2 * total_macs / GPU_TOPS, total_bytes / GPU_BW)
+    return {"hw": "gpu-a100", "time_s": t, "energy_j": t * 300.0, "cycles": t * 1.41e9}
+
+
+def run_all(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
+            sampler: str = "ddim", t_mult: float = 1.0, d_mult: float = 1.0,
+            seq_mult: float | None = None):
+    records, sample, eng = collect_records(params, cfg, sched, x_T, labels,
+                                           steps=steps, sampler=sampler)
+    out = run_designs(records, t_mult=t_mult, d_mult=d_mult, seq_mult=seq_mult)
+    for r in out.values():
+        r["sample"] = sample
+    out["records"] = records
+    out["engine"] = eng
+    return out

@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests: reduced same-family config, one
+forward + one train step + one decode step on CPU; shapes + no NaNs.
+(The FULL configs are exercised only via the dry-run — no allocation.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data.synthetic import DataCfg, batch_for
+from repro.launch import steps as steps_mod
+from repro.models.lm import LM
+from repro.nn import dit as dit_mod
+
+ARCHS = configs.names()
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_train(name, key):
+    arch = configs.get(name).smoke()
+    dc = DataCfg(seed=0, batch=2, seq_len=16)
+    opt = steps_mod.make_optimizer(arch, total=10)
+    state = steps_mod.init_state(arch, key, opt)
+    batch = batch_for(arch, dc, 0)
+    train = jax.jit(steps_mod.make_train_step(arch, opt))
+    state, metrics = train(state, batch)
+    assert jnp.isfinite(metrics["loss"]), name
+    state, metrics2 = train(state, batch)
+    assert jnp.isfinite(metrics2["loss"]), name
+
+
+@pytest.mark.parametrize("name", [n for n in ARCHS if configs.get(n).family != "diffusion"])
+def test_smoke_decode(name, key):
+    arch = configs.get(name).smoke()
+    model = LM(arch)
+    from repro.nn import core as nncore
+
+    params, _ = nncore.split(model.init(key))
+    cache = model.init_cache(2, 8)
+    kwargs = (
+        {"embeds": jax.random.normal(key, (2, 1, arch.d_model))}
+        if arch.frontend == "audio"
+        else {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    )
+    logits, cache2 = model.decode_step(params, cache, pos=jnp.int32(0), **kwargs)
+    assert logits.shape[:2] == (2, 1)
+    assert not bool(jnp.isnan(logits).any()), name
+
+
+def test_smoke_grad_accum_equivalence(key):
+    """accum=2 gives the same loss/grads as accum=1 (mean semantics)."""
+    arch = configs.get("qwen3-0.6b").smoke()
+    dc = DataCfg(seed=0, batch=4, seq_len=16)
+    batch = batch_for(arch, dc, 0)
+    opt = steps_mod.make_optimizer(arch, total=10)
+    s1 = steps_mod.init_state(arch, key, opt)
+    t1 = jax.jit(steps_mod.make_train_step(arch, opt))
+    _, m1 = t1(s1, batch)
+    arch2 = dataclasses.replace(arch, grad_accum=2)
+    s2 = steps_mod.init_state(arch2, key, opt)
+    t2 = jax.jit(steps_mod.make_train_step(arch2, opt))
+    _, m2 = t2(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
+    assert abs(float(m1["grad_norm"]) - float(m2["grad_norm"])) / float(m1["grad_norm"]) < 5e-2
+
+
+def test_dit_smoke_denoise(key):
+    arch = configs.get("dit-xl2").smoke()
+    dcfg = steps_mod.make_dit_model(arch)
+    params = dit_mod.init(key, dcfg)
+    lat = jax.random.normal(key, (2, arch.input_size, arch.input_size, arch.in_channels))
+    out = dit_mod.apply(params, dcfg, lat, jnp.array([5.0, 9.0]), jnp.array([1, 2]))
+    assert out.shape == lat.shape and not bool(jnp.isnan(out).any())

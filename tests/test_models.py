@@ -1,0 +1,107 @@
+"""Model-level equivalences: decode==forward, prefill cache consistency,
+chunked attention, ring-buffer windowed attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.lm import LM
+from repro.nn import attention as A
+from repro.nn import core as nncore
+
+STEP_ARCHS = ["qwen3-0.6b", "smollm-360m", "xlstm-125m", "zamba2-7b", "musicgen-medium", "arctic-480b"]
+
+
+@pytest.mark.parametrize("name", STEP_ARCHS)
+def test_decode_matches_forward(name, key):
+    arch = configs.get(name).smoke()
+    if arch.n_experts:
+        arch = dataclasses.replace(arch, capacity_factor=8.0)  # no token drops
+    model = LM(arch)
+    params, _ = nncore.split(model.init(key))
+    B, S = 2, 12
+    if arch.frontend == "audio":
+        embeds = jax.random.normal(key, (B, S, arch.d_model))
+        full, _ = model.forward(params, embeds=embeds)
+    else:
+        tokens = jax.random.randint(key, (B, S), 0, arch.vocab_size)
+        full, _ = model.forward(params, tokens=tokens)
+    cache = model.init_cache(B, S)
+    outs = []
+    for i in range(S):
+        kw = {"embeds": embeds[:, i : i + 1]} if arch.frontend == "audio" else {"tokens": tokens[:, i : i + 1]}
+        lg, cache = model.decode_step(params, cache, pos=jnp.int32(i), **kw)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / (float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 2e-3, (name, rel)
+
+
+def test_prefill_matches_forward_last_logit(key):
+    arch = configs.get("qwen3-0.6b").smoke()
+    model = LM(arch)
+    params, _ = nncore.split(model.init(key))
+    tokens = jax.random.randint(key, (2, 10), 0, arch.vocab_size)
+    full, _ = model.forward(params, tokens=tokens)
+    last, cache = model.prefill(params, tokens=tokens)
+    np.testing.assert_allclose(np.asarray(last[:, 0]), np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+    assert cache["k"].shape == (arch.n_layers, 2, 10, arch.n_kv_heads, arch.resolved_head_dim)
+
+
+def test_chunked_attention_equals_full(key):
+    q = jax.random.normal(key, (2, 4096, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 4096, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 4096, 2, 16))
+    pos = jnp.arange(4096)
+    mask = (pos[:, None] >= pos[None, :])[None, None, None]
+    full = A._sdpa(q, k, v, mask=mask, scale=0.25)
+    ch = A._sdpa_chunked(q, k, v, qpos=pos, kpos=pos, window=None, scale=0.25, chunk=1024)
+    np.testing.assert_allclose(np.asarray(ch), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_windowed_ring_decode_matches_forward(key):
+    """Hybrid arch with tiny window: ring-buffer decode == windowed forward."""
+    arch = configs.get("zamba2-7b").smoke()
+    arch = dataclasses.replace(arch, attn_window=8)
+    model = LM(arch)
+    params, _ = nncore.split(model.init(key))
+    B, S = 2, 20
+    tokens = jax.random.randint(key, (B, S), 0, arch.vocab_size)
+    full, _ = model.forward(params, tokens=tokens)
+    cache = model.init_cache(B, S)
+    outs = []
+    for i in range(S):
+        lg, cache = model.decode_step(params, cache, pos=jnp.int32(i), tokens=tokens[:, i : i + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-3, rel
+
+
+def test_vlm_frontend_prefix(key):
+    arch = configs.get("internvl2-2b").smoke()
+    model = LM(arch)
+    params, _ = nncore.split(model.init(key))
+    tokens = jax.random.randint(key, (2, 6), 0, arch.vocab_size)
+    fe = jax.random.normal(key, (2, arch.n_frontend_tokens, arch.d_model)) * 0.02
+    logits, _ = model.forward(params, tokens=tokens, frontend_embeds=fe)
+    assert logits.shape[1] == 6 + arch.n_frontend_tokens
+
+
+def test_segmented_scan_equals_plain(key):
+    from repro.nn.core import segmented_scan
+
+    xs = jax.random.normal(key, (64, 4))
+
+    def cell(c, x):
+        c = jnp.tanh(c + x)
+        return c, c
+
+    c0 = jnp.zeros((4,))
+    c1, y1 = jax.lax.scan(cell, c0, xs)
+    c2, y2 = segmented_scan(cell, c0, xs, segment=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)

@@ -1,0 +1,136 @@
+"""Tests for the §Perf hillclimb code paths: chunked SSD Mamba2,
+ff-over-data expert sharding, int8 DiT serving, w8 gathers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.lm import LM
+from repro.nn import core as nncore
+from repro.nn import dit as dit_mod
+from repro.nn import ssm
+
+
+def test_ssd_equals_recurrent(key):
+    cfg_r = ssm.MambaCfg(64, d_state=16, head_dim=16, impl="recurrent")
+    cfg_s = dataclasses.replace(cfg_r, impl="ssd", chunk=8)
+    p = ssm.init(key, cfg_r)
+    x = jax.random.normal(key, (2, 32, 64))
+    h0 = jax.random.normal(jax.random.fold_in(key, 3), (2, cfg_r.n_heads, 16, 16))
+    y_r, (h_r, _) = ssm.apply(p, cfg_r, x, state=h0)
+    y_s, (h_s, _) = ssm.apply(p, cfg_s, x, state=h0)
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_r), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_s), np.asarray(h_r), rtol=2e-4, atol=2e-5)
+
+
+def test_ssd_gradients_match_recurrent(key):
+    cfg_r = ssm.MambaCfg(32, d_state=8, head_dim=8, impl="recurrent")
+    cfg_s = dataclasses.replace(cfg_r, impl="ssd", chunk=8)
+    p = ssm.init(key, cfg_r)
+    vals, _ = nncore.split(p)
+    x = jax.random.normal(key, (2, 16, 32))
+
+    def loss(pp, cfg):
+        y, _ = ssm.apply(pp, cfg, x)
+        return jnp.sum(y**2)
+
+    g_s = jax.grad(lambda pp: loss(pp, cfg_s))(vals)
+    g_r = jax.grad(lambda pp: loss(pp, cfg_r))(vals)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g_s))
+    for a, b in zip(jax.tree.leaves(g_s), jax.tree.leaves(g_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4)
+
+
+def test_ssd_decode_path_unchanged(key):
+    """decode (S=1) still uses the recurrent cell and matches training."""
+    arch = configs.get("zamba2-7b").smoke()
+    model = LM(arch)
+    params, _ = nncore.split(model.init(key))
+    tokens = jax.random.randint(key, (2, 16), 0, arch.vocab_size)
+    full, _ = model.forward(params, tokens=tokens)
+    cache = model.init_cache(2, 16)
+    outs = []
+    for i in range(16):
+        lg, cache = model.decode_step(params, cache, pos=jnp.int32(i), tokens=tokens[:, i : i + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-3, rel
+
+
+def test_ep_ff_data_equivalent(key):
+    base = dataclasses.replace(configs.get("arctic-480b").smoke(), capacity_factor=8.0)
+    toks = jax.random.randint(key, (2, 12), 0, base.vocab_size)
+    outs = {}
+    for flag in (False, True):
+        arch = dataclasses.replace(base, ep_ff_data=flag)
+        m = LM(arch)
+        params, _ = nncore.split(m.init(jax.random.PRNGKey(0)))
+        lg, _ = m.forward(params, tokens=toks)
+        outs[flag] = np.asarray(lg)
+    # identical math, different sharding axes tags
+    np.testing.assert_allclose(outs[True], outs[False], rtol=1e-5, atol=1e-5)
+
+
+def test_w8_gather_close_and_trains(key):
+    arch = dataclasses.replace(configs.get("arctic-480b").smoke(), w8_gather=True)
+    from repro.launch import steps as steps_mod
+    from repro.data.synthetic import DataCfg, batch_for
+
+    opt = steps_mod.make_optimizer(arch, total=5)
+    state = steps_mod.init_state(arch, key, opt)
+    step = jax.jit(steps_mod.make_train_step(arch, opt))
+    batch = batch_for(arch, DataCfg(seed=0, batch=2, seq_len=16), 0)
+    state, m = step(state, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_int8_dit_serve_close_to_fp32(key):
+    from repro.models import dit_int8
+
+    cfg = dit_mod.DiTCfg(d_model=64, n_layers=3, n_heads=4, patch=2, in_channels=4, input_size=8, n_classes=8)
+    params = dit_mod.init(key, cfg)
+    qp = dit_int8.quantize_params(params, cfg)
+    lat = jax.random.normal(key, (2, 8, 8, 4))
+    y_fp = dit_mod.apply(params, cfg, lat, jnp.array([700.0, 500.0]), jnp.array([1, 2]))
+    y_q8 = dit_int8.apply(qp, cfg, lat, jnp.array([700.0, 500.0]), jnp.array([1, 2]))
+    rel = float(jnp.linalg.norm(y_q8 - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.1, rel
+
+
+def test_noncausal_attention_is_bidirectional(key):
+    """Regression: cfg.causal=False must not mask (DiT attention bug)."""
+    from repro.nn import attention as A
+
+    cfg = A.AttentionCfg(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, causal=False)
+    p = A.init(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 6, 32))
+    y, _ = A.apply(p, cfg, x, positions=jnp.arange(6))
+    # flipping the sequence and flipping back must give the same result for
+    # position 0 iff attention is bidirectional and rope positions follow
+    # the tokens; cheap necessary condition: output at position 0 depends
+    # on later tokens
+    x2 = x.at[:, -1].set(x[:, -1] + 1.0)
+    y2, _ = A.apply(p, cfg, x2, positions=jnp.arange(6))
+    assert float(jnp.abs(y2[:, 0] - y[:, 0]).max()) > 1e-6
+
+
+def test_chunked_mlstm_equals_recurrent(key):
+    from repro.nn import xlstm
+
+    cfg_r = dataclasses.replace(xlstm.XlstmCfg(64, n_heads=4), impl="recurrent")
+    cfg_c = dataclasses.replace(cfg_r, impl="chunked", chunk=8)
+    p = xlstm.mlstm_init(key, cfg_r)
+    x = jax.random.normal(key, (2, 32, 64)) * 2
+    y_r, st_r = xlstm.mlstm_apply(p, cfg_r, x)
+    y_c, st_c = xlstm.mlstm_apply(p, cfg_c, x)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r), rtol=3e-4, atol=3e-5)
+    for a, b in zip(st_c, st_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=3e-5)
+    g = jax.grad(lambda pp: jnp.sum(xlstm.mlstm_apply(pp, cfg_c, x)[0] ** 2))(
+        nncore.split(p)[0]
+    )
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))

@@ -1,0 +1,122 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ditto import classify, quant
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+ints8 = st.integers(min_value=-127, max_value=127)
+
+
+@st.composite
+def int8_arrays(draw, max_dim=48):
+    m = draw(st.integers(2, max_dim))
+    k = draw(st.integers(2, max_dim))
+    seed = draw(st.integers(0, 2**31 - 1))
+    lo = draw(st.integers(-127, 0))
+    hi = draw(st.integers(1, 127))
+    rng = np.random.RandomState(seed)
+    return rng.randint(lo, hi + 1, size=(m, k)).astype(np.int8)
+
+
+@given(int8_arrays(), st.integers(0, 2**31 - 1))
+def test_temporal_diff_identity_exact(x_prev, seed):
+    """W·q_t == W·q_prev + W·(q_t - q_prev) exactly, for any int8 inputs."""
+    rng = np.random.RandomState(seed)
+    m, k = x_prev.shape
+    n = rng.randint(2, 32)
+    w = rng.randint(-127, 128, size=(k, n)).astype(np.int8)
+    delta = rng.randint(-8, 9, size=(m, k)).astype(np.int8)
+    x_t = np.clip(x_prev.astype(np.int16) + delta, -127, 127).astype(np.int8)
+    y_prev = np.asarray(ref.int8_matmul_ref(jnp.asarray(x_prev), jnp.asarray(w)))
+    y = np.asarray(
+        ref.ditto_diff_matmul_ref(jnp.asarray(x_t), jnp.asarray(x_prev), jnp.asarray(w), jnp.asarray(y_prev))
+    )
+    want = np.asarray(ref.int8_matmul_ref(jnp.asarray(x_t), jnp.asarray(w)))
+    np.testing.assert_array_equal(y, want)
+
+
+@given(int8_arrays())
+def test_spatial_diff_reconstructs(q):
+    """Cumulative sum of row deltas reconstructs the original exactly."""
+    d = np.asarray(classify.spatial_diff(jnp.asarray(q), axis=0))
+    rec = np.cumsum(d, axis=0)
+    np.testing.assert_array_equal(rec, q.astype(np.int32))
+
+
+@given(int8_arrays())
+def test_element_classes_partition(q):
+    """zero/low/full fractions partition every tensor (sum to 1)."""
+    c = classify.element_classes(jnp.asarray(q))
+    total = float(c["zero"] + c["low"] + c["full"])
+    assert abs(total - 1.0) < 1e-6
+
+
+@given(int8_arrays())
+def test_bitwidth_requirement_bounds(q):
+    bits = np.asarray(classify.bitwidth_requirement(jnp.asarray(q)))
+    assert bits.min() >= 0 and bits.max() <= 9
+    assert np.all((bits == 0) == (q == 0))
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_quantize_dequantize_error_bound(seed, scale_mag):
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(17, 23) * scale_mag).astype(np.float32)
+    qt = quant.quantize_tensor(jnp.asarray(x))
+    err = float(jnp.max(jnp.abs(qt.dequant() - x)))
+    assert err <= float(qt.scale) * 0.5 + 1e-5
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(1, 8))
+def test_tile_classes_consistent_with_elements(seed, tm_mult, tk_mult):
+    rng = np.random.RandomState(seed)
+    tm, tk = 8, 8
+    m, k = tm * tm_mult, tk * tk_mult
+    d = rng.randint(-20, 21, size=(m, k)).astype(np.int32)
+    tc = classify.tile_classes(jnp.asarray(d), tile=(tm, tk))
+    zero = np.asarray(tc["zero"])
+    for i in range(m // tm):
+        for j in range(k // tk):
+            block = d[i * tm : (i + 1) * tm, j * tk : (j + 1) * tk]
+            assert zero[i, j] == (np.abs(block).max() == 0)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+def test_checkpoint_restore_is_identity(seed, depth):
+    """Any pytree of float arrays survives save->restore bitwise."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+
+    rng = np.random.RandomState(seed)
+    tree = {}
+    node = tree
+    for i in range(depth):
+        node[f"w{i}"] = jnp.asarray(rng.randn(3, 4).astype(np.float32))
+        node[f"sub{i}"] = {}
+        node = node[f"sub{i}"]
+    node["leaf"] = jnp.arange(5)
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td)
+        mgr.save(1, tree)
+        out = mgr.restore(1, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_ddim_step_preserves_shape_and_finite(seed):
+    from repro.core import diffusion
+
+    rng = np.random.RandomState(seed)
+    sched = diffusion.cosine_schedule(50)
+    x = jnp.asarray(rng.randn(2, 4, 4, 3).astype(np.float32))
+    eps = jnp.asarray(rng.randn(2, 4, 4, 3).astype(np.float32))
+    y = diffusion.ddim_step(sched, x, eps, 40, 30)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())

@@ -1,0 +1,42 @@
+"""Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main(mesh_filter="16x16"):
+    rows = []
+    chips = "256" if mesh_filter == "16x16" else "512"
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        if not f.endswith(f"_{chips}.json"):
+            continue
+        rows.append(json.load(open(f)))
+
+    print(f"### Single-pod ({mesh_filter}) baseline roofline — all cells\n")
+    print("| arch | shape | peak GiB/dev | compute s | memory s | collective s | dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        if r["status"] == "skip":
+            if mesh_filter in ("16x16",) and r.get("mesh") in ("16x16", None) or "mesh" not in r:
+                pass
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | {r.get('reason','skip')} |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | {r.get('error','')[:40]} |")
+            continue
+        rl = r["roofline"]
+        m = r["memory"]["peak_bytes_per_device"] / 2**30
+        print(
+            f"| {r['arch']} | {r['shape']} | {m:.2f} | {rl['compute_s']:.3e} | {rl['memory_s']:.3e} "
+            f"| {rl['collective_s']:.3e} | {rl['dominant']} | {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']*100:.2f}% |"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")
