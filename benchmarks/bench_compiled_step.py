@@ -1,0 +1,94 @@
+"""Microbenchmark: eager vs jit-compiled Pallas wall time per denoising step.
+
+The serve configuration (dit*, Defo policy) runs the same trajectory twice:
+once fully on the eager calibration engine (per-layer python loop, host
+accounting every call) and once on the two-phase path where steps >= 3 are
+one jitted function over the Pallas kernels. Reported per-step times are
+the post-decision steps only (that is the regime serving lives in); the
+compiled path's first step is reported separately since it pays trace +
+compile.
+
+    PYTHONPATH=src python benchmarks/bench_compiled_step.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import common
+from repro.core import diffusion
+from repro.core.ditto import DittoEngine, make_denoise_fn
+
+# enough steps that adjacent-step similarity is high and Defo actually
+# freezes layers into diff mode (few steps = big temporal gaps = act wins)
+STEPS = 16
+BATCH = 4
+
+
+def _timed(fn):
+    times: list[float] = []
+
+    def f(x, t, labels):
+        t0 = time.perf_counter()
+        out = fn(x, t, labels)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+        return out
+
+    return f, times
+
+
+def _run_once(params, dcfg, sched, x, labels, *, compiled: bool, policy: str = "defo",
+              collect_stats: bool = True):
+    eng = DittoEngine(policy=policy)
+    fn = make_denoise_fn(params, dcfg, eng, compiled=compiled, collect_stats=collect_stats)
+    tfn, times = _timed(fn)
+    eng.begin_sample()
+    diffusion.SAMPLERS["ddim"](sched, tfn, x, steps=STEPS, labels=labels)
+    return times, eng
+
+
+def _steady(times):
+    # the engine decides modes after step 2; steady state is steps >= 3
+    # (the first compiled step pays trace + XLA compile)
+    return sum(times[3:]) / len(times[3:])
+
+
+def run():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    x, labels = common.sample_inputs(bm, batch=BATCH)
+
+    t_eager, _ = _run_once(params, dcfg, sched, x, labels, compiled=False)
+    t_comp, eng = _run_once(params, dcfg, sched, x, labels, compiled=True)
+    t_fast, _ = _run_once(params, dcfg, sched, x, labels, compiled=True, collect_stats=False)
+    # forced-diff variant: every layer through diff_encode -> ditto_diff_matmul
+    # regardless of the Defo verdict (at toy scale Defo often freezes all-act —
+    # the tiny layers are memory-bound — which would leave the tile-skipping
+    # kernel path unmeasured)
+    t_deager, _ = _run_once(params, dcfg, sched, x, labels, compiled=False, policy="diff")
+    t_dcomp, _ = _run_once(params, dcfg, sched, x, labels, compiled=True, policy="diff",
+                           collect_stats=False)
+
+    eager_ss, comp_ss, fast_ss = _steady(t_eager), _steady(t_comp), _steady(t_fast)
+    deager_ss, dcomp_ss = _steady(t_deager), _steady(t_dcomp)
+    n_diff = sum(1 for m in eng.summary()["modes"].values() if m == "diff")
+    return [
+        ("bench_step/eager_ms", round(eager_ss * 1e6, 1), round(eager_ss * 1e3, 2)),
+        ("bench_step/compiled_ms", round(comp_ss * 1e6, 1), round(comp_ss * 1e3, 2)),
+        ("bench_step/compiled_nostats_ms", round(fast_ss * 1e6, 1), round(fast_ss * 1e3, 2)),
+        ("bench_step/compile_overhead_ms", round(t_comp[2] * 1e6, 1), round(t_comp[2] * 1e3, 2)),
+        ("bench_step/speedup", 0, round(eager_ss / comp_ss, 2)),
+        ("bench_step/speedup_nostats", 0, round(eager_ss / fast_ss, 2)),
+        ("bench_step/diff_eager_ms", round(deager_ss * 1e6, 1), round(deager_ss * 1e3, 2)),
+        ("bench_step/diff_compiled_ms", round(dcomp_ss * 1e6, 1), round(dcomp_ss * 1e3, 2)),
+        ("bench_step/diff_speedup", 0, round(deager_ss / dcomp_ss, 2)),
+        ("bench_step/diff_mode_layers", 0, n_diff),
+    ]
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -26,6 +26,7 @@ MODULES = [
     "fig17_defo",
     "fig18_ideal",
     "fig19_dynamic",
+    "bench_compiled_step",
 ]
 
 

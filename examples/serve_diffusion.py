@@ -2,13 +2,17 @@
 Ditto engine (the paper's deployment scenario — inference acceleration).
 
 A request queue of (n_images, class) jobs is dynamically batched; each
-batch runs the quantized DDIM loop with Defo execution-flow optimization.
-Per request we report: wall time, simulated Ditto-hardware time, simulated
-ITC time (the baseline an operator would compare against), and parity vs
-FP32. Fault tolerance: the serving loop checkpoints its request log and
+batch runs the quantized DDIM loop with Defo execution-flow optimization:
+steps 1-2 run the eager calibration engine, then the per-layer modes are
+frozen and the remaining steps run through the jit-compiled Pallas path
+(act layers -> int8_matmul, diff layers -> diff_encode +
+ditto_diff_matmul with on-device tile skipping). Per request we report:
+wall time, simulated Ditto-hardware time, simulated ITC time (the
+baseline an operator would compare against), and parity vs FP32. Fault
+tolerance: the serving loop checkpoints its request log atomically and
 can resume mid-queue.
 
-    PYTHONPATH=src python examples/serve_diffusion.py [--requests 6] [--batch 4]
+    PYTHONPATH=src python examples/serve_diffusion.py [--requests 6] [--batch 4] [--eager]
 """
 import argparse
 import json
@@ -51,6 +55,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--log", default="/tmp/ditto_serve_log.json")
+    ap.add_argument("--eager", action="store_true",
+                    help="run every step on the eager engine (no compiled path)")
     args = ap.parse_args(argv)
 
     arch, dcfg, params = build_model()
@@ -71,23 +77,32 @@ def main(argv=None):
         x = jax.random.normal(key, (len(rids), arch.input_size, arch.input_size, arch.in_channels))
 
         t0 = time.monotonic()
-        records, sample, eng = harness.collect_records(
-            params, dcfg, sched, x, labels, steps=args.steps
+        records, sample, eng = harness.serve_records(
+            params, dcfg, sched, x, labels, steps=args.steps, compiled=not args.eager
         )
         wall = time.monotonic() - t0
         res = harness.run_designs(records, t_mult=64, d_mult=18,
                                   designs=("itc", "ditto", "ditto+"))
         s = eng.summary()
+        n_compiled = sum(1 for r in records if r.get("compiled"))
+        modes = dict(s["modes"])
         for i, rid in enumerate(rids):
             done[rid] = {
                 "class": int(labels[i]),
                 "wall_s": wall / len(rids),
+                "compiled_records": n_compiled,
+                "modes": modes,
                 "sim_ditto_ms": res["ditto"]["time_s"] * 1e3 / len(rids),
                 "sim_itc_ms": res["itc"]["time_s"] * 1e3 / len(rids),
                 "speedup": res["itc"]["time_s"] / res["ditto"]["time_s"],
                 "bops_ratio": s["bops"] / s["bops_act"],
             }
-        json.dump(done, open(args.log, "w"))  # checkpoint the served log
+        # checkpoint the served log atomically: a crash mid-write must not
+        # corrupt the resume file
+        tmp = args.log + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(done, f)
+        os.replace(tmp, args.log)
         print(f"[serve] batch {rids}: wall {wall:.1f}s  "
               f"sim ditto {res['ditto']['time_s']*1e3:.2f}ms vs itc {res['itc']['time_s']*1e3:.2f}ms "
               f"(speedup {res['itc']['time_s']/res['ditto']['time_s']:.2f}x)")

@@ -1,5 +1,6 @@
 from . import bops, classify, defo, quant
-from .dit_runner import DittoDiT, make_denoise_fn
+from .compiled import CompiledDittoEngine
+from .dit_runner import CompiledDittoDiT, DittoDiT, make_denoise_fn
 from .engine import DittoEngine, LayerMeta
 from .hwmodel import ALL_HW, CAMBRICON_D, DEFAULT_HW, DIFFY, DITTO_HW, ITC, HwModel
 
@@ -9,6 +10,8 @@ __all__ = [
     "defo",
     "quant",
     "DittoDiT",
+    "CompiledDittoDiT",
+    "CompiledDittoEngine",
     "make_denoise_fn",
     "DittoEngine",
     "LayerMeta",

@@ -1,0 +1,190 @@
+"""Compiled execution pass of the DittoEngine (paper §IV-C deployment).
+
+The eager :class:`~repro.core.ditto.engine.DittoEngine` is the
+*calibration* pass: it quantizes with per-layer scales held from step 1,
+collects the class statistics / cycle records Defo needs, and decides each
+layer's mode after the step-2 diff probe. Everything it bakes in —
+activation scales, weight q-tensors, the per-layer mode — is static from
+then on, so the remaining denoising steps can run as ONE ``jax.jit``-able
+function in which:
+
+  act   layers route through the ``int8_matmul`` Pallas kernel (the ITC
+        baseline Compute Unit);
+  diff  layers run ``diff_encode`` -> ``ditto_diff_matmul``, so zero tiles
+        are actually skipped on-device (``@pl.when`` gates the MXU dot)
+        instead of only being priced in the cost model;
+  spatial layers (Defo+) execute the direct GEMM — exactly what the eager
+        spatial branch computes — via ``int8_matmul``; their row-delta
+        statistics are still reduced for the records.
+
+Token and feature dims are zero-padded to the 128-tile grid inside the
+kernels' ops wrappers; padding is exact in the int32 domain, so the
+compiled pass is bit-identical to the eager engine (property-tested in
+tests/test_compiled_engine.py).
+
+Per-layer temporal state (x_prev int8, y_prev int32, attention operands)
+is threaded functionally as a pytree so the step function stays pure; the
+batched attention identity S_t = S_prev + Q_t ΔK^T + ΔQ K_prev^T runs the
+two sub-operations through the same diff kernel under ``lax.scan`` over
+the (batch x heads) leading dim (one kernel trace, not one per element).
+
+With ``collect_stats=True`` the step also reduces zero/low/full class
+fractions on-device and returns them as an aux pytree; the host engine
+synthesizes cost-model records from them (``record_compiled_step``) so the
+design-point simulator keeps working across compiled steps. Set it False
+for the pure serving fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops
+from . import classify, quant
+from .engine import DittoEngine
+
+
+def _class_fractions(d: jax.Array) -> tuple:
+    """(zero, low, full) fractions of an int-domain Δ tensor, on-device.
+
+    Matches classify.element_classes bit-for-bit (same reductions).
+    """
+    c = classify.element_classes(d)
+    return (c["zero"], c["low"], c["full"])
+
+
+def _act_fractions(q: jax.Array) -> tuple:
+    """cls_act triple of the eager engine: (zero, 0, nonzero)."""
+    c = classify.element_classes(q)
+    return (c["zero"], 0.0, c["low"] + c["full"])
+
+
+def _spatial_fractions(q2: jax.Array) -> tuple:
+    """cls_spatial triple of the eager oracle: row-delta fractions with the
+    full-precision first row folded in at weight 1/t."""
+    t = q2.shape[0]
+    z, l, f = _class_fractions(classify.spatial_diff(q2, axis=0)[1:])
+    w0 = 1.0 / t
+    return (z * (1 - w0), l * (1 - w0), f * (1 - w0) + w0)
+
+
+class CompiledDittoEngine:
+    """Per-layer compiled ops with static modes, built from a calibrated
+    eager engine. All methods are pure (state in, state out) and
+    jit-traceable; mode selection happens at trace time."""
+
+    def __init__(self, engine: DittoEngine, *, interpret: bool | None = None,
+                 block: int = 128, collect_stats: bool = True):
+        if not engine.ready_for_compiled():
+            raise ValueError(
+                "engine not calibrated: run >= 1 eager step (>= 2 for defo policies, "
+                "whose mode decision lands after the step-2 diff probe) before "
+                f"compiling (step_idx={engine.step_idx}, decided={engine._decided})")
+        self.engine = engine
+        self.block = block
+        self.interpret = interpret
+        self.collect_stats = collect_stats
+        self.modes = engine.compiled_modes()
+        self.meta = engine.meta
+        self.params: dict[str, dict] = {}
+        for name, st in engine.layers.items():
+            if st.w is not None:
+                self.params[name] = dict(w_q=st.w.q, w_scale=st.w.scale,
+                                         bias=st.bias, x_scale=st.x_scale)
+            else:
+                self.params[name] = dict(a_scale=st.a_scale, b_scale=st.b_scale)
+
+    # ---------------------------------------------------------------- state
+    def init_state(self) -> dict:
+        """Initial temporal state = the eager engine's state after its last
+        calibration step (int8 x_prev / int32 y_prev per layer)."""
+        state: dict[str, dict] = {}
+        for name, st in self.engine.layers.items():
+            if st.w is not None:
+                state[name] = dict(x_prev=st.x_prev, y_prev=st.y_prev)
+            else:
+                state[name] = dict(a_prev=st.a_prev, b_prev=st.b_prev, y_prev=st.y_prev)
+        return state
+
+    def _blk(self) -> dict:
+        b = self.block
+        return dict(bm=b, bn=b, bk=b, interpret=self.interpret)
+
+    # --------------------------------------------------------------- linear
+    def linear(self, name: str, x: jax.Array, st: dict) -> tuple[jax.Array, dict, dict]:
+        """Mirror of DittoEngine.linear with the mode baked in statically.
+
+        Returns (y fp32, new_state, aux). Bit-identical int32 y_prev to the
+        eager path for every mode.
+        """
+        p = self.params[name]
+        mode = self.modes[name]
+        x2 = x.reshape(-1, x.shape[-1])
+        n = p["w_q"].shape[1]
+        q_t = quant.quantize(x2, p["x_scale"])
+
+        aux: dict = {}
+        if mode == "diff":
+            y_i32, _ = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"], **self._blk())
+        else:  # act, and spatial (whose eager branch computes the direct GEMM)
+            y_i32 = ops.int8_act_matmul(q_t, p["w_q"], **self._blk())
+        if self.collect_stats:
+            # executed-mode stats for pricing this step, plus candidate
+            # temporal/spatial fractions for every layer so the simulator
+            # can re-price other designs' mode choices at scaled dims
+            if mode == "spatial":
+                aux["cls_diff"] = _class_fractions(classify.spatial_diff(q_t, axis=0)[1:])
+            else:
+                d = q_t.astype(jnp.int16) - st["x_prev"].astype(jnp.int16)
+                aux["cls_diff"] = _class_fractions(d)
+            if q_t.shape[0] > 1:
+                aux["cls_spatial"] = _spatial_fractions(q_t)
+            aux["cls_act"] = _act_fractions(q_t)
+
+        new_st = dict(x_prev=q_t, y_prev=y_i32)
+        y = y_i32.astype(jnp.float32) * p["x_scale"] * p["w_scale"][None, :]
+        if p["bias"] is not None:
+            y = y + p["bias"]
+        return y.reshape(x.shape[:-1] + (n,)), new_st, aux
+
+    # ------------------------------------------------------------ attention
+    def attention_matmul(self, name: str, a: jax.Array, b: jax.Array,
+                         st: dict) -> tuple[jax.Array, dict, dict]:
+        """Mirror of DittoEngine.attention_matmul: a @ b^T per leading-dim
+        element, diff mode via the paper's two-sub-op identity composed
+        from the diff kernel (ops.attention_delta), act mode via
+        int8_matmul. lax.scan over the batch keeps one kernel trace."""
+        p = self.params[name]
+        mode = self.modes[name]
+        lead = a.shape[:-2]
+        m, d_ = a.shape[-2], a.shape[-1]
+        n = b.shape[-2]
+        a2 = a.reshape(-1, m, d_)
+        b2 = b.reshape(-1, n, d_)
+        qa = quant.quantize(a2, p["a_scale"])
+        qb = quant.quantize(b2, p["b_scale"])
+
+        blk = self._blk()
+        aux: dict = {}
+        if mode == "diff":
+            def body(c, ins):
+                qa_i, qb_i, ap_i, bp_i, yp_i = ins
+                y_i, _ = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i, **blk)
+                return c, y_i
+
+            _, y_i32 = jax.lax.scan(body, 0, (qa, qb, st["a_prev"], st["b_prev"], st["y_prev"]))
+        else:
+            def body(c, ins):
+                qa_i, qb_i = ins
+                return c, ops.int8_act_matmul(qa_i, qb_i.T, **blk)
+
+            _, y_i32 = jax.lax.scan(body, 0, (qa, qb))
+        if self.collect_stats:
+            da = qa.astype(jnp.int16) - st["a_prev"].astype(jnp.int16)
+            db = qb.astype(jnp.int16) - st["b_prev"].astype(jnp.int16)
+            aux["cls_diff"] = _class_fractions(jnp.concatenate([da.reshape(-1), db.reshape(-1)]))
+            aux["cls_act"] = _act_fractions(jnp.concatenate([qa.reshape(-1), qb.reshape(-1)]))
+
+        new_st = dict(a_prev=qa, b_prev=qb, y_prev=y_i32)
+        y = y_i32.astype(jnp.float32) * p["a_scale"] * p["b_scale"]
+        return y.reshape(lead + (m, n)), new_st, aux

@@ -1,10 +1,20 @@
 """DiT denoiser executed through the DittoEngine (quantized serving path).
 
-Mirrors repro.nn.dit.apply with every linear op routed through the engine
-(per-block python loop — each layer's execution mode may differ, which is
-the point of Defo). Weights are registered once from the same param tree
-used for training; fp32-mode equivalence against nn.dit.apply is tested in
-tests/test_ditto_engine.py.
+Mirrors repro.nn.dit.apply with every linear op routed through the engine.
+``_dit_forward`` is the single source of truth for the block structure; it
+takes the two engine ops as callables, so the eager calibration pass
+(:class:`DittoDiT`) and the jit-compiled Pallas execution pass
+(:class:`CompiledDittoDiT`) share the exact same forward — a structural
+divergence between the two phases is impossible by construction.
+
+``make_denoise_fn(..., compiled=True)`` runs eager steps until the engine
+is calibrated (>= 1 step; for Defo policies, until the step-2 decision),
+then hands the remaining denoising steps to the compiled per-step function
+in which each layer's mode is a static bake-in: act-mode layers hit the
+``int8_matmul`` Pallas kernel, diff-mode layers ``diff_encode`` ->
+``ditto_diff_matmul`` (zero tiles skipped on-device). fp32-mode
+equivalence against nn.dit.apply is tested in tests/test_ditto_engine.py;
+eager/compiled bit-identity in tests/test_compiled_engine.py.
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ import numpy as np
 from ...nn import core as nncore
 from ...nn import dit as dit_mod
 from . import defo
+from .compiled import CompiledDittoEngine
 from .engine import DittoEngine, LayerMeta
 
 
@@ -27,7 +38,62 @@ def _v(tree, *path):
     return np.asarray(nncore.val(cur))
 
 
+def _dit_forward(params, cfg: dit_mod.DiTCfg, linear, attention, latents, t, labels):
+    """One DiT forward with every quantized op injected.
+
+    ``linear(name, x)`` and ``attention(name, a, b)`` are the engine ops —
+    eager (stateful) or compiled (closures threading a state pytree).
+    Patch embed / conditioning / norms / softmax stay fp32 (VPU-side ops).
+    """
+    b, hh, ww, ch = latents.shape
+    pp = cfg.patch
+    x = latents.reshape(b, hh // pp, pp, ww // pp, pp, ch)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, cfg.n_tokens, cfg.patch_dim)
+    x = nncore.dense(params["patch_embed"], x) + nncore.val(params["pos_embed"])[None]
+    c = dit_mod.timestep_embedding(t, 256)
+    c = nncore.dense(params["t_mlp2"], jax.nn.silu(nncore.dense(params["t_mlp1"], c)))
+    if labels is not None and "label_embed" in params:
+        c = c + nncore.val(params["label_embed"])[labels]
+    c_act = jax.nn.silu(c)
+
+    nh = cfg.n_heads
+    hd = cfg.head_dim
+    scale = 1.0 / math.sqrt(hd)
+    for i in range(cfg.n_layers):
+        bk = f"blk{i}"
+        mod = linear(f"{bk}.mod", c_act)
+        sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
+        h = dit_mod._modulate(dit_mod._ln(x), sh_a, sc_a)
+        q = linear(f"{bk}.wq", h).reshape(b, cfg.n_tokens, nh, hd)
+        k = linear(f"{bk}.wk", h).reshape(b, cfg.n_tokens, nh, hd)
+        v = linear(f"{bk}.wv", h).reshape(b, cfg.n_tokens, nh, hd)
+        qf = q.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
+        scores = attention(f"{bk}.qk", qf, kf) * scale
+        probs = jax.nn.softmax(scores, axis=-1)
+        av = attention(f"{bk}.pv", probs, vf.swapaxes(-1, -2))
+        av = av.reshape(b, nh, cfg.n_tokens, hd).transpose(0, 2, 1, 3).reshape(b, cfg.n_tokens, nh * hd)
+        a = linear(f"{bk}.wo", av)
+        x = x + g_a[:, None, :] * a
+        h = dit_mod._modulate(dit_mod._ln(x), sh_m, sc_m)
+        hmid = jax.nn.gelu(linear(f"{bk}.wi", h))
+        x = x + g_m[:, None, :] * linear(f"{bk}.wd", hmid)
+
+    modf = nncore.dense(params["final_mod"], c_act)
+    shift, scl = jnp.split(modf, 2, axis=-1)
+    x = dit_mod._modulate(dit_mod._ln(x), shift, scl)
+    x = linear("final.out", x)
+    x = x.reshape(b, hh // pp, ww // pp, pp, pp, ch).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, hh, ww, ch)
+
+
 class DittoDiT:
+    """Eager calibration pass (per-layer python loop — each layer's
+    execution mode may differ per step, which is the point of Defo).
+    Weights are registered once from the same param tree used for
+    training."""
+
     def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine):
         self.cfg = cfg
         self.engine = engine
@@ -55,62 +121,81 @@ class DittoDiT:
             engine.register_linear(metas[f"{b}.wd"], blk(i, "mlp", "wo", "w"), blk(i, "mlp", "wo", "b"))
         engine.register_linear(metas["final.out"], _v(params, "final_out", "w"), _v(params, "final_out", "b"))
 
-    # ---------------------------------------------------------------- apply
     def __call__(self, latents, t, labels=None):
-        cfg = self.cfg
         eng = self.engine
-        params = self.params
-        b, hh, ww, ch = latents.shape
-        pp = cfg.patch
-        x = latents.reshape(b, hh // pp, pp, ww // pp, pp, ch)
-        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, cfg.n_tokens, cfg.patch_dim)
-        # patch embed + conditioning stay in fp32 (VPU-side ops)
-        x = nncore.dense(params["patch_embed"], x) + nncore.val(params["pos_embed"])[None]
-        c = dit_mod.timestep_embedding(t, 256)
-        c = nncore.dense(params["t_mlp2"], jax.nn.silu(nncore.dense(params["t_mlp1"], c)))
-        if labels is not None and "label_embed" in params:
-            c = c + nncore.val(params["label_embed"])[labels]
-        c_act = jax.nn.silu(c)
-
-        nh = cfg.n_heads
-        hd = cfg.head_dim
-        scale = 1.0 / math.sqrt(hd)
-        for i in range(cfg.n_layers):
-            bk = f"blk{i}"
-            mod = eng.linear(f"{bk}.mod", c_act)
-            sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
-            h = dit_mod._modulate(dit_mod._ln(x), sh_a, sc_a)
-            q = eng.linear(f"{bk}.wq", h).reshape(b, cfg.n_tokens, nh, hd)
-            k = eng.linear(f"{bk}.wk", h).reshape(b, cfg.n_tokens, nh, hd)
-            v = eng.linear(f"{bk}.wv", h).reshape(b, cfg.n_tokens, nh, hd)
-            qf = q.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
-            kf = k.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
-            vf = v.transpose(0, 2, 1, 3).reshape(b * nh, cfg.n_tokens, hd)
-            scores = eng.attention_matmul(f"{bk}.qk", qf, kf) * scale
-            probs = jax.nn.softmax(scores, axis=-1)
-            av = eng.attention_matmul(f"{bk}.pv", probs, vf.swapaxes(-1, -2))
-            av = av.reshape(b, nh, cfg.n_tokens, hd).transpose(0, 2, 1, 3).reshape(b, cfg.n_tokens, nh * hd)
-            a = eng.linear(f"{bk}.wo", av)
-            x = x + g_a[:, None, :] * a
-            h = dit_mod._modulate(dit_mod._ln(x), sh_m, sc_m)
-            hmid = jax.nn.gelu(eng.linear(f"{bk}.wi", h))
-            x = x + g_m[:, None, :] * eng.linear(f"{bk}.wd", hmid)
-
-        modf = nncore.dense(params["final_mod"], c_act)
-        shift, scl = jnp.split(modf, 2, axis=-1)
-        x = dit_mod._modulate(dit_mod._ln(x), shift, scl)
-        x = eng.linear("final.out", x)
-        x = x.reshape(b, hh // pp, ww // pp, pp, pp, ch).transpose(0, 1, 3, 2, 4, 5)
-        return x.reshape(b, hh, ww, ch)
+        return _dit_forward(self.params, self.cfg, eng.linear, eng.attention_matmul,
+                            latents, t, labels)
 
 
-def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine):
+class CompiledDittoDiT:
+    """Compiled execution pass: ONE jitted per-step function over the whole
+    denoiser, built from a calibrated engine. Per-layer temporal state
+    (x_prev/y_prev/attention operands) is threaded functionally; modes are
+    frozen at trace time. With collect_stats, on-device class fractions
+    come back as an aux pytree and the engine synthesizes cost-model
+    records for the step."""
+
+    def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
+                 interpret: bool | None = None, collect_stats: bool = True):
+        self.cfg = cfg
+        self.engine = engine
+        self.params = params
+        self.ceng = CompiledDittoEngine(engine, interpret=interpret, collect_stats=collect_stats)
+        self.state = self.ceng.init_state()
+        self._step = jax.jit(self._make_step())
+
+    def _make_step(self):
+        ceng, params, cfg = self.ceng, self.params, self.cfg
+
+        def step(state, latents, t, labels):
+            new_state: dict = {}
+            aux: dict = {}
+
+            def lin(name, x):
+                y, st2, a = ceng.linear(name, x, state[name])
+                new_state[name], aux[name] = st2, a
+                return y
+
+            def attn(name, a_, b_):
+                y, st2, a = ceng.attention_matmul(name, a_, b_, state[name])
+                new_state[name], aux[name] = st2, a
+                return y
+
+            out = _dit_forward(params, cfg, lin, attn, latents, t, labels)
+            return out, new_state, aux
+
+        return step
+
+    def __call__(self, latents, t, labels=None):
+        out, self.state, aux = self._step(self.state, latents, t, labels)
+        if self.ceng.collect_stats:
+            self.engine.record_compiled_step(aux)
+        return out
+
+
+def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
+                    compiled: bool = False, interpret: bool | None = None,
+                    collect_stats: bool = True):
     """denoise_fn(x, t, labels) for repro.core.diffusion samplers; calls
-    engine.end_step() after each sampler step."""
+    engine.end_step() after each sampler step.
+
+    compiled=True: once the engine is calibrated (engine.ready_for_compiled),
+    the remaining steps run through the jitted Pallas path, seeded with the
+    eager pass's temporal state. A new compiled runner is built per sample
+    (begin_sample resets state and Defo may re-decide modes).
+    """
     runner = DittoDiT(params, cfg, engine)
+    box: dict = {}
 
     def fn(x, t, labels):
-        out = runner(x, t, labels)
+        if compiled and engine.ready_for_compiled():
+            if box.get("built_for") is not engine.records:  # rebuilt per begin_sample
+                box["runner"] = CompiledDittoDiT(params, cfg, engine,
+                                                 interpret=interpret, collect_stats=collect_stats)
+                box["built_for"] = engine.records
+            out = box["runner"](x, t, labels)
+        else:
+            out = runner(x, t, labels)
         engine.end_step()
         return out
 

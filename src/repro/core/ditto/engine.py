@@ -70,6 +70,7 @@ class DittoEngine:
         self.step_idx = 0
         self.records: list[dict] = []  # one per (layer, step)
         self._decided = False
+        self._compiled_base = None  # cached (modes, first-record-per-layer)
 
     # ------------------------------------------------------------- weights
     def register_linear(self, meta: LayerMeta, w: jax.Array, bias: jax.Array | None = None):
@@ -85,6 +86,7 @@ class DittoEngine:
     def begin_sample(self):
         self.step_idx = 0
         self._decided = False
+        self._compiled_base = None
         self.records = []
         for st in self.layers.values():
             st.x_prev = st.y_prev = None
@@ -137,6 +139,7 @@ class DittoEngine:
             y_i32 = quant.int_matmul(q_t, st.w.q)
             d_for_stats = None
             mode = "act"
+            rec["mode"] = mode  # fallback executed act: keep accounting honest
         elif mode == "spatial":
             d_sp = classify.spatial_diff(q_t, axis=0)  # exact reconstructable
             # y rows: y[0] = W q[0]; y[i] = y[i-1] + W d[i] — mathematically
@@ -192,6 +195,7 @@ class DittoEngine:
             y_i32 = bmm(qa, qb)
             d_for_stats = None
             mode = "act"
+            rec["mode"] = mode  # fallback executed act: keep accounting honest
         else:
             da = qa.astype(jnp.int16) - st.a_prev.astype(jnp.int16)
             db = qb.astype(jnp.int16) - st.b_prev.astype(jnp.int16)
@@ -222,41 +226,18 @@ class DittoEngine:
         return st.mode
 
     def _account(self, rec, t, k, n, q_t, d, meta, *, attention=False):
-        hw = self.hw
-        macs = rec["macs"]
-        rec.update(t=t, k=k, n=n, attention=attention,
-                   boundary_in=meta.boundary_in, boundary_out=meta.boundary_out)
         # --- class fractions, per candidate mode (the simulator re-prices
         # each hardware design from these; see repro.sim) ---
         q_cls = classify.element_classes(q_t)
-        rec["cls_act"] = (float(q_cls["zero"]), 0.0, float(q_cls["low"] + q_cls["full"]))
+        cls_act = (float(q_cls["zero"]), 0.0, float(q_cls["low"] + q_cls["full"]))
+        cls_diff = None
         if d is not None:
             cls = classify.element_classes(d)
-            zero, low, full = float(cls["zero"]), float(cls["low"]), float(cls["full"])
-            rec["cls_diff"] = (zero, low, full)
-        else:
-            zero, low, full = rec["cls_act"]
-        rec.update(zero=zero, low=low, full=full)
-        # --- BOPs ---
-        rec["bops_act"] = bops_mod.bops_act(macs, q_t)
-        rec["bops"] = bops_mod.bops_mixed(macs, zero, low, full) if d is not None else rec["bops_act"]
-        # --- memory traffic (bytes; mirrors repro.sim.cycles._mem_split) ---
-        w_bytes = k * n if not attention else 0  # weights stream once
-        act_bytes = t * k + t * n  # read x, write y (int8)
-        mem = w_bytes + act_bytes
-        if rec["mode"] == "diff":
-            extra = 4 * t * n  # y_prev read + y_t write (16-bit store)
-            if meta.boundary_in:
-                extra += 2 * t * k  # x_prev read + x_t write
-            mem += extra
-        rec["mem_bytes"] = mem
-        # --- cycles (Ditto hardware: adder-tree PEs, 4-bit multipliers) ---
-        eff_macs = macs * (low * 1.0 + full * 2.0) if d is not None else macs * 2.0
-        compute_cycles = eff_macs / (hw.n_pe * hw.mults_per_pe)
-        mem_cycles = mem / hw.bytes_per_cycle
-        rec["cycles"] = max(compute_cycles, mem_cycles) + min(compute_cycles, mem_cycles) * hw.overlap_slack
-        rec["compute_cycles"] = compute_cycles
-        rec["mem_cycles"] = mem_cycles
+            cls_diff = (float(cls["zero"]), float(cls["low"]), float(cls["full"]))
+        self._account_classes(rec, t, k, n, cls_act, cls_diff, meta, attention=attention)
+        hw = self.hw
+        macs = rec["macs"]
+        mem_cycles = rec["mem_cycles"]
         # spatial-mode counterfactual for Defo+ / the simulator
         if (self.step_idx == 0 and self.policy in ("defo+",)) or self.collect_oracle:
             q2 = q_t.reshape(t, k) if not attention else None
@@ -271,6 +252,116 @@ class DittoEngine:
                 cc2 = eff2 / (hw.n_pe * hw.mults_per_pe)
                 rec["cycles_spatial"] = max(cc2, mem_cycles) + min(cc2, mem_cycles) * hw.overlap_slack
                 rec["bops_spatial"] = bops_mod.bops_mixed(macs, *rec["cls_spatial"])
+
+    def _account_classes(self, rec, t, k, n, cls_act, cls_diff, meta, *, attention=False,
+                         cls_spatial=None):
+        """Price one record from precomputed class fractions.
+
+        This is the fraction-level core of ``_account``: the eager path
+        feeds it fractions measured from the materialized Δ tensors, the
+        compiled path feeds it fractions reduced on-device inside the jitted
+        step (``record_compiled_step``) — both produce the same schema the
+        simulator (repro.sim.cycles) prices.
+
+        The executed-mode stats (zero/low/full, bops, cycles) come from
+        ``cls_diff`` only when the record's mode actually ran in the diff
+        domain; an act record may still CARRY a candidate ``cls_diff`` /
+        ``cls_spatial`` so the simulator can re-price other designs'
+        mode choices at scaled dimensions.
+        """
+        hw = self.hw
+        macs = rec["macs"]
+        rec.update(t=t, k=k, n=n, attention=attention,
+                   boundary_in=meta.boundary_in, boundary_out=meta.boundary_out)
+        rec["cls_act"] = cls_act
+        if cls_diff is not None:
+            rec["cls_diff"] = cls_diff
+        if cls_spatial is not None:
+            rec["cls_spatial"] = cls_spatial
+        executed_diff = cls_diff is not None and rec["mode"] in ("diff", "spatial")
+        zero, low, full = cls_diff if executed_diff else cls_act
+        rec.update(zero=zero, low=low, full=full)
+        # --- BOPs ---
+        rec["bops_act"] = bops_mod.bops_act(macs)
+        rec["bops"] = bops_mod.bops_mixed(macs, zero, low, full) if executed_diff else rec["bops_act"]
+        # --- memory traffic (bytes; mirrors repro.sim.cycles._mem_split) ---
+        w_bytes = k * n if not attention else 0  # weights stream once
+        act_bytes = t * k + t * n  # read x, write y (int8)
+        mem = w_bytes + act_bytes
+        if rec["mode"] == "diff":
+            extra = 4 * t * n  # y_prev read + y_t write (16-bit store)
+            if meta.boundary_in:
+                extra += 2 * t * k  # x_prev read + x_t write
+            mem += extra
+        rec["mem_bytes"] = mem
+        # --- cycles (Ditto hardware: adder-tree PEs, 4-bit multipliers) ---
+        eff_macs = macs * (low * 1.0 + full * 2.0) if executed_diff else macs * 2.0
+        compute_cycles = eff_macs / (hw.n_pe * hw.mults_per_pe)
+        mem_cycles = mem / hw.bytes_per_cycle
+        rec["cycles"] = max(compute_cycles, mem_cycles) + min(compute_cycles, mem_cycles) * hw.overlap_slack
+        rec["compute_cycles"] = compute_cycles
+        rec["mem_cycles"] = mem_cycles
+
+    # ------------------------------------------------- compiled execution
+    def ready_for_compiled(self) -> bool:
+        """True once everything the compiled pass bakes in statically is
+        fixed: activation scales and prev-step state exist (>= 1 eager
+        step) and, for Defo policies, the per-layer mode decision has been
+        made (after step 2's diff probe)."""
+        if self.step_idx < 1:
+            return False
+        if self.policy in ("defo", "defo+") and not self._decided:
+            return False
+        return True
+
+    def compiled_modes(self) -> dict[str, str]:
+        """Static per-layer execution modes for the compiled pass (the mode
+        ``_mode_for_step`` would return for every remaining step).
+
+        Attention layers have no spatial path (the eager engine falls back
+        to act there), so 'spatial' maps to 'act' for them.
+        """
+        modes: dict[str, str] = {}
+        for name, st in self.layers.items():
+            if self.policy in ("act", "diff", "spatial"):
+                m = self.policy
+            else:  # defo / defo+ after _defo_decide
+                m = st.mode
+            if m == "spatial" and self.meta[name].kind in ("attn_qk", "attn_pv"):
+                m = "act"
+            modes[name] = m
+        return modes
+
+    def record_compiled_step(self, aux: dict[str, dict]) -> None:
+        """Append records for one compiled step.
+
+        ``aux`` comes out of the jitted step function: per layer, the
+        zero/low/full class fractions reduced on-device — 'cls_act'
+        always, 'cls_diff' / 'cls_spatial' where the layer has the state
+        to measure them (candidate stats are kept even for act-frozen
+        layers so the simulator can re-price other designs' mode choices).
+        Layer dimensions are reused from that layer's calibration-step
+        record — shapes are static across the denoising loop (same
+        latents/batch), which is exactly what lets the step be jitted in
+        the first place.
+        """
+        if self._compiled_base is None:
+            base_by_layer: dict[str, dict] = {}
+            for r in self.records:
+                base_by_layer.setdefault(r["layer"], r)
+            self._compiled_base = (self.compiled_modes(), base_by_layer)
+        modes, base_by_layer = self._compiled_base
+        for name, a in aux.items():
+            base = base_by_layer[name]
+            meta = self.meta[name]
+            rec: dict[str, Any] = {"layer": name, "step": self.step_idx, "mode": modes[name],
+                                   "kind": meta.kind, "macs": base["macs"], "compiled": True}
+            cls_act = tuple(float(v) for v in a["cls_act"])
+            cls_diff = tuple(float(v) for v in a["cls_diff"]) if "cls_diff" in a else None
+            cls_sp = tuple(float(v) for v in a["cls_spatial"]) if "cls_spatial" in a else None
+            self._account_classes(rec, base["t"], base["k"], base["n"], cls_act, cls_diff, meta,
+                                  attention=base["attention"], cls_spatial=cls_sp)
+            self.records.append(rec)
 
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:

@@ -37,9 +37,14 @@ def diff_encode(
     *,
     bm: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """x_*: (M, K) int8 -> tile classes (M/bm, K/bk) int32."""
+    """x_*: (M, K) int8 -> tile classes (M/bm, K/bk) int32.
+
+    interpret=None auto-detects: native lowering on TPU, interpreter
+    (bit-identical math) everywhere else."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = x_t.shape
     assert m % bm == 0 and k % bk == 0, (x_t.shape, bm, bk)
     grid = (m // bm, k // bk)

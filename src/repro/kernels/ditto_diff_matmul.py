@@ -57,10 +57,15 @@ def ditto_diff_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """x_*: (M,K) int8; w_q: (K,N) int8; y_prev: (M,N) int32;
-    classes: (M/bm, K/bk) int32 from diff_encode. Returns y_t int32."""
+    classes: (M/bm, K/bk) int32 from diff_encode. Returns y_t int32.
+
+    interpret=None auto-detects: native lowering on TPU, interpreter
+    (bit-identical math) everywhere else."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = x_t.shape
     k2, n = w_q.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0

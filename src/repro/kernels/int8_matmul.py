@@ -41,8 +41,12 @@ def int8_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    """interpret=None auto-detects: native lowering on TPU, interpreter
+    (bit-identical math) everywhere else."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (x_q.shape, w_q.shape)

@@ -33,14 +33,24 @@ def _pad2(a, bm, bk, fill=0):
     return a
 
 
-def quantized_matmul(x_q, w_q, x_scale, w_scale, *, bm=128, bn=128, bk=128, interpret=None):
-    """int8 x int8 -> fp32 with scales (baseline act-mode path)."""
+def int8_act_matmul(x_q, w_q, *, bm=128, bn=128, bk=128, interpret=None):
+    """(M,K) int8 @ (K,N) int8 -> (M,N) int32, exact (act-mode ITC path).
+
+    Pads both operands to the (bm, bn, bk) tile grid with zeros — padding
+    contributes nothing to the int32 accumulation, so the sliced result is
+    bit-identical to the unpadded matmul.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     m, k = x_q.shape
     n = w_q.shape[1]
     xp = _pad2(x_q, bm, bk)
     wp = _pad2(w_q, bk, bn)
-    y = int8_matmul(xp, wp, bm=bm, bn=bn, bk=bk, interpret=interpret)[:m, :n]
+    return int8_matmul(xp, wp, bm=bm, bn=bn, bk=bk, interpret=interpret)[:m, :n]
+
+
+def quantized_matmul(x_q, w_q, x_scale, w_scale, *, bm=128, bn=128, bk=128, interpret=None):
+    """int8 x int8 -> fp32 with scales (baseline act-mode path)."""
+    y = int8_act_matmul(x_q, w_q, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return y.astype(jnp.float32) * x_scale * w_scale[None, :]
 
 

@@ -147,7 +147,7 @@ def _mlstm_chunked(q, k, v, it, ft, state, *, n_heads, head_dim, chunk):
         lf = -jax.nn.softplus(-fc)  # log sigmoid(f)
         bcum = jnp.cumsum(lf, axis=1)  # (b,c,h)
         a_rel = ic - bcum  # (b,c,h)
-        g = jnp.maximum(jnp.maximum.accumulate(a_rel, axis=1), m_prev[:, None, :])  # (b,c,h)
+        g = jnp.maximum(jax.lax.cummax(a_rel, axis=1), m_prev[:, None, :])  # (b,c,h)
         # inter-chunk: C[p, r] = v_p k_r, so q contracts the k-index r
         inter_w = jnp.exp(m_prev[:, None, :] - g)  # (b,c,h)
         y_inter = jnp.einsum("bchr,bhpr->bchp", qc, C_prev) * inter_w[..., None]

@@ -39,6 +39,26 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
     return eng.records, sample, eng
 
 
+def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
+                  sampler: str = "ddim", policy: str = "defo", compiled: bool = True,
+                  interpret: bool | None = None, collect_stats: bool = True):
+    """The deployment pass: eager calibration (+ the Defo mode decision
+    after step 2), then the remaining steps through the jit-compiled Pallas
+    path — act layers on int8_matmul, diff layers on diff_encode ->
+    ditto_diff_matmul with on-device tile skipping. Records cover every
+    step (compiled steps synthesize records from on-device class fractions
+    unless collect_stats=False) and keep candidate-mode stats — spatial
+    counterfactuals on the calibration steps (collect_oracle) and
+    temporal/spatial fractions on compiled steps even for act-frozen
+    layers — so run_designs can still re-price every design point."""
+    eng = DittoEngine(policy=policy, collect_oracle=collect_stats)
+    fn = make_denoise_fn(params, cfg, eng, compiled=compiled, interpret=interpret,
+                         collect_stats=collect_stats)
+    eng.begin_sample()
+    sample = diffusion.SAMPLERS[sampler](sched, fn, x_T, steps=steps, labels=labels)
+    return eng.records, sample, eng
+
+
 def run_designs(records, *, t_mult: float = 1.0, d_mult: float = 1.0, seq_mult: float | None = None,
                 designs=tuple(DESIGN_HW), **mode_kw) -> dict:
     recs = cycles.scale_records(records, t_mult=t_mult, d_mult=d_mult, seq_mult=seq_mult)

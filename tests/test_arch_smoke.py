@@ -13,6 +13,8 @@ from repro.launch import steps as steps_mod
 from repro.models.lm import LM
 from repro.nn import dit as dit_mod
 
+pytestmark = pytest.mark.slow  # one fwd+train+decode per arch: ~1 min total
+
 ARCHS = configs.names()
 
 

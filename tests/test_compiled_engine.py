@@ -1,0 +1,163 @@
+"""Compiled (jit + Pallas) execution pass vs the eager engine.
+
+The contract: given the same quantized inputs and temporal state, the
+compiled per-layer ops are bit-identical to the eager engine in the int32
+domain — for act mode (int8_matmul kernel), diff mode (diff_encode ->
+ditto_diff_matmul with on-device tile skipping) and the two-sub-op
+attention identity — across shapes that are NOT multiples of the 128-tile
+grid (zero padding is exact). End-to-end, the hybrid serve path (eager
+calibration -> compiled steps) tracks the all-eager trajectory to float
+rounding (XLA fuses the fp32 glue differently under jit, which can flip a
+quantize rounding by one ulp downstream — the int domain itself is exact).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diffusion
+from repro.core.ditto import CompiledDittoDiT, DittoDiT, DittoEngine
+from repro.core.ditto.compiled import CompiledDittoEngine
+from repro.core.ditto.engine import LayerMeta
+from repro.nn import dit as dit_mod
+from repro.sim import harness
+
+# token/feature dims deliberately off the 128-tile grid (exercise padding)
+LINEAR_SHAPES = [(13, 40, 24), (128, 128, 128), (130, 200, 96), (64, 129, 130)]
+
+
+def _calibrated_linear_engine(key, policy, t, k, n, n_steps=2):
+    """Engine with one registered linear, run n_steps eager steps."""
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    eng = DittoEngine(policy=policy)
+    eng.register_linear(LayerMeta("l"), w)
+    eng.begin_sample()
+    for i in range(n_steps):
+        eng.linear("l", jax.random.normal(jax.random.fold_in(key, 10 + i), (t, k)))
+        eng.end_step()
+    return eng
+
+
+@pytest.mark.parametrize("t,k,n", LINEAR_SHAPES)
+@pytest.mark.parametrize("policy", ["act", "diff"])
+def test_compiled_linear_bitexact_int32(key, policy, t, k, n):
+    """Jitted Pallas linear == eager engine linear, bit-identical int32."""
+    eng = _calibrated_linear_engine(key, policy, t, k, n)
+    ceng = CompiledDittoEngine(eng)
+    st = ceng.init_state()["l"]
+    x = jax.random.normal(jax.random.fold_in(key, 99), (t, k))
+    eng.linear("l", x)  # eager step 3 updates st.y_prev
+    _, st2, _ = jax.jit(lambda xx, ss: ceng.linear("l", xx, ss))(x, st)
+    np.testing.assert_array_equal(np.asarray(eng.layers["l"].y_prev), np.asarray(st2["y_prev"]))
+    np.testing.assert_array_equal(np.asarray(eng.layers["l"].x_prev), np.asarray(st2["x_prev"]))
+
+
+@pytest.mark.parametrize("b,m,d,n", [(3, 10, 16, 12), (2, 128, 64, 130)])
+@pytest.mark.parametrize("policy", ["act", "diff"])
+def test_compiled_attention_bitexact_int32(key, policy, b, m, d, n):
+    """Batched compiled attention (scan over the diff kernel) == eager."""
+    eng = DittoEngine(policy=policy)
+    eng.register_attention(LayerMeta("qk", kind="attn_qk"))
+    eng.begin_sample()
+    for i in range(2):
+        a = jax.random.normal(jax.random.fold_in(key, 10 + i), (b, m, d))
+        bb = jax.random.normal(jax.random.fold_in(key, 20 + i), (b, n, d))
+        eng.attention_matmul("qk", a, bb)
+        eng.end_step()
+    ceng = CompiledDittoEngine(eng)
+    st = ceng.init_state()["qk"]
+    a = jax.random.normal(jax.random.fold_in(key, 99), (b, m, d))
+    bb = jax.random.normal(jax.random.fold_in(key, 98), (b, n, d))
+    eng.attention_matmul("qk", a, bb)
+    _, st2, _ = jax.jit(lambda aa, xx, ss: ceng.attention_matmul("qk", aa, xx, ss))(a, bb, st)
+    np.testing.assert_array_equal(np.asarray(eng.layers["qk"].y_prev), np.asarray(st2["y_prev"]))
+
+
+def test_compiled_requires_calibration(key):
+    eng = _calibrated_linear_engine(key, "defo", 8, 16, 8, n_steps=1)
+    # defo has not decided yet after one step
+    with pytest.raises(ValueError):
+        CompiledDittoEngine(eng)
+    eng2 = DittoEngine(policy="act")
+    eng2.register_linear(LayerMeta("l"), np.zeros((4, 4), np.float32))
+    eng2.begin_sample()
+    with pytest.raises(ValueError):
+        CompiledDittoEngine(eng2)  # no steps at all
+
+
+CFG = dit_mod.DiTCfg(d_model=64, n_layers=2, n_heads=2, patch=2, in_channels=4,
+                     input_size=8, n_classes=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init(key, CFG)
+    lat = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, 4))
+    labels = jnp.array([0, 1])
+    return params, lat, labels
+
+
+@pytest.mark.slow
+def test_hybrid_serve_matches_eager_trajectory(setup):
+    """Eager-calibrate-then-compile tracks the all-eager run; records cover
+    every (layer, step) with the frozen modes and matching class stats."""
+    params, lat, labels = setup
+    n_steps = 5
+
+    def drive(use_compiled):
+        eng = DittoEngine(policy="defo")
+        run = DittoDiT(params, CFG, eng)
+        comp = None
+        eng.begin_sample()
+        outs = []
+        x = lat
+        for i in range(n_steps):
+            t = jnp.full((2,), 900.0 - 40 * i)
+            if use_compiled and eng.ready_for_compiled():
+                if comp is None:
+                    comp = CompiledDittoDiT(params, CFG, eng)
+                outs.append(np.asarray(comp(x, t, labels)))
+            else:
+                outs.append(np.asarray(run(x, t, labels)))
+            eng.end_step()
+            x = x * 0.98 + 0.01
+        return outs, eng
+
+    eager_outs, eng_e = drive(False)
+    comp_outs, eng_c = drive(True)
+    for i, (a, b) in enumerate(zip(eager_outs, comp_outs)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5, err_msg=f"step {i}")
+    # record coverage and mode labels agree with the frozen decision
+    cover_e = {(r["layer"], r["step"]) for r in eng_e.records}
+    cover_c = {(r["layer"], r["step"]) for r in eng_c.records}
+    assert cover_e == cover_c
+    modes = eng_c.compiled_modes()
+    for r in eng_c.records:
+        if r.get("compiled"):
+            assert r["mode"] == modes[r["layer"]]
+            assert r["step"] >= 2
+    # class fractions of synthesized records track the eager ones
+    by_key_e = {(r["layer"], r["step"]): r for r in eng_e.records}
+    for r in eng_c.records:
+        if not r.get("compiled"):
+            continue
+        re_ = by_key_e[(r["layer"], r["step"])]
+        np.testing.assert_allclose(r["cls_act"], re_["cls_act"], atol=0.02)
+        assert r["macs"] == re_["macs"] and r["t"] == re_["t"]
+
+
+def test_serve_records_compiled_full_loop(setup):
+    """sim.harness.serve_records: sampler loop through the compiled path —
+    sane output, full record coverage, diff never costs more BOPs."""
+    params, lat, labels = setup
+    sched = diffusion.cosine_schedule(100)
+    records, out, eng = harness.serve_records(params, CFG, sched, lat, labels,
+                                              steps=5, compiled=True)
+    assert out.shape == lat.shape
+    assert not bool(jnp.isnan(out).any())
+    assert any(r.get("compiled") for r in records)
+    s = eng.summary()
+    assert s["steps"] == 5
+    assert s["bops"] <= s["bops_act"] + 1e-6
+    assert len({r["step"] for r in records}) == 5

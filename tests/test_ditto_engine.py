@@ -82,6 +82,20 @@ def test_defo_decides_and_freezes_modes(setup):
         assert frozen == want
 
 
+@pytest.mark.parametrize("policy", ["spatial", "defo+"])
+def test_step0_fallback_records_labeled_act(setup, policy):
+    """Regression: when the act fallback fires (no prev-step state yet) the
+    record must say 'act' — a 'diff'/'spatial' label would charge
+    diff-mode memory traffic for a step that executed act."""
+    params, lat, labels = setup
+    _, eng = _run(params, lat, labels, policy, n_steps=2)
+    step0 = [r for r in eng.records if r["step"] == 0]
+    assert step0 and all(r["mode"] == "act" for r in step0)
+    # under policy='diff' the first-ever step falls back to act as well
+    _, eng_d = _run(params, lat, labels, "diff", n_steps=1)
+    assert all(r["mode"] == "act" for r in eng_d.records)
+
+
 def test_defo_static_analysis_dit():
     metas = defo.analyze(defo.dit_graph(2))
     # qkv feed the attention matmuls directly -> summation bypass

@@ -12,6 +12,8 @@ from repro.models.lm import LM
 from repro.nn import attention as A
 from repro.nn import core as nncore
 
+pytestmark = pytest.mark.slow
+
 STEP_ARCHS = ["qwen3-0.6b", "smollm-360m", "xlstm-125m", "zamba2-7b", "musicgen-medium", "arctic-480b"]
 
 

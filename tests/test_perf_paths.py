@@ -26,6 +26,7 @@ def test_ssd_equals_recurrent(key):
     np.testing.assert_allclose(np.asarray(h_s), np.asarray(h_r), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_ssd_gradients_match_recurrent(key):
     cfg_r = ssm.MambaCfg(32, d_state=8, head_dim=8, impl="recurrent")
     cfg_s = dataclasses.replace(cfg_r, impl="ssd", chunk=8)
@@ -44,6 +45,7 @@ def test_ssd_gradients_match_recurrent(key):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_ssd_decode_path_unchanged(key):
     """decode (S=1) still uses the recurrent cell and matches training."""
     arch = configs.get("zamba2-7b").smoke()

@@ -155,6 +155,7 @@ def test_hlo_analyzer_counts_scan_flops():
 
 
 # ------------------------------------------------------------- train driver
+@pytest.mark.slow
 def test_train_driver_resume_bitexact(tmp_path, key):
     arch = configs.get("smollm-360m").smoke()
     kw = dict(workdir=str(tmp_path / "a"), batch=2, seq=16, total_steps=8, ckpt_every=0)

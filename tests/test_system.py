@@ -20,6 +20,8 @@ from repro.data.synthetic import DataCfg, batch_for
 from repro.launch import steps as steps_mod
 from repro.nn import dit as dit_mod
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained_tiny_dit():

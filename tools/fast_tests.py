@@ -1,0 +1,26 @@
+#!/usr/bin/env python
+"""Fast tier-1 subset: everything not marked ``slow`` (sub-2-minute loop).
+
+    python tools/fast_tests.py [extra pytest args]
+
+The full tier-1 run stays `PYTHONPATH=src python -m pytest -x -q` (~8 min);
+this entry point sets PYTHONPATH itself and deselects the long
+system/pipeline/model-equivalence tests for the inner dev loop.
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> int:
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "not slow", *sys.argv[1:]]
+    return subprocess.call(cmd, cwd=ROOT, env=env)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
