@@ -76,7 +76,7 @@ def run():
     eager_ss, comp_ss, fast_ss = _steady(t_eager), _steady(t_comp), _steady(t_fast)
     deager_ss, dcomp_ss = _steady(t_deager), _steady(t_dcomp)
     n_diff = sum(1 for m in eng.summary()["modes"].values() if m == "diff")
-    return [
+    rows = [
         ("bench_step/eager_ms", round(eager_ss * 1e6, 1), round(eager_ss * 1e3, 2)),
         ("bench_step/compiled_ms", round(comp_ss * 1e6, 1), round(comp_ss * 1e3, 2)),
         ("bench_step/compiled_nostats_ms", round(fast_ss * 1e6, 1), round(fast_ss * 1e3, 2)),
@@ -88,6 +88,8 @@ def run():
         ("bench_step/diff_speedup", 0, round(deager_ss / dcomp_ss, 2)),
         ("bench_step/diff_mode_layers", 0, n_diff),
     ]
+    common.record_perf("bench_step", rows)
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,84 @@
+"""Serving benchmark: persistent runner cache + batch buckets vs per-batch
+recompilation.
+
+A ragged request queue (batch sizes off the bucket grid) is served twice
+through the compiled Ditto path on the dit* model:
+
+  nocache : PR-1 behavior — every batch builds a fresh compiled runner,
+            so XLA re-traces and re-compiles per batch;
+  cached  : one ServeSession — batches are padded to power-of-two batch
+            buckets and every (mode-signature, bucket) compiles exactly
+            once, later batches replay the cached trace.
+
+Reported: total wall-clock for the queue under both regimes, the XLA
+trace counts (the cached path's comes from the CompiledRunnerCache trace
+counter; the nocache path traces once per batch by construction), and the
+steady-state per-batch wall of cache-hit batches. Results also land in
+benchmarks/BENCH_serve.json (common.record_perf) so the serving perf
+trajectory persists across PRs.
+
+    PYTHONPATH=src python benchmarks/bench_serve_cache.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+import common
+from repro.serve import ServeSession
+from repro.sim import harness
+
+STEPS = 8
+# ragged on purpose: 3 -> bucket 4, 2 -> bucket 2; two buckets total
+BATCH_SIZES = [4, 3, 4, 2, 3]
+
+
+def run():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    requests = []
+    for i, b in enumerate(BATCH_SIZES):
+        x, labels = common.sample_inputs(bm, batch=b, seed=100 + i)
+        requests.append((x, labels))
+
+    # ---- nocache: fresh compiled runner per batch (one trace per batch) --
+    t0 = time.monotonic()
+    for x, labels in requests:
+        _, sample, _ = harness.serve_records(params, dcfg, sched, x, labels, steps=STEPS,
+                                             sampler=bm.sampler, compiled=True,
+                                             collect_stats=False)
+        jax.block_until_ready(sample)  # symmetric with ServeSession._serve_chunk
+    nocache_s = time.monotonic() - t0
+
+    # ---- cached: one session, shared runner cache, bucket padding --------
+    sess = ServeSession(params, dcfg, sched, steps=STEPS, sampler=bm.sampler,
+                        compiled=True, collect_stats=False, max_batch=8)
+    t0 = time.monotonic()
+    results = [sess.serve(x, labels) for x, labels in requests]
+    cached_s = time.monotonic() - t0
+
+    st = sess.stats()
+    hit_walls = [r.wall_s for r in results if r.traces_delta == 0]
+    steady_ms = 1e3 * sum(hit_walls) / max(len(hit_walls), 1)
+    rows = [
+        ("bench_serve/batches", 0, len(BATCH_SIZES)),
+        ("bench_serve/requests", 0, sum(BATCH_SIZES)),
+        ("bench_serve/nocache_total_s", round(nocache_s * 1e6 / len(BATCH_SIZES), 1),
+         round(nocache_s, 2)),
+        ("bench_serve/cached_total_s", round(cached_s * 1e6 / len(BATCH_SIZES), 1),
+         round(cached_s, 2)),
+        ("bench_serve/speedup_total", 0, round(nocache_s / cached_s, 2)),
+        ("bench_serve/nocache_traces", 0, len(BATCH_SIZES)),
+        ("bench_serve/cached_traces", 0, st["traces"]),
+        ("bench_serve/cached_runners", 0, st["runners"]),
+        ("bench_serve/cache_hits", 0, st["hits"]),
+        ("bench_serve/cached_steady_batch_ms", 0, round(steady_ms, 1)),
+    ]
+    common.record_perf("bench_serve", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

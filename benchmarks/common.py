@@ -134,3 +134,33 @@ def emit(rows: list[tuple]):
     """CSV protocol: name,us_per_call,derived"""
     for name, us, derived in rows:
         print(f"{name},{us},{derived}")
+
+
+PERF_RECORD = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+
+def record_perf(section: str, rows: list[tuple]):
+    """Merge one benchmark's rows into the serving perf record.
+
+    benchmarks/BENCH_serve.json keeps the latest measurement per section
+    ({section: {name: {us, derived}}} + an updated-at stamp) so the
+    serving-performance trajectory is tracked across PRs instead of living
+    only in transient stdout. Written atomically (tmp + rename)."""
+    import json
+    import time as _time
+
+    path = os.path.abspath(PERF_RECORD)
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data[section] = {name: {"us": us, "derived": derived} for name, us, derived in rows}
+    data.setdefault("_meta", {})[section] = _time.strftime("%Y-%m-%dT%H:%M:%S")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)

@@ -27,6 +27,7 @@ MODULES = [
     "fig18_ideal",
     "fig19_dynamic",
     "bench_compiled_step",
+    "bench_serve_cache",
 ]
 
 

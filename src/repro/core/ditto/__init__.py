@@ -1,6 +1,6 @@
 from . import bops, classify, defo, quant
 from .compiled import CompiledDittoEngine
-from .dit_runner import CompiledDittoDiT, DittoDiT, make_denoise_fn
+from .dit_runner import CompiledDittoDiT, DittoDiT, make_denoise_fn, make_step_fn
 from .engine import DittoEngine, LayerMeta
 from .hwmodel import ALL_HW, CAMBRICON_D, DEFAULT_HW, DIFFY, DITTO_HW, ITC, HwModel
 
@@ -13,6 +13,7 @@ __all__ = [
     "CompiledDittoDiT",
     "CompiledDittoEngine",
     "make_denoise_fn",
+    "make_step_fn",
     "DittoEngine",
     "LayerMeta",
     "ALL_HW",

@@ -68,6 +68,89 @@ def _spatial_fractions(q2: jax.Array) -> tuple:
     return (z * (1 - w0), l * (1 - w0), f * (1 - w0) + w0)
 
 
+def linear_apply(p: dict, mode: str, x: jax.Array, st: dict, *, blk: dict,
+                 collect_stats: bool) -> tuple[jax.Array, dict, dict]:
+    """Pure compiled linear op: params in, state in -> (y fp32, state, aux).
+
+    Functional core of :meth:`CompiledDittoEngine.linear`. Everything
+    data-dependent — weight q-tensors, calibrated scales, temporal state —
+    arrives as arguments rather than closure constants, so one traced step
+    function can be REUSED across serve batches (repro.serve's runner
+    cache); only ``mode``/``blk``/``collect_stats`` are trace-static.
+    Bit-identical int32 y_prev to the eager path for every mode.
+    """
+    x2 = x.reshape(-1, x.shape[-1])
+    n = p["w_q"].shape[1]
+    q_t = quant.quantize(x2, p["x_scale"])
+
+    aux: dict = {}
+    if mode == "diff":
+        y_i32, _ = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"], **blk)
+    else:  # act, and spatial (whose eager branch computes the direct GEMM)
+        y_i32 = ops.int8_act_matmul(q_t, p["w_q"], **blk)
+    if collect_stats:
+        # executed-mode stats for pricing this step, plus candidate
+        # temporal/spatial fractions for every layer so the simulator
+        # can re-price other designs' mode choices at scaled dims
+        if mode == "spatial":
+            aux["cls_diff"] = _class_fractions(classify.spatial_diff(q_t, axis=0)[1:])
+        else:
+            d = q_t.astype(jnp.int16) - st["x_prev"].astype(jnp.int16)
+            aux["cls_diff"] = _class_fractions(d)
+        if q_t.shape[0] > 1:
+            aux["cls_spatial"] = _spatial_fractions(q_t)
+        aux["cls_act"] = _act_fractions(q_t)
+
+    new_st = dict(x_prev=q_t, y_prev=y_i32)
+    y = y_i32.astype(jnp.float32) * p["x_scale"] * p["w_scale"][None, :]
+    if p["bias"] is not None:
+        y = y + p["bias"]
+    return y.reshape(x.shape[:-1] + (n,)), new_st, aux
+
+
+def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
+                    blk: dict, collect_stats: bool) -> tuple[jax.Array, dict, dict]:
+    """Pure compiled attention matmul (a @ b^T per leading-dim element).
+
+    Functional core of :meth:`CompiledDittoEngine.attention_matmul`: diff
+    mode composes the paper's two-sub-op identity from the diff kernel
+    (ops.attention_delta), act mode runs int8_matmul; ``lax.scan`` over the
+    (batch x heads) leading dim keeps one kernel trace. Params/state are
+    arguments so the trace is shareable across batches.
+    """
+    lead = a.shape[:-2]
+    m, d_ = a.shape[-2], a.shape[-1]
+    n = b.shape[-2]
+    a2 = a.reshape(-1, m, d_)
+    b2 = b.reshape(-1, n, d_)
+    qa = quant.quantize(a2, p["a_scale"])
+    qb = quant.quantize(b2, p["b_scale"])
+
+    aux: dict = {}
+    if mode == "diff":
+        def body(c, ins):
+            qa_i, qb_i, ap_i, bp_i, yp_i = ins
+            y_i, _ = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i, **blk)
+            return c, y_i
+
+        _, y_i32 = jax.lax.scan(body, 0, (qa, qb, st["a_prev"], st["b_prev"], st["y_prev"]))
+    else:
+        def body(c, ins):
+            qa_i, qb_i = ins
+            return c, ops.int8_act_matmul(qa_i, qb_i.T, **blk)
+
+        _, y_i32 = jax.lax.scan(body, 0, (qa, qb))
+    if collect_stats:
+        da = qa.astype(jnp.int16) - st["a_prev"].astype(jnp.int16)
+        db = qb.astype(jnp.int16) - st["b_prev"].astype(jnp.int16)
+        aux["cls_diff"] = _class_fractions(jnp.concatenate([da.reshape(-1), db.reshape(-1)]))
+        aux["cls_act"] = _act_fractions(jnp.concatenate([qa.reshape(-1), qb.reshape(-1)]))
+
+    new_st = dict(a_prev=qa, b_prev=qb, y_prev=y_i32)
+    y = y_i32.astype(jnp.float32) * p["a_scale"] * p["b_scale"]
+    return y.reshape(lead + (m, n)), new_st, aux
+
+
 class CompiledDittoEngine:
     """Per-layer compiled ops with static modes, built from a calibrated
     eager engine. All methods are pure (state in, state out) and
@@ -115,37 +198,10 @@ class CompiledDittoEngine:
         """Mirror of DittoEngine.linear with the mode baked in statically.
 
         Returns (y fp32, new_state, aux). Bit-identical int32 y_prev to the
-        eager path for every mode.
+        eager path for every mode. Delegates to :func:`linear_apply`.
         """
-        p = self.params[name]
-        mode = self.modes[name]
-        x2 = x.reshape(-1, x.shape[-1])
-        n = p["w_q"].shape[1]
-        q_t = quant.quantize(x2, p["x_scale"])
-
-        aux: dict = {}
-        if mode == "diff":
-            y_i32, _ = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"], **self._blk())
-        else:  # act, and spatial (whose eager branch computes the direct GEMM)
-            y_i32 = ops.int8_act_matmul(q_t, p["w_q"], **self._blk())
-        if self.collect_stats:
-            # executed-mode stats for pricing this step, plus candidate
-            # temporal/spatial fractions for every layer so the simulator
-            # can re-price other designs' mode choices at scaled dims
-            if mode == "spatial":
-                aux["cls_diff"] = _class_fractions(classify.spatial_diff(q_t, axis=0)[1:])
-            else:
-                d = q_t.astype(jnp.int16) - st["x_prev"].astype(jnp.int16)
-                aux["cls_diff"] = _class_fractions(d)
-            if q_t.shape[0] > 1:
-                aux["cls_spatial"] = _spatial_fractions(q_t)
-            aux["cls_act"] = _act_fractions(q_t)
-
-        new_st = dict(x_prev=q_t, y_prev=y_i32)
-        y = y_i32.astype(jnp.float32) * p["x_scale"] * p["w_scale"][None, :]
-        if p["bias"] is not None:
-            y = y + p["bias"]
-        return y.reshape(x.shape[:-1] + (n,)), new_st, aux
+        return linear_apply(self.params[name], self.modes[name], x, st,
+                            blk=self._blk(), collect_stats=self.collect_stats)
 
     # ------------------------------------------------------------ attention
     def attention_matmul(self, name: str, a: jax.Array, b: jax.Array,
@@ -153,38 +209,7 @@ class CompiledDittoEngine:
         """Mirror of DittoEngine.attention_matmul: a @ b^T per leading-dim
         element, diff mode via the paper's two-sub-op identity composed
         from the diff kernel (ops.attention_delta), act mode via
-        int8_matmul. lax.scan over the batch keeps one kernel trace."""
-        p = self.params[name]
-        mode = self.modes[name]
-        lead = a.shape[:-2]
-        m, d_ = a.shape[-2], a.shape[-1]
-        n = b.shape[-2]
-        a2 = a.reshape(-1, m, d_)
-        b2 = b.reshape(-1, n, d_)
-        qa = quant.quantize(a2, p["a_scale"])
-        qb = quant.quantize(b2, p["b_scale"])
-
-        blk = self._blk()
-        aux: dict = {}
-        if mode == "diff":
-            def body(c, ins):
-                qa_i, qb_i, ap_i, bp_i, yp_i = ins
-                y_i, _ = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i, **blk)
-                return c, y_i
-
-            _, y_i32 = jax.lax.scan(body, 0, (qa, qb, st["a_prev"], st["b_prev"], st["y_prev"]))
-        else:
-            def body(c, ins):
-                qa_i, qb_i = ins
-                return c, ops.int8_act_matmul(qa_i, qb_i.T, **blk)
-
-            _, y_i32 = jax.lax.scan(body, 0, (qa, qb))
-        if self.collect_stats:
-            da = qa.astype(jnp.int16) - st["a_prev"].astype(jnp.int16)
-            db = qb.astype(jnp.int16) - st["b_prev"].astype(jnp.int16)
-            aux["cls_diff"] = _class_fractions(jnp.concatenate([da.reshape(-1), db.reshape(-1)]))
-            aux["cls_act"] = _act_fractions(jnp.concatenate([qa.reshape(-1), qb.reshape(-1)]))
-
-        new_st = dict(a_prev=qa, b_prev=qb, y_prev=y_i32)
-        y = y_i32.astype(jnp.float32) * p["a_scale"] * p["b_scale"]
-        return y.reshape(lead + (m, n)), new_st, aux
+        int8_matmul. lax.scan over the batch keeps one kernel trace.
+        Delegates to :func:`attention_apply`."""
+        return attention_apply(self.params[name], self.modes[name], a, b, st,
+                               blk=self._blk(), collect_stats=self.collect_stats)

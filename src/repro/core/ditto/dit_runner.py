@@ -26,6 +26,7 @@ import numpy as np
 
 from ...nn import core as nncore
 from ...nn import dit as dit_mod
+from . import compiled as compiled_mod
 from . import defo
 from .compiled import CompiledDittoEngine
 from .engine import DittoEngine, LayerMeta
@@ -127,47 +128,79 @@ class DittoDiT:
                             latents, t, labels)
 
 
+def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128,
+                 interpret: bool | None = None, collect_stats: bool = True):
+    """Build the pure per-step function of the compiled execution pass.
+
+    Returns ``step(ditto_params, model_params, state, latents, t, labels)
+    -> (eps_hat, new_state, aux)``. Everything data-dependent — the
+    per-layer Ditto params (weight q-tensors, calibrated scales, biases),
+    the fp32 model params for the VPU-side glue, and the temporal state —
+    is an ARGUMENT, so the only trace-static inputs are ``cfg``, the
+    frozen per-layer ``modes``, and the kernel config. Two serve batches
+    that share those statics (and shapes) can therefore share ONE
+    ``jax.jit`` trace: this is what :class:`repro.serve.CompiledRunnerCache`
+    keys on to amortize compilation across the whole request stream.
+    """
+    modes = dict(modes)
+    blk = dict(bm=block, bn=block, bk=block, interpret=interpret)
+
+    def step(dparams, mparams, state, latents, t, labels):
+        new_state: dict = {}
+        aux: dict = {}
+
+        def lin(name, x):
+            y, st2, a = compiled_mod.linear_apply(dparams[name], modes[name], x, state[name],
+                                                  blk=blk, collect_stats=collect_stats)
+            new_state[name], aux[name] = st2, a
+            return y
+
+        def attn(name, a_, b_):
+            y, st2, a = compiled_mod.attention_apply(dparams[name], modes[name], a_, b_,
+                                                     state[name], blk=blk,
+                                                     collect_stats=collect_stats)
+            new_state[name], aux[name] = st2, a
+            return y
+
+        out = _dit_forward(mparams, cfg, lin, attn, latents, t, labels)
+        return out, new_state, aux
+
+    return step
+
+
 class CompiledDittoDiT:
     """Compiled execution pass: ONE jitted per-step function over the whole
     denoiser, built from a calibrated engine. Per-layer temporal state
     (x_prev/y_prev/attention operands) is threaded functionally; modes are
     frozen at trace time. With collect_stats, on-device class fractions
     come back as an aux pytree and the engine synthesizes cost-model
-    records for the step."""
+    records for the step.
+
+    With ``cache`` (a :class:`repro.serve.CompiledRunnerCache`) the jitted
+    step is fetched from / registered in the cache instead of being jitted
+    per instance, so later batches with the same (cfg, modes, kernel
+    config, shapes) reuse the existing trace. ``cache_extra`` feeds extra
+    key components (e.g. steps / batch bucket) into the cache key."""
 
     def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
-                 interpret: bool | None = None, collect_stats: bool = True):
+                 interpret: bool | None = None, collect_stats: bool = True,
+                 cache=None, cache_extra: tuple = ()):
         self.cfg = cfg
         self.engine = engine
         self.params = params
         self.ceng = CompiledDittoEngine(engine, interpret=interpret, collect_stats=collect_stats)
         self.state = self.ceng.init_state()
-        self._step = jax.jit(self._make_step())
-
-    def _make_step(self):
-        ceng, params, cfg = self.ceng, self.params, self.cfg
-
-        def step(state, latents, t, labels):
-            new_state: dict = {}
-            aux: dict = {}
-
-            def lin(name, x):
-                y, st2, a = ceng.linear(name, x, state[name])
-                new_state[name], aux[name] = st2, a
-                return y
-
-            def attn(name, a_, b_):
-                y, st2, a = ceng.attention_matmul(name, a_, b_, state[name])
-                new_state[name], aux[name] = st2, a
-                return y
-
-            out = _dit_forward(params, cfg, lin, attn, latents, t, labels)
-            return out, new_state, aux
-
-        return step
+        if cache is not None:
+            self._step = cache.step_for(cfg, self.ceng.modes, block=self.ceng.block,
+                                        interpret=interpret, collect_stats=collect_stats,
+                                        extra=tuple(cache_extra))
+        else:
+            self._step = jax.jit(make_step_fn(cfg, self.ceng.modes, block=self.ceng.block,
+                                              interpret=interpret, collect_stats=collect_stats))
 
     def __call__(self, latents, t, labels=None):
-        out, self.state, aux = self._step(self.state, latents, t, labels)
+        out, self.state, aux = self._step(self.ceng.params, self.params, self.state,
+                                          latents, t, labels)
         if self.ceng.collect_stats:
             self.engine.record_compiled_step(aux)
         return out
@@ -175,14 +208,18 @@ class CompiledDittoDiT:
 
 def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
                     compiled: bool = False, interpret: bool | None = None,
-                    collect_stats: bool = True):
+                    collect_stats: bool = True, runner_cache=None,
+                    cache_extra: tuple = ()):
     """denoise_fn(x, t, labels) for repro.core.diffusion samplers; calls
     engine.end_step() after each sampler step.
 
     compiled=True: once the engine is calibrated (engine.ready_for_compiled),
     the remaining steps run through the jitted Pallas path, seeded with the
-    eager pass's temporal state. A new compiled runner is built per sample
-    (begin_sample resets state and Defo may re-decide modes).
+    eager pass's temporal state. A new compiled runner object is built per
+    sample (begin_sample resets state and Defo may re-decide modes), but
+    with ``runner_cache`` the underlying jitted step function is shared
+    across samples/batches whose (cfg, modes, kernel config, shapes) agree
+    — one trace per runner-cache key instead of one per batch.
     """
     runner = DittoDiT(params, cfg, engine)
     box: dict = {}
@@ -191,7 +228,8 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
         if compiled and engine.ready_for_compiled():
             if box.get("built_for") is not engine.records:  # rebuilt per begin_sample
                 box["runner"] = CompiledDittoDiT(params, cfg, engine,
-                                                 interpret=interpret, collect_stats=collect_stats)
+                                                 interpret=interpret, collect_stats=collect_stats,
+                                                 cache=runner_cache, cache_extra=cache_extra)
                 box["built_for"] = engine.records
             out = box["runner"](x, t, labels)
         else:

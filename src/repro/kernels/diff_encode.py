@@ -12,6 +12,23 @@ per-(bm, bk)-tile class:
 The Δ itself is NOT written back to HBM: the consumer kernel re-derives it
 from the same int8 operands in VMEM (subtract-on-the-fly, exactly like the
 Encoding Unit feeding the Compute Unit through the pipeline).
+
+Tile shapes / grid
+    Grid (M/bm, K/bk) over (bm, bk) int8 input tiles (128x128 default);
+    the output is ONE int32 class per tile, shape (M/bm, K/bk) — the map
+    ``ditto_diff_matmul`` consumes through its scalar-prefetch slot.
+
+128-tile zero-padding contract
+    The raw kernel asserts M % bm == K % bk == 0; callers use
+    :func:`repro.kernels.ops.encode_classes`, which zero-pads BOTH
+    operands identically. Padding rows/cols contribute Δ == 0, so they
+    can only lower a tile's max|Δ| toward the zero class — never flip a
+    zero tile to nonzero — and the padded classification stays exact for
+    the real data (an all-padding tile is class 0 and is skipped).
+
+interpret=None backend auto-detection
+    ``interpret=None`` -> native Mosaic lowering on TPU, Pallas
+    interpreter (bit-identical integer math) on any other backend.
 """
 from __future__ import annotations
 

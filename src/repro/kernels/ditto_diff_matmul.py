@@ -14,6 +14,31 @@ predicate. The Δ is recomputed in VMEM from the int8 operands
 ``classes`` rides the scalar-prefetch slot (PrefetchScalarGridSpec) so a
 production TPU lowering can in principle skip the HBM->VMEM copies of
 skipped tiles too; in interpret mode it is a plain operand.
+
+Tile shapes / grid
+    Grid (M/bm, N/bn, K/bk), K innermost; (bm,bk) int8 x/x_prev tiles and
+    a (bk,bn) int8 weight tile feed the MXU, accumulating into a (bm,bn)
+    int32 VMEM scratch seeded from y_prev at k==0. Defaults are the
+    MXU-aligned 128s. ``classes`` has shape (M/bm, K/bk) — one class per
+    (i, kk) tile from ``diff_encode``.
+
+Zero-tile skipping
+    ``@pl.when(tile_cls > 0)`` gates the subtract + dot: a zero-class
+    tile issues NO MXU work. Skipping is exact (not approximate) because
+    class 0 means max|Δ| == 0, i.e. the skipped contribution is
+    identically zero — so the output is bit-identical to the dense diff
+    matmul regardless of how many tiles were skipped.
+
+128-tile zero-padding contract
+    The raw kernel asserts all dims divide the block sizes; callers use
+    :func:`repro.kernels.ops.ditto_linear_step`, which zero-pads x_t,
+    x_prev, W and y_prev to the tile grid. Padded Δ regions are exactly 0
+    (both operands get the same padding), so padded tiles classify as
+    zero/skippable and the sliced result is bit-identical to unpadded.
+
+interpret=None backend auto-detection
+    ``interpret=None`` -> native Mosaic lowering on TPU, Pallas
+    interpreter (bit-identical integer math) on any other backend.
 """
 from __future__ import annotations
 

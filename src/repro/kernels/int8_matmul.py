@@ -1,9 +1,26 @@
 """Tiled INT8 matmul Pallas kernel (the ITC-baseline compute path).
 
-Grid (M/bm, N/bn, K/bk), K innermost for accumulation; int8 tiles are
-MXU-fed with int32 accumulation in a VMEM scratch. Block sizes default to
-MXU-aligned 128s — (bm,bk) and (bk,bn) int8 tiles are 16KB each, well
-inside the ~16MB v5e VMEM budget with double buffering.
+Tile shapes / grid
+    Grid (M/bm, N/bn, K/bk), K innermost for accumulation; int8 tiles are
+    MXU-fed with int32 accumulation in a VMEM scratch that is zeroed at
+    k==0 and stored at k==n_k-1. Block sizes default to MXU-aligned 128s —
+    (bm,bk) and (bk,bn) int8 tiles are 16KB each, well inside the ~16MB
+    v5e VMEM budget with double buffering.
+
+128-tile zero-padding contract
+    The raw kernel asserts M % bm == N % bn == K % bk == 0. Callers go
+    through :func:`repro.kernels.ops.int8_act_matmul`, which zero-pads
+    both operands up to the 128-tile grid and slices the result back;
+    zero rows/columns contribute exactly 0 to every int32 partial sum, so
+    the sliced output is bit-identical to the unpadded matmul (this is
+    the contract the compiled engine's eager/compiled bit-identity tests
+    rely on).
+
+interpret=None backend auto-detection
+    ``interpret=None`` resolves to native Mosaic lowering when
+    ``jax.default_backend() == "tpu"`` and to the Pallas interpreter
+    everywhere else; the interpreter executes the identical integer math,
+    so CPU CI validates the same kernel body bit-for-bit.
 """
 from __future__ import annotations
 

@@ -1,0 +1,29 @@
+"""Persistent compiled serving runtime (runner cache + batch buckets).
+
+The production-facing layer over the two-phase Ditto engine:
+
+  :class:`CompiledRunnerCache` — one ``jax.jit`` trace per (model config,
+      layer-mode signature, kernel config, steps, batch bucket), reused
+      across every serve batch that maps to the same key;
+  :mod:`bucketing` — ragged request batches padded to power-of-two batch
+      buckets by row replication (bit-exact w.r.t. the unbucketed path);
+  :class:`ServeSession` — the request-stream front-end threading both
+      through ``sim.harness.serve_records``.
+
+See docs/architecture.md for the request lifecycle.
+"""
+from .bucketing import DEFAULT_MAX_BATCH, bucket_for, pad_batch
+from .cache import CompiledRunnerCache, RunnerKey, cfg_signature
+from .session import ChunkResult, ServeResult, ServeSession
+
+__all__ = [
+    "DEFAULT_MAX_BATCH",
+    "bucket_for",
+    "pad_batch",
+    "CompiledRunnerCache",
+    "RunnerKey",
+    "cfg_signature",
+    "ChunkResult",
+    "ServeResult",
+    "ServeSession",
+]

@@ -1,0 +1,59 @@
+"""Batch-dimension padding buckets for the serving path.
+
+Ragged request batches are padded UP to a small set of canonical batch
+sizes (powers of two by default) so that every batch hits an
+already-traced compiled runner instead of forcing a fresh XLA compile for
+its exact batch size: with buckets {1, 2, 4, 8, ...} an arbitrary request
+stream compiles at most ``log2(max_batch) + 1`` runners per layer-mode
+signature, instead of one per distinct batch size.
+
+Correctness contract (tested in tests/test_serve_cache.py): padding
+REPLICATES existing batch rows (cyclic ``arange(bucket) % n`` gather)
+rather than appending zeros. Every data-dependent quantity the engine
+calibrates per batch is a max-abs reduction over the batch
+(``quant.compute_scale``), and replicated rows can never change a max —
+so the calibrated scales, and therefore the quantized trajectory of the
+REAL rows, are bit-identical to an unpadded run. All remaining per-row
+compute in the DiT forward (attention within a sample, layernorm per
+token, DDIM per element) never mixes batch rows. Slicing the sample back
+to the true batch recovers exactly the unbucketed result.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_MAX_BATCH = 64
+
+
+def bucket_for(n: int, *, max_batch: int = DEFAULT_MAX_BATCH) -> int:
+    """Smallest power-of-two >= n, capped at ``max_batch``.
+
+    Batches larger than ``max_batch`` are the caller's job to split
+    (ServeSession chunks requests first), so n must be <= max_batch.
+    """
+    if n < 1:
+        raise ValueError(f"batch must be >= 1, got {n}")
+    if n > max_batch:
+        raise ValueError(f"batch {n} exceeds max_batch {max_batch}; chunk the request first")
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, max_batch)
+
+
+def pad_batch(x: jax.Array, labels: jax.Array | None, bucket: int
+              ) -> tuple[jax.Array, jax.Array | None]:
+    """Pad ``x`` (and ``labels``) along axis 0 to ``bucket`` rows by
+    cyclically replicating the real rows. Exactness: replicated rows keep
+    every max-abs calibration reduction unchanged (see module docstring).
+    """
+    n = x.shape[0]
+    if n == bucket:
+        return x, labels
+    if n > bucket:
+        raise ValueError(f"batch {n} larger than bucket {bucket}")
+    idx = jnp.arange(bucket) % n
+    xp = jnp.take(x, idx, axis=0)
+    lp = None if labels is None else jnp.take(labels, idx, axis=0)
+    return xp, lp

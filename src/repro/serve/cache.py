@@ -1,0 +1,126 @@
+"""Persistent compiled-runner cache for the serving path.
+
+PR 1's two-phase engine made the post-calibration denoising steps one
+jitted Pallas function — but every serve batch still built its own
+``CompiledDittoDiT``, whose step closed over that batch's params, so XLA
+re-traced and re-compiled per batch. ``make_step_fn`` (core.ditto.
+dit_runner) removed the closure: the step's only trace-static inputs are
+the model config, the frozen per-layer modes and the kernel config.
+This module adds the cross-batch memory: ONE ``jax.jit``-wrapped step per
+
+    RunnerKey = (model-cfg signature, layer-mode signature,
+                 kernel block / interpret / collect_stats,
+                 extra — e.g. (denoise steps, padded batch bucket))
+
+shared by every subsequent batch that maps to the same key (and shapes —
+which the batch bucket pins). The cache counts actual Python traces via a
+trace-time side effect, so tests can assert "N same-bucket batches
+compile exactly once" instead of inferring it from wall-clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax
+
+from ..core.ditto import dit_runner
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    # mirror the kernels' auto-detection so None and its resolved value
+    # cannot create two cache entries for the same lowering
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def cfg_signature(cfg) -> tuple:
+    """Hashable signature of a model config dataclass (e.g. DiTCfg)."""
+    if dataclasses.is_dataclass(cfg):
+        return (type(cfg).__name__,) + dataclasses.astuple(cfg)
+    return (type(cfg).__name__, repr(cfg))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunnerKey:
+    cfg_sig: tuple
+    mode_sig: tuple
+    block: int
+    interpret: bool
+    collect_stats: bool
+    extra: tuple = ()
+
+
+class CompiledRunnerCache:
+    """Trace-once store of jitted compiled-runner step functions.
+
+    ``step_for`` is the whole API surface the runner needs: it returns the
+    cached jitted step for the key, building (but not yet tracing — jax
+    traces lazily on first call per shape) it on a miss. ``trace_counts``
+    records how many times XLA actually traced each key's step; under
+    batch bucketing this stays at 1 per (key, bucket) no matter how many
+    batches are served.
+
+    Thread-safe: the serving layer may run batches from multiple request
+    threads against one shared cache.
+    """
+
+    def __init__(self):
+        self._steps: dict[RunnerKey, Callable] = {}
+        self.trace_counts: dict[RunnerKey, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------------ api
+    def key_for(self, cfg, modes: dict[str, str] | tuple, *, block: int = 128,
+                interpret: bool | None = None, collect_stats: bool = True,
+                extra: tuple = ()) -> RunnerKey:
+        mode_sig = tuple(sorted(modes.items())) if isinstance(modes, dict) else tuple(modes)
+        return RunnerKey(cfg_signature(cfg), mode_sig, block,
+                         _resolve_interpret(interpret), collect_stats, tuple(extra))
+
+    def step_for(self, cfg, modes: dict[str, str], *, block: int = 128,
+                 interpret: bool | None = None, collect_stats: bool = True,
+                 extra: tuple = ()) -> Callable:
+        """Jitted ``step(dparams, mparams, state, latents, t, labels)`` for
+        the key; traced at most once per (key, input shapes)."""
+        key = self.key_for(cfg, modes, block=block, interpret=interpret,
+                           collect_stats=collect_stats, extra=extra)
+        with self._lock:
+            if key in self._steps:
+                self.hits += 1
+                return self._steps[key]
+            self.misses += 1
+            raw = dit_runner.make_step_fn(cfg, modes, block=block, interpret=interpret,
+                                          collect_stats=collect_stats)
+
+            def counting_step(*args):
+                # executes only while jax is TRACING (jit caches the jaxpr
+                # afterwards), so this counts compilations, not calls
+                with self._lock:
+                    self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                return raw(*args)
+
+            fn = jax.jit(counting_step)
+            self._steps[key] = fn
+            self.trace_counts.setdefault(key, 0)
+            return fn
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def n_traces(self) -> int:
+        return sum(self.trace_counts.values())
+
+    def __len__(self) -> int:
+        return len(self._steps)
+
+    def stats(self) -> dict[str, Any]:
+        return {"runners": len(self._steps), "traces": self.n_traces,
+                "hits": self.hits, "misses": self.misses}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._steps.clear()
+            self.trace_counts.clear()
+            self.hits = self.misses = 0

@@ -1,0 +1,128 @@
+"""ServeSession: the stateful front-end of the persistent serving runtime.
+
+One session owns the model (params + config + schedule), a
+:class:`CompiledRunnerCache`, and the serving policy. Each ``serve(x,
+labels)`` call is one request batch; the session
+
+  1. chunks oversized requests to ``max_batch``,
+  2. pads each chunk up to its power-of-two batch bucket
+     (:mod:`repro.serve.bucketing` — replication padding, bit-exact),
+  3. runs the two-phase Ditto pass (eager calibration + Defo decision,
+     then the jitted Pallas steps) through ``sim.harness.serve_records``
+     with the shared runner cache, and
+  4. slices the sample back to the true batch.
+
+Across a request stream this turns one-XLA-trace-per-batch into
+one-trace-per-(mode-signature, bucket): the first batch of a bucket pays
+trace + compile, every later batch replays the cached runner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+
+from ..sim import harness
+from .bucketing import DEFAULT_MAX_BATCH, bucket_for
+from .cache import CompiledRunnerCache
+
+
+@dataclasses.dataclass
+class ChunkResult:
+    """One served chunk (<= max_batch requests, one bucket)."""
+    sample: jax.Array  # (true chunk batch, ...)
+    records: list
+    engine: Any
+    batch: int
+    bucket: int
+    wall_s: float
+    traces_delta: int  # new XLA traces this chunk caused (0 = full cache hit)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    sample: jax.Array  # (true request batch, ...) — chunks re-concatenated
+    chunks: list[ChunkResult]
+
+    @property
+    def records(self) -> list:
+        return [r for c in self.chunks for r in c.records]
+
+    @property
+    def wall_s(self) -> float:
+        return sum(c.wall_s for c in self.chunks)
+
+    @property
+    def traces_delta(self) -> int:
+        return sum(c.traces_delta for c in self.chunks)
+
+
+class ServeSession:
+    """Persistent compiled serving runtime for one model.
+
+    Parameters mirror ``sim.harness.serve_records``; ``cache`` may be
+    shared between sessions serving the same model (e.g. one per request
+    thread) — the runner key includes the model-config signature, so
+    distinct models never collide.
+    """
+
+    def __init__(self, params, cfg, sched, *, steps: int, sampler: str = "ddim",
+                 policy: str = "defo", compiled: bool = True,
+                 interpret: bool | None = None, collect_stats: bool = True,
+                 max_batch: int = DEFAULT_MAX_BATCH,
+                 cache: CompiledRunnerCache | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.sched = sched
+        self.steps = steps
+        self.sampler = sampler
+        self.policy = policy
+        self.compiled = compiled
+        self.interpret = interpret
+        self.collect_stats = collect_stats
+        self.max_batch = max_batch
+        self.cache = cache if cache is not None else CompiledRunnerCache()
+        self.batches_served = 0
+        self.requests_served = 0
+
+    # ------------------------------------------------------------------ api
+    def serve(self, x: jax.Array, labels=None) -> ServeResult:
+        """Serve one request batch; returns the sample at the TRUE batch
+        size plus per-chunk records/engines for the design-point simulator."""
+        n = x.shape[0]
+        chunks: list[ChunkResult] = []
+        samples = []
+        for lo in range(0, n, self.max_batch):
+            hi = min(lo + self.max_batch, n)
+            xc = x[lo:hi]
+            lc = None if labels is None else labels[lo:hi]
+            chunks.append(self._serve_chunk(xc, lc))
+            samples.append(chunks[-1].sample)
+        self.batches_served += 1
+        self.requests_served += n
+        sample = samples[0] if len(samples) == 1 else jax.numpy.concatenate(samples, axis=0)
+        return ServeResult(sample=sample, chunks=chunks)
+
+    def _serve_chunk(self, x, labels) -> ChunkResult:
+        b = x.shape[0]
+        bucket = bucket_for(b, max_batch=self.max_batch) if self.compiled else b
+        traces0 = self.cache.n_traces
+        t0 = time.monotonic()
+        records, sample, eng = harness.serve_records(
+            self.params, self.cfg, self.sched, x, labels, steps=self.steps,
+            sampler=self.sampler, policy=self.policy, compiled=self.compiled,
+            interpret=self.interpret, collect_stats=self.collect_stats,
+            runner_cache=self.cache, bucket=bucket,
+        )
+        jax.block_until_ready(sample)
+        wall = time.monotonic() - t0
+        return ChunkResult(sample=sample, records=records, engine=eng, batch=b,
+                           bucket=bucket, wall_s=wall,
+                           traces_delta=self.cache.n_traces - traces0)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {"batches": self.batches_served, "requests": self.requests_served,
+                **self.cache.stats()}

@@ -41,7 +41,8 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
 
 def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
                   sampler: str = "ddim", policy: str = "defo", compiled: bool = True,
-                  interpret: bool | None = None, collect_stats: bool = True):
+                  interpret: bool | None = None, collect_stats: bool = True,
+                  runner_cache=None, bucket: int | None = None):
     """The deployment pass: eager calibration (+ the Defo mode decision
     after step 2), then the remaining steps through the jit-compiled Pallas
     path — act layers on int8_matmul, diff layers on diff_encode ->
@@ -50,13 +51,29 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int
     unless collect_stats=False) and keep candidate-mode stats — spatial
     counterfactuals on the calibration steps (collect_oracle) and
     temporal/spatial fractions on compiled steps even for act-frozen
-    layers — so run_designs can still re-price every design point."""
+    layers — so run_designs can still re-price every design point.
+
+    ``runner_cache`` (a repro.serve.CompiledRunnerCache) makes the compiled
+    step persistent across calls: batches whose (cfg, frozen layer modes,
+    steps, bucket) agree replay one shared XLA trace instead of
+    recompiling. ``bucket`` pads the batch dim up to that size by row
+    replication before the pass and slices the sample back afterwards —
+    bit-identical to the unbucketed path (see repro.serve.bucketing) while
+    letting ragged batch sizes share a trace. Records are collected at
+    bucket scale (the padded rows are replicas, so per-element fractions
+    are representative; ``macs`` scale with the bucket)."""
+    true_b = x_T.shape[0]
+    if bucket is not None and bucket != true_b:
+        from ..serve import bucketing  # function-level: repro.serve imports sim.harness
+
+        x_T, labels = bucketing.pad_batch(x_T, labels, bucket)
     eng = DittoEngine(policy=policy, collect_oracle=collect_stats)
     fn = make_denoise_fn(params, cfg, eng, compiled=compiled, interpret=interpret,
-                         collect_stats=collect_stats)
+                         collect_stats=collect_stats, runner_cache=runner_cache,
+                         cache_extra=(steps, x_T.shape[0]))
     eng.begin_sample()
     sample = diffusion.SAMPLERS[sampler](sched, fn, x_T, steps=steps, labels=labels)
-    return eng.records, sample, eng
+    return eng.records, sample[:true_b], eng
 
 
 def run_designs(records, *, t_mult: float = 1.0, d_mult: float = 1.0, seq_mult: float | None = None,

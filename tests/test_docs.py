@@ -1,0 +1,20 @@
+"""Docs stay truthful: tools/check_docs.py is part of tier-1.
+
+Every shell command fenced in README.md / docs/*.md must parse and every
+repository path they reference must exist — so the docs cannot silently
+rot as files move (the fast suite runs the same lint up front, see
+tools/fast_tests.py).
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_lint_clean():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
+        cwd=ROOT, capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, f"docs lint failed:\n{proc.stderr}\n{proc.stdout}"

@@ -1,0 +1,153 @@
+"""Persistent compiled serving runtime: runner cache + batch buckets.
+
+Contracts under test (docs/architecture.md §serving):
+
+  * CompiledRunnerCache traces each runner ONCE per (mode signature,
+    steps, bucket): N same-bucket batches -> exactly one XLA trace,
+    asserted via the cache's trace counter (a trace-time side effect, not
+    a wall-clock heuristic).
+  * Batch-bucket padding is bit-exact: padding replicates real rows, and
+    every per-batch calibration quantity is a max-abs reduction, so the
+    bucketed sample sliced to the true batch equals the unbucketed
+    compiled sample bit-for-bit — for ragged batch sizes off the bucket
+    grid.
+  * ServeSession chunks oversized requests and reports cache stats.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diffusion
+from repro.nn import dit as dit_mod
+from repro.serve import CompiledRunnerCache, ServeSession, bucket_for, pad_batch
+from repro.sim import harness
+
+CFG = dit_mod.DiTCfg(d_model=64, n_layers=2, n_heads=2, patch=2, in_channels=4,
+                     input_size=8, n_classes=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init(key, CFG)
+    sched = diffusion.cosine_schedule(100)
+    return params, sched
+
+
+def _request(b, seed=1):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, CFG.input_size, CFG.input_size, CFG.in_channels))
+    labels = jnp.arange(b) % CFG.n_classes
+    return x, labels
+
+
+# --------------------------------------------------------------- bucketing
+def test_bucket_for_rounds_to_pow2():
+    assert [bucket_for(n, max_batch=16) for n in (1, 2, 3, 4, 5, 9, 16)] == \
+        [1, 2, 4, 4, 8, 16, 16]
+    with pytest.raises(ValueError):
+        bucket_for(0)
+    with pytest.raises(ValueError):
+        bucket_for(17, max_batch=16)
+
+
+def test_pad_batch_replicates_rows():
+    x, labels = _request(3)
+    xp, lp = pad_batch(x, labels, 8)
+    assert xp.shape[0] == 8 and lp.shape[0] == 8
+    np.testing.assert_array_equal(np.asarray(xp[:3]), np.asarray(x))
+    # cyclic replication: padded rows are exact copies of real rows, so no
+    # max-abs calibration reduction can change
+    for i in range(3, 8):
+        np.testing.assert_array_equal(np.asarray(xp[i]), np.asarray(x[i % 3]))
+        assert int(lp[i]) == int(labels[i % 3])
+    assert float(jnp.max(jnp.abs(xp))) == float(jnp.max(jnp.abs(x)))
+    xp2, lp2 = pad_batch(x, None, 4)
+    assert lp2 is None and xp2.shape[0] == 4
+    with pytest.raises(ValueError):
+        pad_batch(x, labels, 2)
+
+
+# ------------------------------------------------------------ trace counts
+@pytest.mark.slow
+def test_same_bucket_batches_trace_once(setup):
+    """N=4 batches across 2 buckets -> exactly 2 traces (one per bucket);
+    later same-bucket batches are pure cache hits."""
+    params, sched = setup
+    cache = CompiledRunnerCache()
+    sess = ServeSession(params, CFG, sched, steps=3, policy="diff", max_batch=4,
+                        cache=cache, collect_stats=False)
+    sizes = [4, 3, 4, 2]  # buckets 4, 4, 4, 2
+    results = [sess.serve(*_request(b, seed=10 + i)) for i, b in enumerate(sizes)]
+    for b, r in zip(sizes, results):
+        assert r.sample.shape[0] == b
+        assert not bool(jnp.isnan(r.sample).any())
+    assert len(cache) == 2, cache.stats()
+    assert cache.n_traces == 2, cache.stats()
+    assert all(c == 1 for c in cache.trace_counts.values()), cache.trace_counts
+    # first batch of each bucket misses, the other two hit
+    assert cache.misses == 2 and cache.hits == 2, cache.stats()
+    assert results[1].traces_delta == 0 and results[2].traces_delta == 0
+    # cached runner output == a fresh uncached run of the same request
+    x, labels = _request(4, seed=12)
+    _, fresh, _ = harness.serve_records(params, CFG, sched, x, labels, steps=3,
+                                        policy="diff", compiled=True, collect_stats=False)
+    np.testing.assert_array_equal(np.asarray(results[2].sample), np.asarray(fresh))
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.slow
+@pytest.mark.parametrize("b", [1, 3])
+def test_bucket_padding_bitidentical(setup, b):
+    """Ragged batch served at bucket 4 == the unbucketed compiled path,
+    bit-for-bit in the fp32 sample."""
+    params, sched = setup
+    x, labels = _request(b, seed=33)
+    _, plain, _ = harness.serve_records(params, CFG, sched, x, labels, steps=4,
+                                        policy="defo", compiled=True)
+    _, bucketed, eng = harness.serve_records(params, CFG, sched, x, labels, steps=4,
+                                             policy="defo", compiled=True, bucket=4)
+    assert bucketed.shape[0] == b
+    np.testing.assert_array_equal(np.asarray(bucketed), np.asarray(plain))
+    # records are collected at bucket scale
+    assert all(r["t"] % 4 == 0 for r in eng.records if not r["attention"])
+
+
+# ----------------------------------------------------- cache bookkeeping
+def test_cache_key_hit_miss_bookkeeping():
+    """Key construction and hit/miss accounting without paying any XLA
+    trace (the jitted step is never called): same (cfg, modes, extra) ->
+    one entry + a hit; different bucket/steps/modes -> distinct entries."""
+    cache = CompiledRunnerCache()
+    modes = {"l1": "diff", "l2": "act"}
+    f1 = cache.step_for(CFG, modes, extra=(4, 8))
+    f2 = cache.step_for(CFG, dict(reversed(list(modes.items()))), extra=(4, 8))
+    assert f1 is f2  # mode signature is order-insensitive
+    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 1, "misses": 1}
+    cache.step_for(CFG, modes, extra=(4, 4))  # different bucket
+    cache.step_for(CFG, modes, extra=(8, 8))  # different steps
+    cache.step_for(CFG, {"l1": "act", "l2": "act"}, extra=(4, 8))  # different modes
+    assert len(cache) == 4 and cache.misses == 4
+    k1 = cache.key_for(CFG, modes, extra=(4, 8))
+    k2 = cache.key_for(CFG, modes, extra=(4, 4))
+    assert k1 != k2 and k1.mode_sig == k2.mode_sig
+    cache.clear()
+    assert cache.stats() == {"runners": 0, "traces": 0, "hits": 0, "misses": 0}
+
+
+# ---------------------------------------------------------------- session
+@pytest.mark.slow
+def test_session_chunks_oversized_requests(setup):
+    params, sched = setup
+    sess = ServeSession(params, CFG, sched, steps=3, policy="act", max_batch=2,
+                        collect_stats=False)
+    x, labels = _request(5, seed=5)
+    res = sess.serve(x, labels)
+    assert res.sample.shape[0] == 5
+    assert [c.batch for c in res.chunks] == [2, 2, 1]
+    assert [c.bucket for c in res.chunks] == [2, 2, 1]
+    st = sess.stats()
+    assert st["batches"] == 1 and st["requests"] == 5
+    # chunk 2 reuses chunk 1's bucket-2 runner
+    assert st["runners"] == 2 and st["traces"] == 2

@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Docs lint: fenced shell commands must parse, referenced paths must exist.
+
+Scans README.md and every markdown file under docs/ for
+
+  * fenced ``bash``/``sh``/``shell``/``console`` blocks — every command
+    line must survive ``shlex.split`` (catches unbalanced quotes and
+    stray backticks in copy-paste instructions);
+  * repo paths referenced in fenced blocks or inline code spans — tokens
+    that look like repository paths (contain ``/`` or carry a known file
+    extension) must exist. Paths with a directory component are resolved
+    against the repo root, ``src/`` and ``src/repro/``; bare filenames
+    must match somewhere in the tree (typo catcher).
+
+Exit code 0 = clean. Run standalone or via tools/fast_tests.py (which
+runs it before the pytest fast suite); tests/test_docs.py keeps it in
+tier-1.
+
+    python tools/check_docs.py [-v]
+"""
+from __future__ import annotations
+
+import os
+import re
+import shlex
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SHELL_LANGS = {"bash", "sh", "shell", "console"}
+KNOWN_EXTS = (".py", ".md", ".json", ".ini", ".txt", ".sh", ".toml", ".yaml", ".cfg")
+# plausible repo-path token: no spaces/quotes/shell syntax/templating
+_TOKEN_RE = re.compile(r"^[A-Za-z0-9_.\-/*]+$")
+_SPAN_RE = re.compile(r"`([^`\n]+)`")
+
+
+def doc_files() -> list[str]:
+    files = []
+    readme = os.path.join(ROOT, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    docs = os.path.join(ROOT, "docs")
+    for dirpath, _, names in os.walk(docs):
+        files.extend(os.path.join(dirpath, n) for n in sorted(names) if n.endswith(".md"))
+    return files
+
+
+def _basenames() -> set[str]:
+    names: set[str] = set()
+    skip = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in skip]
+        names.update(filenames)
+    return names
+
+
+def is_path_candidate(tok: str) -> bool:
+    if not tok or not _TOKEN_RE.match(tok):
+        return False
+    if tok.startswith(("-", "/", ".")) or "://" in tok or "*" in tok:
+        return False  # flags, absolute/system paths, URLs, globs
+    if "/" in tok:
+        return True
+    return tok.endswith(KNOWN_EXTS)
+
+
+def path_exists(tok: str, basenames: set[str]) -> bool:
+    has_dir = "/" in tok
+    tok = tok.rstrip("/")
+    if has_dir:
+        return any(
+            os.path.exists(os.path.join(ROOT, prefix, tok))
+            for prefix in ("", "src", "src/repro")
+        )
+    return tok in basenames
+
+
+def check_file(path: str, basenames: set[str], verbose: bool = False) -> list[str]:
+    errors: list[str] = []
+    rel = os.path.relpath(path, ROOT)
+    in_fence = False
+    fence_lang = ""
+    with open(path) as f:
+        lines = f.read().splitlines()
+
+    def check_token(tok: str, lineno: int, ctx: str):
+        if is_path_candidate(tok) and not path_exists(tok, basenames):
+            errors.append(f"{rel}:{lineno}: {ctx} references missing path '{tok}'")
+        elif verbose and is_path_candidate(tok):
+            print(f"  ok {rel}:{lineno}: {tok}")
+
+    for i, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if stripped.startswith("```"):
+            in_fence = not in_fence
+            fence_lang = stripped[3:].strip().lower() if in_fence else ""
+            continue
+        if in_fence:
+            if fence_lang not in SHELL_LANGS:
+                continue  # diagrams / non-shell listings: nothing to lint
+            cmd = stripped[2:] if stripped.startswith("$ ") else stripped
+            if not cmd or cmd.startswith("#"):
+                continue
+            try:
+                toks = shlex.split(cmd)
+            except ValueError as e:
+                errors.append(f"{rel}:{i}: shell command does not parse ({e}): {cmd!r}")
+                continue
+            for tok in toks:
+                # KEY=VALUE env assignments: lint the value part
+                tok = tok.split("=", 1)[1] if "=" in tok and not tok.startswith("=") else tok
+                check_token(tok, i, "command")
+        else:
+            for span in _SPAN_RE.findall(line):
+                check_token(span.strip(), i, "inline code")
+    if in_fence:
+        errors.append(f"{rel}: unterminated code fence")
+    return errors
+
+
+def main(argv=None) -> int:
+    verbose = "-v" in (argv or sys.argv[1:])
+    files = doc_files()
+    if not files:
+        print("check_docs: no README.md or docs/*.md found", file=sys.stderr)
+        return 1
+    basenames = _basenames()
+    errors: list[str] = []
+    for path in files:
+        errors.extend(check_file(path, basenames, verbose=verbose))
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    n_files = len(files)
+    if errors:
+        print(f"check_docs: {len(errors)} error(s) across {n_files} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_docs: {n_files} doc file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,11 +1,13 @@
 #!/usr/bin/env python
-"""Fast tier-1 subset: everything not marked ``slow`` (sub-2-minute loop).
+"""Fast tier-1 subset: docs lint + everything not marked ``slow``.
 
     python tools/fast_tests.py [extra pytest args]
 
 The full tier-1 run stays `PYTHONPATH=src python -m pytest -x -q` (~8 min);
-this entry point sets PYTHONPATH itself and deselects the long
-system/pipeline/model-equivalence tests for the inner dev loop.
+this entry point sets PYTHONPATH itself, first runs the docs lint
+(tools/check_docs.py — fenced commands parse, referenced paths exist) and
+then deselects the long system/pipeline/model-equivalence tests for the
+inner dev loop.
 """
 import os
 import subprocess
@@ -15,6 +17,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> int:
+    rc = subprocess.call([sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
+                         cwd=ROOT)
+    if rc != 0:
+        return rc
     env = dict(os.environ)
     src = os.path.join(ROOT, "src")
     env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
