@@ -1,0 +1,146 @@
+"""Int4 low-tile execution path: measured tile-class mix + wall-clock.
+
+The dit* serve configuration runs the compiled diff path twice — once with
+``low_bits=8`` (class-1 tiles on the int8 dot, the pre-int4 behavior) and
+once with ``low_bits=4`` (class-1 tiles through the packed-int4 branch of
+``ditto_diff_matmul``) — and verifies the samples are BIT-IDENTICAL, which
+is the class-1 execution contract (pack->unpack is exact for
+``|Δ| <= LOW_BIT_MAX``).
+
+Reported per config: steady-state wall-clock and, from the engine records
+of the int4 run, the MEASURED per-step tile-class histogram
+(zero:low:full counts summed over layers) — the tiles the kernel really
+skipped, narrowed to int4, or ran at int8 — plus the tile-granular BOPs
+they price to (``bops.bops_tile_mix``) against the act baseline. A
+kernel-level microbench times both branches on a constructed
+mixed-class workload where every class is guaranteed present.
+
+Results land in benchmarks/BENCH_serve.json (common.record_perf) so the
+int4-path trajectory persists across PRs.
+
+    PYTHONPATH=src python benchmarks/bench_int4_path.py
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common
+from repro.kernels import LOW_BIT_MAX, diff_encode, ditto_diff_matmul, ref
+from repro.serve import CompiledRunnerCache
+from repro.sim import harness
+
+STEPS = 12
+BATCH = 4
+BLOCK = 32  # finer tile grid than the 128 default: at toy dims it exposes
+#             a real zero/low/full mix instead of one coarse tile per layer
+
+
+def _serve(params, dcfg, sched, x, labels, *, low_bits: int):
+    """One warm (traced) + one timed serve; returns (records, sample, wall_s).
+
+    Both runs share one CompiledRunnerCache (low_bits is part of the
+    runner key), so the warm run pays the XLA trace + compile of this
+    kernel body and the timed run replays the cached runner — the
+    recorded wall-clock is the steady serving regime, not compile time.
+    """
+    cache = CompiledRunnerCache()
+
+    def go():
+        return harness.serve_records(
+            params, dcfg, sched, x, labels, steps=STEPS, sampler="ddim",
+            policy="diff", compiled=True, block=BLOCK, low_bits=low_bits,
+            runner_cache=cache)
+
+    go()  # warm: pays XLA trace + compile for this low_bits' kernel body
+    assert cache.n_traces >= 1
+    t0 = time.monotonic()
+    records, sample, _ = go()
+    jax.block_until_ready(sample)
+    return records, sample, time.monotonic() - t0
+
+
+def _per_step_hist(records) -> dict[int, np.ndarray]:
+    hists: dict[int, np.ndarray] = collections.defaultdict(lambda: np.zeros(3, np.int64))
+    for r in records:
+        if "tile_hist" in r:
+            hists[r["step"]] += np.asarray(r["tile_hist"], np.int64)
+    return dict(sorted(hists.items()))
+
+
+def _kernel_micro(m=512, k=512, n=256, block=128, reps=3):
+    """Both kernel branches on a constructed zero/low/full tile mix."""
+    rng = np.random.RandomState(7)
+    xp = rng.randint(-127, 128, size=(m, k)).astype(np.int8)
+    d = np.zeros((m, k), np.int8)
+    d[:block, :k // 2] = rng.randint(-LOW_BIT_MAX, LOW_BIT_MAX + 1,
+                                     size=(block, k // 2))  # low tiles
+    d[block:2 * block, :block] = rng.randint(-90, 91, size=(block, block))  # full
+    xt = np.clip(xp.astype(np.int16) + d, -127, 127).astype(np.int8)
+    w = rng.randint(-127, 128, size=(k, n)).astype(np.int8)
+    yp = np.asarray(ref.int8_matmul_ref(jnp.asarray(xp), jnp.asarray(w)))
+    cls = diff_encode(jnp.asarray(xt), jnp.asarray(xp), bm=block, bk=block)
+    hist = [int((np.asarray(cls) == c).sum()) for c in (0, 1, 2)]
+
+    outs, times = {}, {}
+    for lb in (8, 4):
+        f = lambda: ditto_diff_matmul(jnp.asarray(xt), jnp.asarray(xp), jnp.asarray(w),
+                                      jnp.asarray(yp), cls, bm=block, bn=block,
+                                      bk=block, low_bits=lb)
+        jax.block_until_ready(f())  # warm
+        t0 = time.monotonic()
+        for _ in range(reps):
+            out = f()
+        jax.block_until_ready(out)
+        times[lb] = (time.monotonic() - t0) / reps
+        outs[lb] = np.asarray(out)
+    np.testing.assert_array_equal(outs[8], outs[4])
+    return hist, times
+
+
+def run():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    x, labels = common.sample_inputs(bm, batch=BATCH)
+
+    rec8, s8, wall8 = _serve(params, dcfg, sched, x, labels, low_bits=8)
+    rec4, s4, wall4 = _serve(params, dcfg, sched, x, labels, low_bits=4)
+    np.testing.assert_array_equal(np.asarray(s8), np.asarray(s4))
+
+    hists = _per_step_hist(rec4)
+    total = np.sum(list(hists.values()), axis=0) if hists else np.zeros(3, np.int64)
+    bops_tile = sum(r["bops_tile"] for r in rec4 if "bops_tile" in r)
+    bops_act = sum(r["bops_act"] for r in rec4 if "bops_tile" in r)
+
+    micro_hist, micro_times = _kernel_micro()
+
+    rows = [
+        ("bench_int4/serve_int8_s", round(wall8 * 1e6 / STEPS, 1), round(wall8, 2)),
+        ("bench_int4/serve_int4_s", round(wall4 * 1e6 / STEPS, 1), round(wall4, 2)),
+        ("bench_int4/bit_identical", 0, True),
+        ("bench_int4/tiles_zero", 0, int(total[0])),
+        ("bench_int4/tiles_low", 0, int(total[1])),
+        ("bench_int4/tiles_full", 0, int(total[2])),
+        ("bench_int4/bops_tile_over_act", 0,
+         round(bops_tile / bops_act, 4) if bops_act else 0.0),
+        ("bench_int4/micro_hist", 0, ":".join(str(v) for v in micro_hist)),
+        ("bench_int4/micro_int8_ms", round(micro_times[8] * 1e6, 1),
+         round(micro_times[8] * 1e3, 2)),
+        ("bench_int4/micro_int4_ms", round(micro_times[4] * 1e6, 1),
+         round(micro_times[4] * 1e3, 2)),
+    ]
+    # the per-step histogram IS the measured mix — one row per denoise step
+    for step, h in hists.items():
+        rows.append((f"bench_int4/step{step:02d}_hist", 0,
+                     ":".join(str(int(v)) for v in h)))
+    common.record_perf("bench_int4", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

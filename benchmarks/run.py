@@ -28,6 +28,7 @@ MODULES = [
     "fig19_dynamic",
     "bench_compiled_step",
     "bench_serve_cache",
+    "bench_int4_path",
 ]
 
 

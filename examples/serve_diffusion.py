@@ -18,6 +18,7 @@ the serving loop checkpoints its request log atomically and can resume
 mid-queue.
 
     PYTHONPATH=src python examples/serve_diffusion.py [--requests 6] [--batch 4] [--eager]
+    PYTHONPATH=src python examples/serve_diffusion.py --low-bits 4   # packed-int4 low tiles
 """
 import argparse
 import json
@@ -62,6 +63,10 @@ def main(argv=None):
     ap.add_argument("--log", default="/tmp/ditto_serve_log.json")
     ap.add_argument("--eager", action="store_true",
                     help="run every step on the eager engine (no compiled path)")
+    ap.add_argument("--low-bits", type=int, default=8, choices=(4, 8),
+                    help="4 = execute class-1 diff tiles through the packed-int4 "
+                         "kernel branch (bit-identical samples, separate runner "
+                         "cache key)")
     args = ap.parse_args(argv)
 
     arch, dcfg, params = build_model()
@@ -75,7 +80,7 @@ def main(argv=None):
     queue = [(i, i % arch.n_classes) for i in range(args.requests) if i not in done]
 
     sess = ServeSession(params, dcfg, sched, steps=args.steps, compiled=not args.eager,
-                        max_batch=max(args.batch, 1))
+                        low_bits=args.low_bits, max_batch=max(args.batch, 1))
     while queue:
         batch_reqs, queue = queue[: args.batch], queue[args.batch :]
         rids = [r for r, _ in batch_reqs]

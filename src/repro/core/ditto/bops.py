@@ -2,13 +2,27 @@
 
 BOPs of one MAC = bits_activation * bits_weight. With A8W8 quantization a
 dense layer costs MACs * 64 BOPs. Difference processing pays per-element:
-zero -> 0, low (<=4 bit) -> 32, full -> 64. The paper's headline numbers —
-44.48% zeros, 96.01% <=4-bit, 53.3% BOPs reduction — are reproduced by
-benchmarks/fig5_bitwidth.py and fig6_bops.py with these formulas.
+zero -> 0, low (|Δ| <= LOW_BIT_MAX, i.e. <= 4 bit) -> 32, full -> 64. The
+paper's headline numbers — 44.48% zeros, 96.01% <=4-bit, 53.3% BOPs
+reduction — are reproduced by benchmarks/fig5_bitwidth.py and fig6_bops.py
+with these formulas.
+
+Two granularities
+    ``bops_mixed`` prices ELEMENT-granular fractions — the paper's ASIC
+    datapath, which reorders individual values into zero/low/full queues.
+    ``bops_tile_mix`` prices TILE-granular fractions — what the TPU
+    kernels actually execute: ``diff_encode`` classifies whole (bm, bk)
+    tiles and ``ditto_diff_matmul`` skips class-0 tiles / routes class-1
+    tiles through the packed-int4 branch. The compiled engine records the
+    measured per-step tile-class histogram (``tile_hist``) so the priced
+    savings of the realized path come from tiles the kernel REALLY
+    skipped or narrowed, not from element counts it cannot exploit.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from ...kernels.diff_encode import LOW_BIT_MAX  # single source (signed 4-bit)
 
 W_BITS = 8
 A_FULL = 8
@@ -25,10 +39,38 @@ def bops_mixed(macs: float, zero: float, low: float, full: float) -> float:
     return float(macs) * (low * A_LOW * W_BITS + full * A_FULL * W_BITS)
 
 
+def tile_fractions(hist) -> tuple[float, float, float]:
+    """(zero, low, full) fractions from a tile-class histogram
+    (n_zero, n_low, n_full); all-zero histograms price as all-zero work."""
+    z, l, f = (float(v) for v in hist)
+    total = z + l + f
+    if total <= 0:
+        return (1.0, 0.0, 0.0)
+    return (z / total, l / total, f / total)
+
+
+def bops_tile_mix(macs: float, hist) -> float:
+    """BOPs of one diff matmul from its MEASURED tile-class histogram.
+
+    Class-0 tiles are skipped outright (0 BOPs), class-1 tiles run the
+    packed-int4 branch (A_LOW), class-2 tiles the int8 path (A_FULL).
+    Same formula as ``bops_mixed`` — the input is what distinguishes it:
+    per-tile verdicts the kernel executed, not per-element counts.
+
+    The histogram counts tiles of the zero-PADDED grid the kernel runs
+    over, so splitting the real ``macs`` proportionally is exact when the
+    layer dims are block multiples (every serving config here) and an
+    approximation for ragged dims: a partially-padded edge tile carries a
+    full tile's weight although only its real sliver does work. The error
+    is bounded by the edge-tile share of the grid; the truth-level
+    element accounting (``bops_mixed`` on ``cls_diff``) is padding-free.
+    """
+    zero, low, full = tile_fractions(hist)
+    return bops_mixed(macs, zero, low, full)
+
+
 def bops_elementwise(d: jnp.ndarray, macs_per_element: float) -> float:
     """Exact BOPs from a difference tensor (no class rounding)."""
-    from .classify import LOW_BIT_MAX
-
     a = jnp.abs(d.astype(jnp.int32))
     low = (a > 0) & (a <= LOW_BIT_MAX)
     full = a > LOW_BIT_MAX

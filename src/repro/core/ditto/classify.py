@@ -1,21 +1,23 @@
 """Bit-width classification of (difference) tensors — paper §III-B / §V-B.
 
 Element classes over an int domain tensor:
-    zero : d == 0                      (skipped entirely)
-    low  : |d| <= 7  (signed 4-bit)    (single 4-bit multiplier)
-    full : otherwise                   (two multipliers + shift)
+    zero : d == 0                          (skipped entirely)
+    low  : |d| <= LOW_BIT_MAX (signed 4b)  (single 4-bit multiplier)
+    full : otherwise                       (two multipliers + shift)
 
 ``bitwidth_requirement`` is the paper's "minimum number of bits required to
 represent the value" (sign-magnitude, +1 sign bit, 0 for zero).
 
 Tile classification is the TPU adaptation (DESIGN.md §3): a (tq, tk) tile
-is zero iff all its elements are zero, low iff max|d| <= 7.
+is zero iff all its elements are zero, low iff max|d| <= LOW_BIT_MAX.
+The threshold is imported from ``kernels.diff_encode`` so the host-side
+accounting and the on-device Encoding-Unit kernel can never disagree.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-LOW_BIT_MAX = 7  # signed 4-bit
+from ...kernels.diff_encode import LOW_BIT_MAX  # single source (signed 4-bit)
 
 
 def element_classes(d: jnp.ndarray) -> dict:

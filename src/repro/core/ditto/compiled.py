@@ -12,7 +12,11 @@ function in which:
         baseline Compute Unit);
   diff  layers run ``diff_encode`` -> ``ditto_diff_matmul``, so zero tiles
         are actually skipped on-device (``@pl.when`` gates the MXU dot)
-        instead of only being priced in the cost model;
+        instead of only being priced in the cost model; with ``low_bits=4``
+        class-1 (low) tiles additionally execute the packed-int4 branch —
+        bit-identical, since the class verdict bounds |Δ| inside the exact
+        pack/unpack range — and the measured per-step tile-class histogram
+        (``tile_hist`` in the aux pytree) feeds the pricing;
   spatial layers (Defo+) execute the direct GEMM — exactly what the eager
         spatial branch computes — via ``int8_matmul``; their row-delta
         statistics are still reduced for the records.
@@ -53,6 +57,13 @@ def _class_fractions(d: jax.Array) -> tuple:
     return (c["zero"], c["low"], c["full"])
 
 
+def _tile_hist(classes: jax.Array) -> jax.Array:
+    """(n_zero, n_low, n_full) int32 histogram of a diff_encode class map —
+    the tiles the kernel actually skipped / narrowed / ran at int8."""
+    c = classes.reshape(-1)
+    return jnp.stack([jnp.sum(c == 0), jnp.sum(c == 1), jnp.sum(c == 2)])
+
+
 def _act_fractions(q: jax.Array) -> tuple:
     """cls_act triple of the eager engine: (zero, 0, nonzero)."""
     c = classify.element_classes(q)
@@ -85,7 +96,9 @@ def linear_apply(p: dict, mode: str, x: jax.Array, st: dict, *, blk: dict,
 
     aux: dict = {}
     if mode == "diff":
-        y_i32, _ = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"], **blk)
+        y_i32, classes = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"], **blk)
+        if collect_stats:
+            aux["tile_hist"] = _tile_hist(classes)
     else:  # act, and spatial (whose eager branch computes the direct GEMM)
         y_i32 = ops.int8_act_matmul(q_t, p["w_q"], **blk)
     if collect_stats:
@@ -130,10 +143,17 @@ def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
     if mode == "diff":
         def body(c, ins):
             qa_i, qb_i, ap_i, bp_i, yp_i = ins
-            y_i, _ = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i, **blk)
+            y_i, (cls_dk, cls_dq) = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i, **blk)
+            if collect_stats:  # trace-static, mirrors the linear path
+                return c, (y_i, _tile_hist(cls_dk) + _tile_hist(cls_dq))
             return c, y_i
 
-        _, y_i32 = jax.lax.scan(body, 0, (qa, qb, st["a_prev"], st["b_prev"], st["y_prev"]))
+        xs = (qa, qb, st["a_prev"], st["b_prev"], st["y_prev"])
+        if collect_stats:
+            _, (y_i32, hists) = jax.lax.scan(body, 0, xs)
+            aux["tile_hist"] = hists.sum(axis=0)  # both sub-ops, all scan elems
+        else:
+            _, y_i32 = jax.lax.scan(body, 0, xs)
     else:
         def body(c, ins):
             qa_i, qb_i = ins
@@ -157,16 +177,18 @@ class CompiledDittoEngine:
     jit-traceable; mode selection happens at trace time."""
 
     def __init__(self, engine: DittoEngine, *, interpret: bool | None = None,
-                 block: int = 128, collect_stats: bool = True):
+                 block: int = 128, collect_stats: bool = True, low_bits: int = 8):
         if not engine.ready_for_compiled():
             raise ValueError(
                 "engine not calibrated: run >= 1 eager step (>= 2 for defo policies, "
                 "whose mode decision lands after the step-2 diff probe) before "
                 f"compiling (step_idx={engine.step_idx}, decided={engine._decided})")
+        assert low_bits in (4, 8), low_bits
         self.engine = engine
         self.block = block
         self.interpret = interpret
         self.collect_stats = collect_stats
+        self.low_bits = low_bits
         self.modes = engine.compiled_modes()
         self.meta = engine.meta
         self.params: dict[str, dict] = {}
@@ -191,7 +213,7 @@ class CompiledDittoEngine:
 
     def _blk(self) -> dict:
         b = self.block
-        return dict(bm=b, bn=b, bk=b, interpret=self.interpret)
+        return dict(bm=b, bn=b, bk=b, interpret=self.interpret, low_bits=self.low_bits)
 
     # --------------------------------------------------------------- linear
     def linear(self, name: str, x: jax.Array, st: dict) -> tuple[jax.Array, dict, dict]:

@@ -129,7 +129,8 @@ class DittoDiT:
 
 
 def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128,
-                 interpret: bool | None = None, collect_stats: bool = True):
+                 interpret: bool | None = None, collect_stats: bool = True,
+                 low_bits: int = 8):
     """Build the pure per-step function of the compiled execution pass.
 
     Returns ``step(ditto_params, model_params, state, latents, t, labels)
@@ -137,13 +138,16 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128
     per-layer Ditto params (weight q-tensors, calibrated scales, biases),
     the fp32 model params for the VPU-side glue, and the temporal state —
     is an ARGUMENT, so the only trace-static inputs are ``cfg``, the
-    frozen per-layer ``modes``, and the kernel config. Two serve batches
-    that share those statics (and shapes) can therefore share ONE
-    ``jax.jit`` trace: this is what :class:`repro.serve.CompiledRunnerCache`
-    keys on to amortize compilation across the whole request stream.
+    frozen per-layer ``modes``, and the kernel config (``block``,
+    ``interpret``, ``low_bits``). Two serve batches that share those
+    statics (and shapes) can therefore share ONE ``jax.jit`` trace: this
+    is what :class:`repro.serve.CompiledRunnerCache` keys on to amortize
+    compilation across the whole request stream. ``low_bits=4`` routes
+    class-1 diff tiles through the packed-int4 kernel branch
+    (bit-identical output, distinct cache key).
     """
     modes = dict(modes)
-    blk = dict(bm=block, bn=block, bk=block, interpret=interpret)
+    blk = dict(bm=block, bn=block, bk=block, interpret=interpret, low_bits=low_bits)
 
     def step(dparams, mparams, state, latents, t, labels):
         new_state: dict = {}
@@ -184,19 +188,22 @@ class CompiledDittoDiT:
 
     def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
                  interpret: bool | None = None, collect_stats: bool = True,
+                 block: int = 128, low_bits: int = 8,
                  cache=None, cache_extra: tuple = ()):
         self.cfg = cfg
         self.engine = engine
         self.params = params
-        self.ceng = CompiledDittoEngine(engine, interpret=interpret, collect_stats=collect_stats)
+        self.ceng = CompiledDittoEngine(engine, interpret=interpret, block=block,
+                                        collect_stats=collect_stats, low_bits=low_bits)
         self.state = self.ceng.init_state()
         if cache is not None:
             self._step = cache.step_for(cfg, self.ceng.modes, block=self.ceng.block,
                                         interpret=interpret, collect_stats=collect_stats,
-                                        extra=tuple(cache_extra))
+                                        low_bits=low_bits, extra=tuple(cache_extra))
         else:
             self._step = jax.jit(make_step_fn(cfg, self.ceng.modes, block=self.ceng.block,
-                                              interpret=interpret, collect_stats=collect_stats))
+                                              interpret=interpret, collect_stats=collect_stats,
+                                              low_bits=low_bits))
 
     def __call__(self, latents, t, labels=None):
         out, self.state, aux = self._step(self.ceng.params, self.params, self.state,
@@ -208,8 +215,8 @@ class CompiledDittoDiT:
 
 def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
                     compiled: bool = False, interpret: bool | None = None,
-                    collect_stats: bool = True, runner_cache=None,
-                    cache_extra: tuple = ()):
+                    collect_stats: bool = True, block: int = 128, low_bits: int = 8,
+                    runner_cache=None, cache_extra: tuple = ()):
     """denoise_fn(x, t, labels) for repro.core.diffusion samplers; calls
     engine.end_step() after each sampler step.
 
@@ -220,6 +227,8 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
     with ``runner_cache`` the underlying jitted step function is shared
     across samples/batches whose (cfg, modes, kernel config, shapes) agree
     — one trace per runner-cache key instead of one per batch.
+    ``low_bits=4`` executes class-1 diff tiles through the packed-int4
+    kernel branch (bit-identical; separate runner-cache key).
     """
     runner = DittoDiT(params, cfg, engine)
     box: dict = {}
@@ -229,6 +238,7 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
             if box.get("built_for") is not engine.records:  # rebuilt per begin_sample
                 box["runner"] = CompiledDittoDiT(params, cfg, engine,
                                                  interpret=interpret, collect_stats=collect_stats,
+                                                 block=block, low_bits=low_bits,
                                                  cache=runner_cache, cache_extra=cache_extra)
                 box["built_for"] = engine.records
             out = box["runner"](x, t, labels)

@@ -248,7 +248,7 @@ class DittoEngine:
                 # the first row stays full precision
                 w0 = 1.0 / t
                 rec["cls_spatial"] = (z2 * (1 - w0), l2 * (1 - w0), f2 * (1 - w0) + w0)
-                eff2 = macs * ((1 - w0) * (l2 * 1.0 + f2 * 2.0) + w0 * 2.0)
+                eff2 = macs * ((1 - w0) * hw.lanes_mixed(z2, l2, f2) + w0 * hw.lanes_full)
                 cc2 = eff2 / (hw.n_pe * hw.mults_per_pe)
                 rec["cycles_spatial"] = max(cc2, mem_cycles) + min(cc2, mem_cycles) * hw.overlap_slack
                 rec["bops_spatial"] = bops_mod.bops_mixed(macs, *rec["cls_spatial"])
@@ -294,8 +294,10 @@ class DittoEngine:
                 extra += 2 * t * k  # x_prev read + x_t write
             mem += extra
         rec["mem_bytes"] = mem
-        # --- cycles (Ditto hardware: adder-tree PEs, 4-bit multipliers) ---
-        eff_macs = macs * (low * 1.0 + full * 2.0) if executed_diff else macs * 2.0
+        # --- cycles (Ditto hardware: adder-tree PEs, 4-bit multipliers;
+        # hw.lanes_mixed is the shared pricing hook with repro.sim.cycles) ---
+        eff_macs = macs * (hw.lanes_mixed(zero, low, full) if executed_diff
+                           else hw.lanes_full)
         compute_cycles = eff_macs / (hw.n_pe * hw.mults_per_pe)
         mem_cycles = mem / hw.bytes_per_cycle
         rec["cycles"] = max(compute_cycles, mem_cycles) + min(compute_cycles, mem_cycles) * hw.overlap_slack
@@ -340,6 +342,11 @@ class DittoEngine:
         always, 'cls_diff' / 'cls_spatial' where the layer has the state
         to measure them (candidate stats are kept even for act-frozen
         layers so the simulator can re-price other designs' mode choices).
+        Diff-mode layers additionally carry 'tile_hist', the measured
+        (n_zero, n_low, n_full) tile-class histogram from ``diff_encode``
+        — the tiles the kernel REALLY skipped / routed through the
+        packed-int4 branch; it lands on the record together with its
+        tile-granular pricing ('bops_tile', 'tile_fracs').
         Layer dimensions are reused from that layer's calibration-step
         record — shapes are static across the denoising loop (same
         latents/batch), which is exactly what lets the step be jitted in
@@ -361,6 +368,11 @@ class DittoEngine:
             cls_sp = tuple(float(v) for v in a["cls_spatial"]) if "cls_spatial" in a else None
             self._account_classes(rec, base["t"], base["k"], base["n"], cls_act, cls_diff, meta,
                                   attention=base["attention"], cls_spatial=cls_sp)
+            if "tile_hist" in a:
+                hist = tuple(int(v) for v in a["tile_hist"])
+                rec["tile_hist"] = hist
+                rec["tile_fracs"] = bops_mod.tile_fractions(hist)
+                rec["bops_tile"] = bops_mod.bops_tile_mix(rec["macs"], hist)
             self.records.append(rec)
 
     # -------------------------------------------------------------- summary

@@ -49,6 +49,24 @@ class HwModel:
     e_dram_byte: float = 24.0  # HBM2-class (~3 pJ/bit)
     power_w: float = 33.6
 
+    def lanes_mixed(self, zero: float, low: float, full: float) -> float:
+        """4-bit-multiplier lanes per MAC for a measured zero/low/full mix.
+
+        THE pricing hook for difference execution: the engine and the
+        design-point simulator both call it with class fractions — on the
+        compiled path these come from the measured per-step tile-class
+        histogram (``tile_hist``, what ``ditto_diff_matmul`` actually
+        skipped / narrowed), so priced savings track realized execution.
+        Zero-class work costs nothing when the design skips it; low-class
+        work runs one 4-bit lane; full-class work pays ``lanes_full``
+        (two multipliers + shift on Ditto-style PEs). Designs without
+        low-bit support (ITC) execute every MAC on one native 8-bit lane.
+        """
+        if not self.supports_low_bit:
+            return 1.0
+        zero_lanes = 0.0 if self.supports_zero_skip else zero * self.lanes_low
+        return zero_lanes + low * self.lanes_low + full * self.lanes_full
+
 
 ITC = HwModel(
     name="itc", n_pe=27648, lanes_low=1.0, lanes_full=1.0,

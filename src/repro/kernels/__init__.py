@@ -1,6 +1,17 @@
 from . import ops, ref
-from .diff_encode import diff_encode
+from .diff_encode import LOW_BIT_MAX, diff_encode
 from .ditto_diff_matmul import ditto_diff_matmul
+from .int4_pack import pack_int4, unpack_int4, unpack_int4_lanes
 from .int8_matmul import int8_matmul
 
-__all__ = ["ops", "ref", "diff_encode", "ditto_diff_matmul", "int8_matmul"]
+__all__ = [
+    "ops",
+    "ref",
+    "LOW_BIT_MAX",
+    "diff_encode",
+    "ditto_diff_matmul",
+    "pack_int4",
+    "unpack_int4",
+    "unpack_int4_lanes",
+    "int8_matmul",
+]

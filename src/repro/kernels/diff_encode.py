@@ -5,9 +5,15 @@ element-granular zero/low/full classification + reorder queues (an ASIC
 datapath the MXU cannot express), one pass over (x_t, x_prev) produces a
 per-(bm, bk)-tile class:
 
-    0 = zero tile (max|Δ| == 0)   -> the matmul kernel skips it entirely
-    1 = low  tile (max|Δ| <= 7)   -> 4-bit-eligible (accounting / int4 HW)
-    2 = full tile                 -> full 8-bit path
+    0 = zero tile (max|Δ| == 0)             -> the matmul kernel skips it
+    1 = low  tile (max|Δ| <= LOW_BIT_MAX)   -> packed-int4 path (signed 4-bit)
+    2 = full tile                           -> full 8-bit path
+
+:data:`LOW_BIT_MAX` (= 7, the largest signed-4-bit magnitude) defined
+here is THE low-bit threshold of the whole repo — ``core.ditto.classify``,
+``core.ditto.bops``, ``kernels.ref`` and ``kernels.int4_pack`` all import
+it, so the Encoding-Unit verdict, the element-granular accounting and the
+int4 pack contract can never disagree.
 
 The Δ itself is NOT written back to HBM: the consumer kernel re-derives it
 from the same int8 operands in VMEM (subtract-on-the-fly, exactly like the
@@ -38,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LOW_BIT_MAX = 7
+LOW_BIT_MAX = 7  # largest |Δ| a signed 4-bit lane holds; see module docstring
 
 
 def _kernel(xt_ref, xp_ref, cls_ref):

@@ -6,21 +6,36 @@ TPU adaptation of the paper's zero-skipping adder-tree PE (DESIGN.md §3):
 the grid runs over (M/bm, N/bn, K/bk); for each (i, kk) the per-tile class
 from ``diff_encode`` gates the MXU contribution with ``@pl.when`` — a
 zero-class tile issues NO dot (its Δ is all-zero, so skipping is exact).
-Low-class tiles are int8 on the MXU (no int4 path on v5e); they are gated
-separately only for accounting, so an int4-capable backend can split the
-predicate. The Δ is recomputed in VMEM from the int8 operands
-(subtract-on-the-fly), so no Δ tensor ever lands in HBM.
+The Δ is recomputed in VMEM from the int8 operands (subtract-on-the-fly),
+so no Δ tensor ever lands in HBM.
 
 ``classes`` rides the scalar-prefetch slot (PrefetchScalarGridSpec) so a
 production TPU lowering can in principle skip the HBM->VMEM copies of
 skipped tiles too; in interpret mode it is a plain operand.
 
+int4 low-tile execution branch (``low_bits=4``)
+    Class-1 tiles (``max|Δ| <= LOW_BIT_MAX``) execute through the packed
+    int4 path instead of the full int8 dot: the Δ tile re-derived in VMEM
+    is packed two int4 lanes per int8 (``kernels.int4_pack``), the packed
+    words are unpacked by bit arithmetic, and the even/odd K lanes are
+    dotted against the even/odd weight rows into the SAME int32
+    accumulator. Because pack->unpack is exact for |Δ| <= 7 — which the
+    class-1 verdict guarantees — the int4 branch is BIT-IDENTICAL to the
+    int8 branch on every class-1 tile (tests/test_kernel_properties.py
+    proves this across the shape matrix). Class-2 tiles always take the
+    full int8 dot. With the default ``low_bits=8`` the class-1/class-2
+    predicate stays merged and low tiles run int8 (the pre-int4 behavior);
+    an int4-native backend consumes the packed words directly at one
+    4-bit multiplier lane per MAC, which is what the cost model prices
+    from the measured tile-class mix.
+
 Tile shapes / grid
     Grid (M/bm, N/bn, K/bk), K innermost; (bm,bk) int8 x/x_prev tiles and
     a (bk,bn) int8 weight tile feed the MXU, accumulating into a (bm,bn)
     int32 VMEM scratch seeded from y_prev at k==0. Defaults are the
-    MXU-aligned 128s. ``classes`` has shape (M/bm, K/bk) — one class per
-    (i, kk) tile from ``diff_encode``.
+    MXU-aligned 128s (``low_bits=4`` additionally needs bk even to pair
+    lanes). ``classes`` has shape (M/bm, K/bk) — one class per (i, kk)
+    tile from ``diff_encode``.
 
 Zero-tile skipping
     ``@pl.when(tile_cls > 0)`` gates the subtract + dot: a zero-class
@@ -49,8 +64,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .int4_pack import pack_int4, unpack_int4_lanes
 
-def _kernel(cls_ref, xt_ref, xp_ref, w_ref, yp_ref, o_ref, acc_ref, *, n_k: int):
+
+def _kernel(cls_ref, xt_ref, xp_ref, w_ref, yp_ref, o_ref, acc_ref, *, n_k: int,
+            split_low: bool):
+    """``split_low`` (trace-static, = ``low_bits == 4``) splits the merged
+    class>0 predicate: class-1 tiles take the packed-int4 branch, class-2
+    the int8 dot. One body for both modes keeps the accumulator seeding /
+    store and the full dot a single source of truth."""
     i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -59,19 +81,34 @@ def _kernel(cls_ref, xt_ref, xp_ref, w_ref, yp_ref, o_ref, acc_ref, *, n_k: int)
 
     tile_cls = cls_ref[i, kk]
 
-    @pl.when(tile_cls > 0)
-    def _accum():
+    @pl.when(tile_cls == 2 if split_low else tile_cls > 0)
+    def _accum_full():
         d = xt_ref[...].astype(jnp.int32) - xp_ref[...].astype(jnp.int32)
         acc_ref[...] += jax.lax.dot(
             d, w_ref[...].astype(jnp.int32), preferred_element_type=jnp.int32
         )
+
+    if split_low:
+
+        @pl.when(tile_cls == 1)
+        def _accum_low():
+            # class-1 contract: max|Δ| <= LOW_BIT_MAX, so every lane fits a
+            # signed nibble and the pack->unpack round-trip below is exact
+            d = xt_ref[...].astype(jnp.int32) - xp_ref[...].astype(jnp.int32)
+            packed = pack_int4(d)  # (bm, bk/2) int8 — the int4x2 storage word
+            lo, hi = unpack_int4_lanes(packed)  # even/odd K lane planes, int32
+            bk, bn = w_ref.shape
+            w_pairs = w_ref[...].astype(jnp.int32).reshape(bk // 2, 2, bn)
+            acc_ref[...] += jax.lax.dot(
+                lo, w_pairs[:, 0, :], preferred_element_type=jnp.int32
+            ) + jax.lax.dot(hi, w_pairs[:, 1, :], preferred_element_type=jnp.int32)
 
     @pl.when(kk == n_k - 1)
     def _store():
         o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "low_bits"))
 def ditto_diff_matmul(
     x_t: jax.Array,
     x_prev: jax.Array,
@@ -83,18 +120,27 @@ def ditto_diff_matmul(
     bn: int = 128,
     bk: int = 128,
     interpret: bool | None = None,
+    low_bits: int = 8,
 ) -> jax.Array:
     """x_*: (M,K) int8; w_q: (K,N) int8; y_prev: (M,N) int32;
     classes: (M/bm, K/bk) int32 from diff_encode. Returns y_t int32.
+
+    low_bits=8 runs low tiles on the int8 dot (one merged class-1/2
+    predicate); low_bits=4 routes class-1 tiles through the packed-int4
+    branch — bit-identical output either way (the class-1 verdict bounds
+    |Δ| inside the exact pack/unpack range).
 
     interpret=None auto-detects: native lowering on TPU, interpreter
     (bit-identical math) everywhere else."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    assert low_bits in (4, 8), f"low_bits must be 4 or 8, got {low_bits}"
     m, k = x_t.shape
     k2, n = w_q.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
     assert classes.shape == (m // bm, k // bk), (classes.shape, (m // bm, k // bk))
+    if low_bits == 4:
+        assert bk % 2 == 0, f"low_bits=4 pairs K lanes: bk must be even, got {bk}"
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -110,7 +156,7 @@ def ditto_diff_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
+        functools.partial(_kernel, n_k=n_k, split_low=low_bits == 4),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,

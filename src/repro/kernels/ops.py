@@ -33,13 +33,19 @@ def _pad2(a, bm, bk, fill=0):
     return a
 
 
-def int8_act_matmul(x_q, w_q, *, bm=128, bn=128, bk=128, interpret=None):
+def int8_act_matmul(x_q, w_q, *, bm=128, bn=128, bk=128, interpret=None, low_bits=8):
     """(M,K) int8 @ (K,N) int8 -> (M,N) int32, exact (act-mode ITC path).
 
     Pads both operands to the (bm, bn, bk) tile grid with zeros — padding
     contributes nothing to the int32 accumulation, so the sliced result is
     bit-identical to the unpadded matmul.
+
+    ``low_bits`` is accepted (and ignored) for call-site uniformity with
+    the diff path: the act GEMM has no Δ operand, so there is nothing to
+    narrow — the compiled engine passes one kernel-config dict to every
+    mode's op.
     """
+    del low_bits
     interpret = _interpret_default() if interpret is None else interpret
     m, k = x_q.shape
     n = w_q.shape[1]
@@ -62,12 +68,17 @@ def encode_classes(x_t_q, x_prev_q, *, bm=128, bk=128, interpret=None):
 
 
 def ditto_linear_step(
-    x_t_q, x_prev_q, w_q, y_prev_i32, *, bm=128, bn=128, bk=128, interpret=None
+    x_t_q, x_prev_q, w_q, y_prev_i32, *, bm=128, bn=128, bk=128, interpret=None,
+    low_bits=8,
 ):
     """One temporal-difference linear step, tile-skipped.
 
     Returns (y_t_i32 (M,N), classes (M/bm, K/bk)) — exact int32, equal to
     y_prev + (x_t - x_prev) @ W regardless of how many tiles were skipped.
+
+    ``low_bits=4`` executes class-1 tiles through the packed-int4 branch
+    of ``ditto_diff_matmul`` — bit-identical to ``low_bits=8`` (the
+    class-1 verdict bounds |Δ| inside the exact pack/unpack range).
     """
     interpret = _interpret_default() if interpret is None else interpret
     m, k = x_t_q.shape
@@ -77,7 +88,8 @@ def ditto_linear_step(
     wp = _pad2(w_q, bk, bn)
     yp = _pad2(y_prev_i32, bm, bn)
     classes = diff_encode(xt, xp, bm=bm, bk=bk, interpret=interpret)
-    y = ditto_diff_matmul(xt, xp, wp, yp, classes, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = ditto_diff_matmul(xt, xp, wp, yp, classes, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret, low_bits=low_bits)
     return y[:m, :n], classes
 
 
@@ -87,16 +99,20 @@ def attention_delta(q_t, q_prev, k_t, k_prev, s_prev_i32, *, interpret=None, **b
         S_t = S_prev + Q_t ΔK^T + ΔQ K_prev^T
 
     q_*: (M, D) int8; k_*: (N, D) int8; s_prev: (M, N) int32. Exact.
+    Returns (S_t, (cls_dk, cls_dq)) — the tile-class maps of BOTH
+    sub-operations (ΔK and ΔQ), so callers can histogram every tile the
+    kernels actually executed. ``low_bits`` in ``blk`` routes class-1
+    tiles of both sub-ops through the packed-int4 branch.
     """
     interpret = _interpret_default() if interpret is None else interpret
     # Q_t ΔK^T: weight = ΔK^T derived on the fly is not expressible as a
     # static weight; reuse the diff kernel with roles swapped:
     #   Q_t ΔK^T  = (x_t - x_prev) @ W with x = K (rows), W = Q_t^T, then T
     #   ΔQ K_prev = (q_t - q_prev) @ K_prev^T
-    y1, _ = ditto_linear_step(k_t, k_prev, q_t.T,
-                              jnp.zeros((k_t.shape[0], q_t.shape[0]), jnp.int32),
-                              interpret=interpret, **blk)
-    y2, cls = ditto_linear_step(q_t, q_prev, k_prev.T,
-                                jnp.zeros((q_t.shape[0], k_prev.shape[0]), jnp.int32),
-                                interpret=interpret, **blk)
-    return s_prev_i32 + y1.T + y2, cls
+    y1, cls_dk = ditto_linear_step(k_t, k_prev, q_t.T,
+                                   jnp.zeros((k_t.shape[0], q_t.shape[0]), jnp.int32),
+                                   interpret=interpret, **blk)
+    y2, cls_dq = ditto_linear_step(q_t, q_prev, k_prev.T,
+                                   jnp.zeros((q_t.shape[0], k_prev.shape[0]), jnp.int32),
+                                   interpret=interpret, **blk)
+    return s_prev_i32 + y1.T + y2, (cls_dk, cls_dq)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-LOW_BIT_MAX = 7
+from .diff_encode import LOW_BIT_MAX  # single source of the low-bit threshold
 
 
 def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:

@@ -65,12 +65,15 @@ class ServeSession:
     Parameters mirror ``sim.harness.serve_records``; ``cache`` may be
     shared between sessions serving the same model (e.g. one per request
     thread) — the runner key includes the model-config signature, so
-    distinct models never collide.
+    distinct models never collide. ``low_bits=4`` serves the packed-int4
+    low-tile path (bit-identical samples); it is part of the runner key,
+    so int4 and int8 sessions sharing one cache never share a trace.
     """
 
     def __init__(self, params, cfg, sched, *, steps: int, sampler: str = "ddim",
                  policy: str = "defo", compiled: bool = True,
                  interpret: bool | None = None, collect_stats: bool = True,
+                 block: int = 128, low_bits: int = 8,
                  max_batch: int = DEFAULT_MAX_BATCH,
                  cache: CompiledRunnerCache | None = None):
         self.params = params
@@ -82,6 +85,8 @@ class ServeSession:
         self.compiled = compiled
         self.interpret = interpret
         self.collect_stats = collect_stats
+        self.block = block
+        self.low_bits = low_bits
         self.max_batch = max_batch
         self.cache = cache if cache is not None else CompiledRunnerCache()
         self.batches_served = 0
@@ -114,6 +119,7 @@ class ServeSession:
             self.params, self.cfg, self.sched, x, labels, steps=self.steps,
             sampler=self.sampler, policy=self.policy, compiled=self.compiled,
             interpret=self.interpret, collect_stats=self.collect_stats,
+            block=self.block, low_bits=self.low_bits,
             runner_cache=self.cache, bucket=bucket,
         )
         jax.block_until_ready(sample)

@@ -129,7 +129,10 @@ def price(rec: dict, hw: HwModel, mode: str) -> LayerCost:
             lanes = macs * hw.lanes_full
             e_mac = macs * 2 * hw.e_mac4
         else:
-            lanes = macs * (low * hw.lanes_low + full * hw.lanes_full)
+            # hw.lanes_mixed: the shared pricing hook with the engine —
+            # diff-mode fractions come from measured class mixes (compiled
+            # steps carry the executed tile-class histogram alongside)
+            lanes = macs * hw.lanes_mixed(zero, low, full)
             e_mac = macs * (low * hw.e_mac4 + full * 2 * hw.e_mac4)
         compute = lanes / (hw.n_pe * hw.mults_per_pe)
     mem_cycles = sram_b / hw.sram_bytes_per_cycle + dram_b / hw.bytes_per_cycle

@@ -42,6 +42,7 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
 def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
                   sampler: str = "ddim", policy: str = "defo", compiled: bool = True,
                   interpret: bool | None = None, collect_stats: bool = True,
+                  block: int = 128, low_bits: int = 8,
                   runner_cache=None, bucket: int | None = None):
     """The deployment pass: eager calibration (+ the Defo mode decision
     after step 2), then the remaining steps through the jit-compiled Pallas
@@ -61,7 +62,12 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int
     bit-identical to the unbucketed path (see repro.serve.bucketing) while
     letting ragged batch sizes share a trace. Records are collected at
     bucket scale (the padded rows are replicas, so per-element fractions
-    are representative; ``macs`` scale with the bucket)."""
+    are representative; ``macs`` scale with the bucket).
+
+    ``low_bits=4`` executes class-1 diff tiles through the packed-int4
+    kernel branch — bit-identical samples, separate runner-cache key;
+    ``block`` sets the kernel tile edge (smaller blocks = finer class
+    maps, more skippable/narrowable tiles at toy dims)."""
     true_b = x_T.shape[0]
     if bucket is not None and bucket != true_b:
         from ..serve import bucketing  # function-level: repro.serve imports sim.harness
@@ -69,7 +75,8 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int
         x_T, labels = bucketing.pad_batch(x_T, labels, bucket)
     eng = DittoEngine(policy=policy, collect_oracle=collect_stats)
     fn = make_denoise_fn(params, cfg, eng, compiled=compiled, interpret=interpret,
-                         collect_stats=collect_stats, runner_cache=runner_cache,
+                         collect_stats=collect_stats, block=block, low_bits=low_bits,
+                         runner_cache=runner_cache,
                          cache_extra=(steps, x_T.shape[0]))
     eng.begin_sample()
     sample = diffusion.SAMPLERS[sampler](sched, fn, x_T, steps=steps, labels=labels)

@@ -1,0 +1,213 @@
+"""Property tests for the kernel stack: Encoding-Unit class boundaries,
+128-pad invariance, the int4 pack/unpack contract, and the int8/int4
+branch equivalence matrix of ``ditto_diff_matmul`` against the jnp oracle.
+
+Every property is implemented as a plain ``_check_*`` function and driven
+two ways: a deterministic seeded sweep that ALWAYS runs (this container
+has no hypothesis wheel), and — when hypothesis is importable — ``@given``
+wrappers over the same checkers, so richer search kicks in automatically
+wherever the dependency exists. The exhaustive shape matrix is marked
+``slow`` (tools/fast_tests.py deselects it); a 3-point diagonal stays in
+the fast suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.diff_encode import LOW_BIT_MAX, diff_encode
+from repro.kernels.int4_pack import pack_int4, unpack_int4, unpack_int4_lanes
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------------ checkers
+def _boundary_case(seed: int, target: int, m: int = 256, k: int = 256):
+    """(x_t, x_prev) whose tile (0, 0) has max|Δ| == target exactly and
+    whose other tiles are zero-Δ. |x_prev| <= 119 keeps x_t clip-free for
+    |Δ| <= 8, so the constructed delta survives int8 exactly."""
+    rng = np.random.RandomState(seed)
+    xp = rng.randint(-119, 120, size=(m, k)).astype(np.int8)
+    d = np.zeros((m, k), np.int8)
+    if target:
+        d[:128, :128] = rng.randint(-target, target + 1, size=(128, 128))
+        d[rng.randint(128), rng.randint(128)] = target * rng.choice([-1, 1])
+    xt = (xp.astype(np.int16) + d).astype(np.int8)
+    return jnp.asarray(xt), jnp.asarray(xp)
+
+
+def _check_class_boundary(seed: int, target: int, expected_cls: int):
+    xt, xp = _boundary_case(seed, target)
+    cls = np.asarray(diff_encode(xt, xp))
+    assert cls[0, 0] == expected_cls, (target, cls[0, 0])
+    assert (cls.reshape(-1)[1:] == 0).all()  # untouched tiles are zero-Δ
+    np.testing.assert_array_equal(cls, np.asarray(ref.diff_encode_ref(xt, xp, (128, 128))))
+
+
+def _check_pad_invariance(seed: int, m: int, k: int):
+    """encode_classes on ragged real data == the reference classification
+    of the zero-padded operands: padding Δ == 0 can never raise a class,
+    and all-padding tiles come out class 0 (skippable)."""
+    rng = np.random.RandomState(seed)
+    xp = rng.randint(-119, 120, size=(m, k)).astype(np.int8)
+    d = rng.randint(-9, 10, size=(m, k)).astype(np.int8)
+    xt = (xp.astype(np.int16) + d).astype(np.int8)
+    got = np.asarray(ops.encode_classes(jnp.asarray(xt), jnp.asarray(xp)))
+    pm, pk = -m % 128, -k % 128
+    xtp = np.pad(xt, ((0, pm), (0, pk)))
+    xpp = np.pad(xp, ((0, pm), (0, pk)))
+    want = np.asarray(ref.diff_encode_ref(jnp.asarray(xtp), jnp.asarray(xpp), (128, 128)))
+    np.testing.assert_array_equal(got, want)
+    # tiles with NO real data must be class 0 — the kernel skips them
+    n_real_i, n_real_j = -(-m // 128), -(-k // 128)
+    assert (got[n_real_i:, :] == 0).all() and (got[:, n_real_j:] == 0).all()
+
+
+def _check_pack_roundtrip(d: np.ndarray):
+    p = pack_int4(jnp.asarray(d))
+    assert p.dtype == jnp.int8 and p.shape == d.shape[:-1] + (d.shape[-1] // 2,)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(p)), d.astype(np.int32))
+    lo, hi = unpack_int4_lanes(p)
+    np.testing.assert_array_equal(np.asarray(lo), d[..., 0::2].astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(hi), d[..., 1::2].astype(np.int32))
+
+
+def _mixed_class_operands(seed: int, m: int, k: int, n: int):
+    """Operands whose Δ spans zero, low and full regions so every kernel
+    branch (skip / int4 / int8) executes somewhere in the tile grid."""
+    rng = np.random.RandomState(seed)
+    xp = rng.randint(-119, 120, size=(m, k)).astype(np.int8)
+    d = np.zeros((m, k), np.int8)
+    lm, lk = max(m // 2, 1), max(k // 2, 1)
+    d[:lm, :lk] = rng.randint(-LOW_BIT_MAX, LOW_BIT_MAX + 1, size=(lm, lk))
+    d[lm:, lk:] = rng.randint(-90, 91, size=(m - lm, k - lk))
+    xt = (xp.astype(np.int16) + d).astype(np.int8)
+    w = rng.randint(-127, 128, size=(k, n)).astype(np.int8)
+    yp = np.asarray(ref.int8_matmul_ref(jnp.asarray(xp), jnp.asarray(w)))
+    return (jnp.asarray(xt), jnp.asarray(xp), jnp.asarray(w), jnp.asarray(yp))
+
+
+def _check_branch_equivalence(seed: int, m: int, k: int, n: int, interpret):
+    xt, xp, w, yp = _mixed_class_operands(seed, m, k, n)
+    want = np.asarray(ref.ditto_diff_matmul_ref(xt, xp, w, yp))
+    y8, cls8 = ops.ditto_linear_step(xt, xp, w, yp, interpret=interpret, low_bits=8)
+    y4, cls4 = ops.ditto_linear_step(xt, xp, w, yp, interpret=interpret, low_bits=4)
+    np.testing.assert_array_equal(np.asarray(y8), want)
+    np.testing.assert_array_equal(np.asarray(y4), want)
+    np.testing.assert_array_equal(np.asarray(y4), np.asarray(y8))
+    np.testing.assert_array_equal(np.asarray(cls8), np.asarray(cls4))
+
+
+# ----------------------------------------------- deterministic sweeps (always)
+@pytest.mark.parametrize("target,expected", [(0, 0), (LOW_BIT_MAX, 1), (LOW_BIT_MAX + 1, 2)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_class_boundaries(seed, target, expected):
+    """Classes flip exactly at max|Δ| in {0, LOW_BIT_MAX, LOW_BIT_MAX+1}."""
+    _check_class_boundary(seed, target, expected)
+
+
+@pytest.mark.parametrize("m,k", [(1, 1), (127, 129), (128, 128), (200, 70), (256, 384)])
+def test_pad_invariance(m, k):
+    _check_pad_invariance(seed=3, m=m, k=k)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pack_int4_roundtrip(seed):
+    rng = np.random.RandomState(seed)
+    _check_pack_roundtrip(rng.randint(-8, 8, size=(5, 3, 16)))
+    # the class-1 contract range is strictly inside the exact range
+    _check_pack_roundtrip(rng.randint(-LOW_BIT_MAX, LOW_BIT_MAX + 1, size=(7, 32)))
+
+
+def test_pack_int4_exact_range_edges():
+    """-8 and +7 are the packable extremes; LOW_BIT_MAX stays inside them."""
+    d = np.array([[-8, 7, 0, -1, LOW_BIT_MAX, -LOW_BIT_MAX]], np.int32)
+    _check_pack_roundtrip(d)
+    assert LOW_BIT_MAX <= 7
+
+
+# --------------------------------------------------- equivalence matrix tests
+_EDGE = [96, 128, 160]  # below / at / just above the 128-tile boundary
+
+
+@pytest.mark.parametrize("m,k,n", [(96, 128, 160), (160, 96, 128), (128, 160, 96)])
+def test_branch_equivalence_fast(m, k, n):
+    """3-point diagonal of the matrix — stays in the fast suite."""
+    _check_branch_equivalence(11, m, k, n, interpret=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("interpret", [True, None])
+@pytest.mark.parametrize("m", _EDGE)
+@pytest.mark.parametrize("k", _EDGE)
+@pytest.mark.parametrize("n", _EDGE)
+def test_branch_equivalence_matrix(m, k, n, interpret):
+    """Full odd/ragged shape matrix x {forced-interpret, backend-auto}:
+    int8 and int4 branches == oracle == each other, bit-for-bit. The
+    interpret=None leg only adds coverage on TPU (native Mosaic lowering);
+    off-TPU it resolves to the already-tested interpreter, so skip it
+    rather than run the matrix twice for nothing."""
+    if interpret is None and jax.default_backend() != "tpu":
+        pytest.skip("interpret=None resolves to the interpreter off-TPU")
+    _check_branch_equivalence(17, m, k, n, interpret)
+
+
+def test_int4_all_low_tiles():
+    """All-class-1 grid: every tile takes the packed branch; still exact."""
+    rng = np.random.RandomState(5)
+    xp = rng.randint(-119, 120, size=(256, 256)).astype(np.int8)
+    d = rng.randint(-LOW_BIT_MAX, LOW_BIT_MAX + 1, size=(256, 256)).astype(np.int8)
+    d[d == 0] = 1  # no all-zero tile sneaks into class 0
+    xt = (xp.astype(np.int16) + d).astype(np.int8)
+    w = rng.randint(-127, 128, size=(256, 128)).astype(np.int8)
+    yp = np.asarray(ref.int8_matmul_ref(jnp.asarray(xp), jnp.asarray(w)))
+    y4, cls = ops.ditto_linear_step(jnp.asarray(xt), jnp.asarray(xp), jnp.asarray(w),
+                                    jnp.asarray(yp), low_bits=4)
+    assert (np.asarray(cls) == 1).all()
+    np.testing.assert_array_equal(
+        np.asarray(y4),
+        np.asarray(ref.ditto_diff_matmul_ref(jnp.asarray(xt), jnp.asarray(xp),
+                                             jnp.asarray(w), jnp.asarray(yp))))
+
+
+def test_low_bit_max_single_source():
+    """The one-constant satellite: every module reads diff_encode's value."""
+    from repro.core.ditto import bops, classify
+    from repro.kernels import int4_pack
+
+    assert classify.LOW_BIT_MAX is LOW_BIT_MAX
+    assert ref.LOW_BIT_MAX is LOW_BIT_MAX
+    assert bops.LOW_BIT_MAX is LOW_BIT_MAX
+    assert int4_pack.LOW_BIT_MAX is LOW_BIT_MAX
+
+
+# ------------------------------------------------- hypothesis wrappers (auto)
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from([(0, 0), (LOW_BIT_MAX, 1), (LOW_BIT_MAX + 1, 2)]))
+    def test_hyp_class_boundaries(seed, case):
+        _check_class_boundary(seed, case[0], case[1])
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 300), st.integers(1, 300))
+    def test_hyp_pad_invariance(seed, m, k):
+        _check_pad_invariance(seed, m, k)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 64))
+    def test_hyp_pack_roundtrip(seed, rows, half_k):
+        rng = np.random.RandomState(seed)
+        _check_pack_roundtrip(rng.randint(-8, 8, size=(rows, 2 * half_k)))
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(_EDGE),
+           st.sampled_from(_EDGE), st.sampled_from(_EDGE))
+    @settings(max_examples=5, deadline=None)
+    def test_hyp_branch_equivalence(seed, m, k, n):
+        _check_branch_equivalence(seed, m, k, n, interpret=True)

@@ -114,6 +114,75 @@ def test_bucket_padding_bitidentical(setup, b):
     assert all(r["t"] % 4 == 0 for r in eng.records if not r["attention"])
 
 
+# ----------------------------------------------------------- serve edges
+@pytest.mark.slow
+def test_batch_one_request_no_padding(setup):
+    """batch=1 lands in bucket 1: NO replication padding anywhere, and the
+    session result equals the direct unbucketed compiled run bit-for-bit."""
+    params, sched = setup
+    sess = ServeSession(params, CFG, sched, steps=3, policy="diff", max_batch=4,
+                        collect_stats=False)
+    x, labels = _request(1, seed=21)
+    res = sess.serve(x, labels)
+    assert res.sample.shape[0] == 1
+    assert [c.bucket for c in res.chunks] == [1] and res.chunks[0].batch == 1
+    _, plain, _ = harness.serve_records(params, CFG, sched, x, labels, steps=3,
+                                        policy="diff", compiled=True, collect_stats=False)
+    np.testing.assert_array_equal(np.asarray(res.sample), np.asarray(plain))
+
+
+@pytest.mark.slow
+def test_exact_bucket_size_request(setup):
+    """A request already ON the bucket grid (b == bucket_for(b)) pads
+    nothing — pad_batch returns the batch unchanged — and serves exactly."""
+    params, sched = setup
+    b = 4
+    assert bucket_for(b, max_batch=4) == b
+    x, labels = _request(b, seed=22)
+    xp, lp = pad_batch(x, labels, b)
+    assert xp is x and lp is labels  # identity, not a copy
+    sess = ServeSession(params, CFG, sched, steps=3, policy="diff", max_batch=4,
+                        collect_stats=False)
+    res = sess.serve(x, labels)
+    assert res.sample.shape[0] == b
+    assert [c.bucket for c in res.chunks] == [b]
+    _, plain, _ = harness.serve_records(params, CFG, sched, x, labels, steps=3,
+                                        policy="diff", compiled=True, collect_stats=False)
+    np.testing.assert_array_equal(np.asarray(res.sample), np.asarray(plain))
+
+
+def test_cache_key_misses_when_only_low_bits_differs():
+    """int8 and int4 runners lower different kernel bodies: a shared cache
+    must key them apart even when every other component agrees."""
+    cache = CompiledRunnerCache()
+    modes = {"l1": "diff"}
+    f8 = cache.step_for(CFG, modes, low_bits=8, extra=(4, 4))
+    f4 = cache.step_for(CFG, modes, low_bits=4, extra=(4, 4))
+    assert f8 is not f4
+    assert len(cache) == 2 and cache.misses == 2 and cache.hits == 0
+    k8 = cache.key_for(CFG, modes, low_bits=8, extra=(4, 4))
+    k4 = cache.key_for(CFG, modes, low_bits=4, extra=(4, 4))
+    assert k8 != k4 and k8.low_bits == 8 and k4.low_bits == 4
+    assert k8 == cache.key_for(CFG, modes, extra=(4, 4))  # 8 is the default
+    # and a repeat int4 request is a pure hit
+    assert cache.step_for(CFG, modes, low_bits=4, extra=(4, 4)) is f4
+    assert cache.hits == 1
+
+
+@pytest.mark.slow
+def test_int4_serve_bitidentical(setup):
+    """ServeSession(low_bits=4) == ServeSession(low_bits=8) bit-for-bit in
+    the fp32 sample (the class-1 pack/unpack round-trip is exact)."""
+    params, sched = setup
+    x, labels = _request(3, seed=44)
+    out = {}
+    for lb in (8, 4):
+        sess = ServeSession(params, CFG, sched, steps=4, policy="diff", max_batch=4,
+                            collect_stats=False, low_bits=lb)
+        out[lb] = sess.serve(x, labels).sample
+    np.testing.assert_array_equal(np.asarray(out[4]), np.asarray(out[8]))
+
+
 # ----------------------------------------------------- cache bookkeeping
 def test_cache_key_hit_miss_bookkeeping():
     """Key construction and hit/miss accounting without paying any XLA

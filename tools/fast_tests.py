@@ -7,7 +7,10 @@ The full tier-1 run stays `PYTHONPATH=src python -m pytest -x -q` (~8 min);
 this entry point sets PYTHONPATH itself, first runs the docs lint
 (tools/check_docs.py — fenced commands parse, referenced paths exist) and
 then deselects the long system/pipeline/model-equivalence tests for the
-inner dev loop.
+inner dev loop. The kernel property suite (tests/test_kernel_properties.py:
+Encoding-Unit class boundaries, 128-pad invariance, int4 pack round-trip,
+int8/int4 branch equivalence) runs here too — only its exhaustive shape
+matrix is `slow`-marked and deferred to tier-1.
 """
 import os
 import subprocess
