@@ -1,0 +1,196 @@
+"""Single-pass fused diff-step kernel vs the PR 3 two-pass path.
+
+Three measurements, all recorded into benchmarks/BENCH_serve.json
+(``common.record_perf``) so the memory-flow trajectory persists across
+PRs:
+
+1. **Per-step wall-clock** (interpret-mode CPU): one diff linear step at
+   a DiT-block-like shape (M=256 tokens, K=N=1152) across tile-class
+   mixes — the paper's late-denoising regime (zero/low-heavy) is the
+   headline row. Two-pass = ``ops.ditto_linear_step(fused=False)`` with
+   the y_prev operand (exactly the PR 3 flow); fused = the single-pass
+   kernel (encode+Δ-cache, hold-map index remapping, y_prev epilogue).
+   Outputs are asserted bit-identical before any timing is recorded.
+
+2. **Modeled HBM bytes + tile-DMA counts** (``kernels.dma_model``): the
+   copy counts the Mosaic pipeline issues under revisit elision, replayed
+   from the same hold maps the fused kernel executes with. The all-zero
+   row proves the headline claim: zero-class tiles issue NO activation
+   copy (two-pass: one x_t + one x_prev copy per (i, j, kk) grid step;
+   fused: a single pipeline-resident block, zero per-tile copies).
+
+3. **Serve-level wall-clock**: the dit* serve configuration end-to-end,
+   fused vs two-pass, sharing one runner cache (distinct keys) — samples
+   asserted bit-identical, steady-state wall recorded.
+
+    PYTHONPATH=src python benchmarks/bench_fused_step.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common
+from repro.kernels import LOW_BIT_MAX, dma_model, ops
+from repro.serve import CompiledRunnerCache
+from repro.sim import harness
+
+# DiT-block-like step: 256 tokens x 1152 features (grid 2 x 9 x 9 at 128s)
+M, K, N = 256, 1152, 1152
+BLOCK = 128
+REPS = 9
+
+# (zero, low, full) tile fractions; "late" is the paper's regime — most
+# tiles of a late denoising step have zero or narrow temporal differences
+# (Fig. 3/5: similarity grows along the trajectory); "mid" is the
+# mid-trajectory mix with more full tiles
+MIXES = {
+    "late": (0.56, 0.33, 0.11),
+    "mid": (0.45, 0.40, 0.15),
+    "allzero": (1.0, 0.0, 0.0),
+    "dense": (0.0, 0.0, 1.0),
+}
+
+SERVE_STEPS = 12
+SERVE_BATCH = 4
+SERVE_BLOCK = 32  # finer grid at toy dims — same setting as bench_int4
+
+
+def _mixed_operands(mix, seed=11):
+    """Operands whose tile-class map follows ``mix`` EXACTLY: per-class
+    tile counts are rounded from the fractions (not sampled, so the
+    measured workload is identical run to run), placements shuffled
+    deterministically, LOW_BIT_MAX witness pinned inside low tiles."""
+    rng = np.random.RandomState(seed)
+    gm, gk = M // BLOCK, K // BLOCK
+    xp = rng.randint(-119, 120, size=(M, K)).astype(np.int8)
+    d = np.zeros((M, K), np.int16)
+    n_tiles = gm * gk
+    n_low = int(round(mix[1] * n_tiles))
+    n_full = int(round(mix[2] * n_tiles))
+    flat = np.array([0] * (n_tiles - n_low - n_full) + [1] * n_low + [2] * n_full)
+    rng.shuffle(flat)
+    cls = flat.reshape(gm, gk)
+    for i in range(gm):
+        for kk in range(gk):
+            sl = np.s_[i * BLOCK:(i + 1) * BLOCK, kk * BLOCK:(kk + 1) * BLOCK]
+            if cls[i, kk] == 1:
+                t = rng.randint(-LOW_BIT_MAX, LOW_BIT_MAX + 1, size=(BLOCK, BLOCK))
+                t[0, 0] = LOW_BIT_MAX
+                d[sl] = t
+            elif cls[i, kk] == 2:
+                d[sl] = rng.randint(-90, 91, size=(BLOCK, BLOCK))
+    xt = np.clip(xp.astype(np.int16) + d, -127, 127).astype(np.int8)
+    w = rng.randint(-127, 128, size=(K, N)).astype(np.int8)
+    yp = rng.randint(-(2 ** 20), 2 ** 20, size=(M, N)).astype(np.int32)
+    return (jnp.asarray(xt), jnp.asarray(xp), jnp.asarray(w), jnp.asarray(yp)), cls
+
+
+def _time_pair(f_a, f_b, reps=REPS):
+    """Min of ``reps`` individually-blocked calls per variant, reps
+    interleaved A/B so background-load spikes on a shared CPU box hit
+    both variants symmetrically — the best-achievable estimator for the
+    ratio (mean-of-N without interleaving was observed to swing the
+    two-pass/fused ratio by +/-0.2 here)."""
+    jax.block_until_ready(f_a())  # warm: trace + compile
+    jax.block_until_ready(f_b())
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.monotonic()
+        jax.block_until_ready(f_a())
+        best_a = min(best_a, time.monotonic() - t0)
+        t0 = time.monotonic()
+        jax.block_until_ready(f_b())
+        best_b = min(best_b, time.monotonic() - t0)
+    return best_a, best_b
+
+
+def _per_step_rows():
+    rows = []
+    for name, mix in MIXES.items():
+        (xt, xp, w, yp), cls = _mixed_operands(mix)
+
+        def two_pass():
+            return ops.ditto_linear_step(xt, xp, w, yp, low_bits=4, fused=False)[0]
+
+        def fused():
+            return ops.ditto_linear_step(xt, xp, w, yp, low_bits=4, fused=True)[0]
+
+        np.testing.assert_array_equal(np.asarray(two_pass()), np.asarray(fused()))
+        t_tp, t_fu = _time_pair(two_pass, fused)
+        speedup = t_tp / t_fu
+        gn = N // BLOCK
+        bytes_model = dma_model.model_hbm_bytes(cls, gn, bm=BLOCK, bn=BLOCK, bk=BLOCK)
+        fu_dma = dma_model.fused_tile_dma(cls, gn)
+        tp_dma = dma_model.two_pass_tile_dma(cls, gn)
+        act_copies_tp = tp_dma["x_t"]["copies"] + tp_dma["x_prev"]["copies"]
+        stream_copies = fu_dma["dc"]["copies"] + fu_dma["dh"]["copies"]
+        rows += [
+            (f"bench_fused/{name}_two_pass_ms", round(t_tp * 1e6, 1), round(t_tp * 1e3, 2)),
+            (f"bench_fused/{name}_fused_ms", round(t_fu * 1e6, 1), round(t_fu * 1e3, 2)),
+            (f"bench_fused/{name}_speedup", 0, round(speedup, 3)),
+            (f"bench_fused/{name}_hbm_bytes_ratio", 0, round(bytes_model["ratio"], 3)),
+            # two-pass activation-block copies -> fused Δ-stream copies
+            # (x_t/x_prev are not fused-matmul operands at all)
+            (f"bench_fused/{name}_act_copies", 0, f"{act_copies_tp}->0"),
+            (f"bench_fused/{name}_stream_copies", 0, stream_copies),
+            (f"bench_fused/{name}_zero_tile_copies", 0,
+             fu_dma["dc"]["by_class"][0] + fu_dma["dh"]["by_class"][0]
+             + fu_dma["w"]["by_class"][0]),
+        ]
+        if name == "allzero":
+            # the headline DMA claim, stated as its own row: under revisit
+            # elision no zero-class tile moves Δ-stream or weight data
+            all_zero_free = all(
+                fu_dma[op]["by_class"][0] == 0 for op in ("dc", "dh", "w"))
+            rows.append(("bench_fused/zero_tiles_issue_no_copy", 0, all_zero_free))
+    return rows
+
+
+def _serve_fn(params, dcfg, sched, x, labels, cache, *, fused: bool):
+    def go():
+        _, sample, _ = harness.serve_records(
+            params, dcfg, sched, x, labels, steps=SERVE_STEPS, sampler="ddim",
+            policy="diff", compiled=True, block=SERVE_BLOCK, low_bits=4,
+            fused=fused, runner_cache=cache)
+        return sample
+
+    return go
+
+
+def _serve_rows():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    x, labels = common.sample_inputs(bm, batch=SERVE_BATCH)
+    cache = CompiledRunnerCache()  # shared: fused/two-pass get distinct keys
+    two_pass = _serve_fn(params, dcfg, sched, x, labels, cache, fused=False)
+    fused = _serve_fn(params, dcfg, sched, x, labels, cache, fused=True)
+    s_tp, s_fu = two_pass(), fused()  # warm: XLA trace + compile per lowering
+    np.testing.assert_array_equal(np.asarray(s_tp), np.asarray(s_fu))
+    wall_tp, wall_fu = _time_pair(two_pass, fused, reps=2)
+    return [
+        ("bench_fused/serve_two_pass_s", round(wall_tp * 1e6 / SERVE_STEPS, 1),
+         round(wall_tp, 2)),
+        ("bench_fused/serve_fused_s", round(wall_fu * 1e6 / SERVE_STEPS, 1),
+         round(wall_fu, 2)),
+        ("bench_fused/serve_speedup", 0, round(wall_tp / wall_fu, 3)),
+        ("bench_fused/serve_bit_identical", 0, True),
+    ]
+
+
+def run():
+    rows = _per_step_rows() + _serve_rows()
+    # the acceptance headline: per-step speedup in the paper's regime
+    late = {name: d for name, _, d in rows}
+    rows.append(("bench_fused/per_step_speedup", 0,
+                 late["bench_fused/late_speedup"]))
+    common.record_perf("bench_fused", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

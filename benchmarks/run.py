@@ -29,6 +29,7 @@ MODULES = [
     "bench_compiled_step",
     "bench_serve_cache",
     "bench_int4_path",
+    "bench_fused_step",
 ]
 
 
@@ -60,11 +61,19 @@ def roofline_rows():
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
     import importlib
 
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fused", action="store_true",
+                    help="run only bench_fused_step (the single-pass fused "
+                         "diff-step kernel vs the two-pass path)")
+    args = ap.parse_args(argv)
+    modules = ["bench_fused_step"] if args.fused else MODULES
+
     failures = []
-    for mod_name in MODULES:
+    for mod_name in modules:
         t0 = time.monotonic()
         try:
             mod = importlib.import_module(mod_name)

@@ -19,6 +19,7 @@ mid-queue.
 
     PYTHONPATH=src python examples/serve_diffusion.py [--requests 6] [--batch 4] [--eager]
     PYTHONPATH=src python examples/serve_diffusion.py --low-bits 4   # packed-int4 low tiles
+    PYTHONPATH=src python examples/serve_diffusion.py --fused        # single-pass fused kernel
 """
 import argparse
 import json
@@ -67,6 +68,10 @@ def main(argv=None):
                     help="4 = execute class-1 diff tiles through the packed-int4 "
                          "kernel branch (bit-identical samples, separate runner "
                          "cache key)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run diff layers through the single-pass fused kernel "
+                         "(scalar-prefetch DMA skipping, y_prev epilogue) — "
+                         "bit-identical samples, separate runner cache key")
     args = ap.parse_args(argv)
 
     arch, dcfg, params = build_model()
@@ -80,7 +85,8 @@ def main(argv=None):
     queue = [(i, i % arch.n_classes) for i in range(args.requests) if i not in done]
 
     sess = ServeSession(params, dcfg, sched, steps=args.steps, compiled=not args.eager,
-                        low_bits=args.low_bits, max_batch=max(args.batch, 1))
+                        low_bits=args.low_bits, fused=args.fused,
+                        max_batch=max(args.batch, 1))
     while queue:
         batch_reqs, queue = queue[: args.batch], queue[args.batch :]
         rids = [r for r, _ in batch_reqs]

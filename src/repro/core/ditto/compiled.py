@@ -16,7 +16,11 @@ function in which:
         class-1 (low) tiles additionally execute the packed-int4 branch —
         bit-identical, since the class verdict bounds |Δ| inside the exact
         pack/unpack range — and the measured per-step tile-class histogram
-        (``tile_hist`` in the aux pytree) feeds the pricing;
+        (``tile_hist`` in the aux pytree) feeds the pricing; with
+        ``fused=True`` they run the single-pass fused kernel instead
+        (``kernels.fused_step``: encode+Δ-cache in one pass, skipped
+        tiles' DMAs elided via scalar-prefetch hold maps, y_prev as an
+        epilogue) — bit-identical, different lowering;
   spatial layers (Defo+) execute the direct GEMM — exactly what the eager
         spatial branch computes — via ``int8_matmul``; their row-delta
         statistics are still reduced for the records.
@@ -44,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from ...kernels import ops
+from ...kernels.common import validate_low_bits
 from . import classify, quant
 from .engine import DittoEngine
 
@@ -177,18 +182,20 @@ class CompiledDittoEngine:
     jit-traceable; mode selection happens at trace time."""
 
     def __init__(self, engine: DittoEngine, *, interpret: bool | None = None,
-                 block: int = 128, collect_stats: bool = True, low_bits: int = 8):
+                 block: int = 128, collect_stats: bool = True, low_bits: int = 8,
+                 fused: bool = False):
         if not engine.ready_for_compiled():
             raise ValueError(
                 "engine not calibrated: run >= 1 eager step (>= 2 for defo policies, "
                 "whose mode decision lands after the step-2 diff probe) before "
                 f"compiling (step_idx={engine.step_idx}, decided={engine._decided})")
-        assert low_bits in (4, 8), low_bits
+        validate_low_bits(low_bits)
         self.engine = engine
         self.block = block
         self.interpret = interpret
         self.collect_stats = collect_stats
         self.low_bits = low_bits
+        self.fused = fused
         self.modes = engine.compiled_modes()
         self.meta = engine.meta
         self.params: dict[str, dict] = {}
@@ -213,7 +220,8 @@ class CompiledDittoEngine:
 
     def _blk(self) -> dict:
         b = self.block
-        return dict(bm=b, bn=b, bk=b, interpret=self.interpret, low_bits=self.low_bits)
+        return dict(bm=b, bn=b, bk=b, interpret=self.interpret,
+                    low_bits=self.low_bits, fused=self.fused)
 
     # --------------------------------------------------------------- linear
     def linear(self, name: str, x: jax.Array, st: dict) -> tuple[jax.Array, dict, dict]:

@@ -130,7 +130,7 @@ class DittoDiT:
 
 def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128,
                  interpret: bool | None = None, collect_stats: bool = True,
-                 low_bits: int = 8):
+                 low_bits: int = 8, fused: bool = False):
     """Build the pure per-step function of the compiled execution pass.
 
     Returns ``step(ditto_params, model_params, state, latents, t, labels)
@@ -144,10 +144,14 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128
     is what :class:`repro.serve.CompiledRunnerCache` keys on to amortize
     compilation across the whole request stream. ``low_bits=4`` routes
     class-1 diff tiles through the packed-int4 kernel branch
-    (bit-identical output, distinct cache key).
+    (bit-identical output, distinct cache key); ``fused=True`` runs diff
+    layers through the single-pass fused kernel with scalar-prefetch DMA
+    skipping (bit-identical output, distinct cache key — a different
+    lowering entirely).
     """
     modes = dict(modes)
-    blk = dict(bm=block, bn=block, bk=block, interpret=interpret, low_bits=low_bits)
+    blk = dict(bm=block, bn=block, bk=block, interpret=interpret,
+               low_bits=low_bits, fused=fused)
 
     def step(dparams, mparams, state, latents, t, labels):
         new_state: dict = {}
@@ -188,22 +192,24 @@ class CompiledDittoDiT:
 
     def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
                  interpret: bool | None = None, collect_stats: bool = True,
-                 block: int = 128, low_bits: int = 8,
+                 block: int = 128, low_bits: int = 8, fused: bool = False,
                  cache=None, cache_extra: tuple = ()):
         self.cfg = cfg
         self.engine = engine
         self.params = params
         self.ceng = CompiledDittoEngine(engine, interpret=interpret, block=block,
-                                        collect_stats=collect_stats, low_bits=low_bits)
+                                        collect_stats=collect_stats, low_bits=low_bits,
+                                        fused=fused)
         self.state = self.ceng.init_state()
         if cache is not None:
             self._step = cache.step_for(cfg, self.ceng.modes, block=self.ceng.block,
                                         interpret=interpret, collect_stats=collect_stats,
-                                        low_bits=low_bits, extra=tuple(cache_extra))
+                                        low_bits=low_bits, fused=fused,
+                                        extra=tuple(cache_extra))
         else:
             self._step = jax.jit(make_step_fn(cfg, self.ceng.modes, block=self.ceng.block,
                                               interpret=interpret, collect_stats=collect_stats,
-                                              low_bits=low_bits))
+                                              low_bits=low_bits, fused=fused))
 
     def __call__(self, latents, t, labels=None):
         out, self.state, aux = self._step(self.ceng.params, self.params, self.state,
@@ -216,7 +222,7 @@ class CompiledDittoDiT:
 def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
                     compiled: bool = False, interpret: bool | None = None,
                     collect_stats: bool = True, block: int = 128, low_bits: int = 8,
-                    runner_cache=None, cache_extra: tuple = ()):
+                    fused: bool = False, runner_cache=None, cache_extra: tuple = ()):
     """denoise_fn(x, t, labels) for repro.core.diffusion samplers; calls
     engine.end_step() after each sampler step.
 
@@ -228,7 +234,8 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
     across samples/batches whose (cfg, modes, kernel config, shapes) agree
     — one trace per runner-cache key instead of one per batch.
     ``low_bits=4`` executes class-1 diff tiles through the packed-int4
-    kernel branch (bit-identical; separate runner-cache key).
+    kernel branch (bit-identical; separate runner-cache key); ``fused=True``
+    through the single-pass fused kernel (bit-identical; separate key).
     """
     runner = DittoDiT(params, cfg, engine)
     box: dict = {}
@@ -238,7 +245,7 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
             if box.get("built_for") is not engine.records:  # rebuilt per begin_sample
                 box["runner"] = CompiledDittoDiT(params, cfg, engine,
                                                  interpret=interpret, collect_stats=collect_stats,
-                                                 block=block, low_bits=low_bits,
+                                                 block=block, low_bits=low_bits, fused=fused,
                                                  cache=runner_cache, cache_extra=cache_extra)
                 box["built_for"] = engine.records
             out = box["runner"](x, t, labels)

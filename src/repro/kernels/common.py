@@ -1,0 +1,44 @@
+"""Shared kernel-wrapper helpers — single source for the three contracts
+every Pallas wrapper in this package repeats:
+
+* :func:`resolve_interpret` — the ``interpret=None`` backend
+  auto-detection (native Mosaic lowering on TPU, the bit-identical Pallas
+  interpreter everywhere else). ``repro.serve.cache`` uses the same
+  function so a cache key built from ``None`` and one built from its
+  resolved value can never name two different lowerings.
+* :func:`pad2` — zero-padding a 2-D operand up to the tile grid (the
+  128-tile padding contract documented in each kernel module).
+* :func:`validate_low_bits` — the ``low_bits`` domain check. Raising
+  ``ValueError`` at the ops boundary beats an assert deep in a jitted
+  kernel: a bad value (say ``low_bits=2``) would otherwise silently take
+  the int8 branch or trip an opaque trace-time assert.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["resolve_interpret", "pad2", "validate_low_bits"]
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> True unless running on a real TPU (see module docstring)."""
+    return jax.default_backend() != "tpu" if interpret is None else bool(interpret)
+
+
+def pad2(a: jax.Array, br: int, bc: int, fill: int = 0) -> jax.Array:
+    """Zero-pad a (R, C) array so R % br == C % bc == 0."""
+    r, c = a.shape
+    pr, pc = (-r) % br, (-c) % bc
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)), constant_values=fill)
+    return a
+
+
+def validate_low_bits(low_bits: int) -> int:
+    """Only 4 (packed-int4 low tiles) and 8 (int8 everywhere) exist."""
+    if low_bits not in (4, 8):
+        raise ValueError(
+            f"low_bits must be 4 (packed-int4 low-tile branch) or 8 (int8), "
+            f"got {low_bits!r}")
+    return low_bits

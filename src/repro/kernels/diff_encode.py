@@ -44,6 +44,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import resolve_interpret
+
 LOW_BIT_MAX = 7  # largest |Δ| a signed 4-bit lane holds; see module docstring
 
 
@@ -66,8 +68,7 @@ def diff_encode(
 
     interpret=None auto-detects: native lowering on TPU, interpreter
     (bit-identical math) everywhere else."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     m, k = x_t.shape
     assert m % bm == 0 and k % bk == 0, (x_t.shape, bm, bk)
     grid = (m // bm, k // bk)

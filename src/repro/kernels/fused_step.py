@@ -1,0 +1,317 @@
+"""Single-pass fused diff-step kernel with scalar-prefetch DMA skipping.
+
+The two-pass flow (``diff_encode`` then ``ditto_diff_matmul``) skips the
+MXU dot of zero-class tiles but still *moves* every tile: each output
+column j re-reads the (bm, bk) x_t AND x_prev blocks from HBM, re-derives
+Δ in VMEM, and the int32 y_prev block — 4x an int8 tile — rides along as
+a full operand pass. Ditto's execution-flow win is a *bandwidth* win
+(PAPERS.md: FRDiff, DyDiT bottom out in skipped memory traffic, not
+skipped MACs), so this module makes the data movement itself conditional
+on the class map — the Encoding Unit feeds the Compute Unit an *encoded
+difference stream*, exactly the paper's dataflow, instead of having the
+Compute Unit re-derive Δ from raw activations per output column.
+
+``diff_encode_fused``
+    ONE pass over (x_t, x_prev) produces the per-tile class map plus a
+    two-plane Δ-cache that is exact for EVERY Δ:
+
+    * ``dc`` (M, K/2) int8 — Δ's sign-extended low nibbles, two int4
+      K-lanes per byte (``kernels.int4_pack`` layout). On class-1 tiles
+      this IS Δ (the class verdict bounds |Δ| <= 7), so low tiles are a
+      half-width stream.
+    * ``dh`` (M, K) int8 — the high part ``(Δ - lo) >> 4``; with
+      ``Δ = lo + (dh << 4)`` exactly (|Δ| <= 254 -> dh in [-16, 16]).
+      Identically zero on zero/low tiles, so only class-2 tiles write or
+      read it: a full tile streams 1.5 bytes/element instead of the
+      2 bytes/element of an x_t + x_prev re-read.
+
+    Cache writes are class-gated (zero tiles write neither plane, low
+    tiles skip ``dh``), mirroring the zero-skip of the paper's Encoding
+    Unit on the write side.
+
+``ditto_fused_matmul``
+    Consumes (classes, dc, dh, W) — x_t/x_prev are NOT operands; raw
+    activations are read exactly once per step (by the encode pass),
+    never per output column. The class map and three *hold maps* ride
+    the scalar-prefetch slot (``PrefetchScalarGridSpec``) and drive the
+    **index maps**: a tile that does not need an operand re-presents the
+    block index the pipeline already holds (the previous needed block, or
+    the first needed block before any need — a prefetch), so Pallas'
+    revisit elision issues NO new HBM->VMEM copy for it. Concretely:
+    zero-class tiles move nothing at all; class-1 tiles fetch only the
+    half-width ``dc`` block (+ W); class-2 tiles fetch ``dc`` + ``dh``
+    (+ W). y_prev is not an operand either: the kernel emits the bare
+    diff contribution and the caller adds y_prev as an epilogue (one
+    fused XLA add), so the largest per-step block of the two-pass kernel
+    disappears from the pipeline entirely.
+
+``hold_maps``
+    The jit-traceable construction of those prefetched index tables; the
+    DMA cost model (``kernels.dma_model``) replays the *same* function to
+    count copies, so the "zero tiles issue no copy" claim is checked
+    against the maps the kernel actually runs with, not a parallel
+    re-implementation.
+
+Bit-exactness: the fused path is bit-identical to the two-pass oracle
+(``ops.ditto_linear_step(fused=False)``) for every class mix, y_prev
+presence, and ``low_bits`` setting — the nibble/high split reconstructs
+every Δ exactly, zero-class contributions are identically zero, and held
+blocks are never read by the gated kernel body (equivalence matrix in
+tests/test_kernel_properties.py).
+
+Tile shapes / grid, 128-pad contract and ``interpret=None`` follow
+``ditto_diff_matmul`` (same grid, same padding exactness argument); the
+Δ-cache lane pairing needs bk even, as in the int4 branch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from .common import resolve_interpret
+from .diff_encode import LOW_BIT_MAX
+from .int4_pack import pack_int4, unpack_int4_lanes
+
+__all__ = ["diff_encode_fused", "ditto_fused_matmul", "hold_maps"]
+
+
+# --------------------------------------------------------------- encode+pack
+def _encode_kernel(xt_ref, xp_ref, cls_ref, dc_ref, dh_ref):
+    d = xt_ref[...].astype(jnp.int32) - xp_ref[...].astype(jnp.int32)
+    amax = jnp.max(jnp.abs(d))
+    c = jnp.where(amax == 0, 0, jnp.where(amax <= LOW_BIT_MAX, 1, 2)).astype(jnp.int32)
+    cls_ref[0, 0] = c
+
+    # Δ-cache planes, write-gated by class (zero tiles move nothing; low
+    # tiles' dh is identically zero so only full tiles write it)
+    @pl.when(c >= 1)
+    def _write_lo():
+        dc_ref[...] = pack_int4(d)  # Δ's low nibbles, two int4 lanes/byte
+
+    @pl.when(c == 2)
+    def _write_hi():
+        lo = ((d & 0xF) ^ 8) - 8  # sign-extended low nibble (= unpack(pack))
+        dh_ref[...] = ((d - lo) >> 4).astype(jnp.int8)  # Δ = lo + (dh << 4)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def diff_encode_fused(
+    x_t: jax.Array,
+    x_prev: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x_*: (M, K) int8 -> (classes (M/bm, K/bk) int32,
+    dc (M, K/2) int8 — Δ low nibbles, two int4 K lanes per byte,
+    dh (M, K) int8 — Δ high part, Δ = lo + (dh << 4) exactly).
+
+    One pass produces all three: the Encoding-Unit verdict AND the
+    encoded Δ stream the fused matmul consumes, so raw activations are
+    read from HBM exactly once per step instead of once per output
+    column. Unwritten cache regions (gated by class) are never read."""
+    interpret = resolve_interpret(interpret)
+    m, k = x_t.shape
+    assert m % bm == 0 and k % bk == 0, (x_t.shape, bm, bk)
+    assert bk % 2 == 0, f"the Δ-cache pairs K lanes: bk must be even, got {bk}"
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m // bm, k // bk), jnp.int32),
+            jax.ShapeDtypeStruct((m, k // 2), jnp.int8),
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x_t, x_prev)
+
+
+# ---------------------------------------------------------------- hold maps
+def hold_maps(classes: jax.Array, gn: int, *, w_transposed: bool = False):
+    """Prefetched block-index tables for the fused matmul's index maps.
+
+    For each operand and each grid step t of the (i, j, kk) traversal
+    (kk innermost), the table holds the block index to present:
+
+        needed(t)      -> the tile's real block index
+        not needed(t)  -> the index held at t-1 (Pallas revisit elision
+                          then issues no copy); before the first needed
+                          step, the FIRST needed block (a harmless
+                          prefetch that also collapses to one copy).
+
+    Needs per operand: dc — class >= 1; dh — class 2 only; W — class >= 1.
+    Returns (kd, kh, kw), each (gm*gn*gk, 2) int32, flattened in
+    traversal order so the index maps do one SMEM lookup. jit-traceable
+    (pure cummax/gather); ``kernels.dma_model`` replays this exact
+    function to count copies."""
+    gm, gk = classes.shape
+    shape = (gm, gn, gk)
+    cls3 = jnp.broadcast_to(classes[:, None, :], shape)
+    ii = jnp.broadcast_to(jnp.arange(gm)[:, None, None], shape)
+    jj = jnp.broadcast_to(jnp.arange(gn)[None, :, None], shape)
+    kk = jnp.broadcast_to(jnp.arange(gk)[None, None, :], shape)
+
+    def hold(need, real):
+        flat_need = need.reshape(-1)
+        flat_real = real.reshape(-1, 2)
+        t = jnp.arange(flat_need.shape[0])
+        last = jax.lax.cummax(jnp.where(flat_need, t, -1))
+        first = jnp.argmax(flat_need)  # 0 when nothing is ever needed
+        idx = jnp.where(last >= 0, last, first)
+        return flat_real[idx].astype(jnp.int32)
+
+    d_real = jnp.stack([ii, kk], axis=-1)
+    w_real = jnp.stack([jj, kk] if w_transposed else [kk, jj], axis=-1)
+    kd = hold(cls3 >= 1, d_real)
+    kh = hold(cls3 == 2, d_real)
+    kw = hold(cls3 >= 1, w_real)
+    return kd, kh, kw
+
+
+# -------------------------------------------------------------- fused matmul
+def _w_lane_halves(w, *, w_t: bool):
+    """Weight tile -> (even, odd) K-lane halves matching the dc planes."""
+    if w_t:
+        bn, bk = w.shape
+        pairs = w.reshape(bn, bk // 2, 2)
+        return pairs[:, :, 0], pairs[:, :, 1]
+    bk, bn = w.shape
+    pairs = w.reshape(bk // 2, 2, bn)
+    return pairs[:, 0, :], pairs[:, 1, :]
+
+
+def _half_dot(d_half, w_half, *, w_t: bool):
+    if w_t:
+        return jax.lax.dot_general(
+            d_half, w_half, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    return jax.lax.dot(d_half, w_half, preferred_element_type=jnp.int32)
+
+
+def _fused_kernel(cls_ref, kd_ref, kh_ref, kw_ref, w_ref, dc_ref, dh_ref,
+                  o_ref, acc_ref, *, n_k: int, w_t: bool):
+    """Class-gated accumulation from the encoded Δ stream: class-1 tiles
+    dot the nibble planes directly, class-2 tiles reconstruct
+    Δ = lo + (dh << 4) lane-wise first. The accumulator always seeds from
+    zero (y_prev is the caller's epilogue), and every block that reaches
+    this body through a *held* index is provably unread (the class
+    predicate that made it held also gates the branch that would read
+    it)."""
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tile_cls = cls_ref[i, kk]
+
+    @pl.when(tile_cls == 2)
+    def _accum_full():
+        lo, hi = unpack_int4_lanes(dc_ref[...])  # even/odd K lane planes
+        dh = dh_ref[...].astype(jnp.int32)
+        bm, bk = dh.shape
+        h_pairs = dh.reshape(bm, bk // 2, 2)
+        d_even = lo + (h_pairs[:, :, 0] << 4)
+        d_odd = hi + (h_pairs[:, :, 1] << 4)
+        w_even, w_odd = _w_lane_halves(w_ref[...].astype(jnp.int32), w_t=w_t)
+        acc_ref[...] += (_half_dot(d_even, w_even, w_t=w_t)
+                         + _half_dot(d_odd, w_odd, w_t=w_t))
+
+    @pl.when(tile_cls == 1)
+    def _accum_low():
+        lo, hi = unpack_int4_lanes(dc_ref[...])  # class-1: the nibbles ARE Δ
+        w_even, w_odd = _w_lane_halves(w_ref[...].astype(jnp.int32), w_t=w_t)
+        acc_ref[...] += (_half_dot(lo, w_even, w_t=w_t)
+                         + _half_dot(hi, w_odd, w_t=w_t))
+
+    @pl.when(kk == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "w_transposed"))
+def ditto_fused_matmul(
+    w_q: jax.Array,
+    dcache: jax.Array,
+    dhigh: jax.Array,
+    classes: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+    w_transposed: bool = False,
+) -> jax.Array:
+    """(x_t - x_prev) @ W from the encoded Δ stream, single fused pass —
+    returns the bare (M, N) int32 diff contribution (add y_prev as an
+    epilogue if you have one).
+
+    w_q: (K,N) int8 — (N,K) with ``w_transposed``; dcache: (M, K/2) int8,
+    dhigh: (M, K) int8 and classes: (M/bm, K/bk) int32, all from
+    ``diff_encode_fused``. Class-gated exactly like ``ditto_diff_matmul``
+    but raw activations are not operands at all, and the
+    scalar-prefetched hold maps remap every unneeded block to the
+    pipeline-resident one, so skipped tiles move no data. The Δ-cache is
+    always the class-1 execution format here (that is the point of the
+    layout); ``low_bits`` does not change this kernel — it keeps selecting
+    the two-pass branch split and the cost-model pricing."""
+    interpret = resolve_interpret(interpret)
+    m, k = dhigh.shape
+    n, k2 = w_q.shape if w_transposed else w_q.shape[::-1]
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert dcache.shape == (m, k // 2), (dcache.shape, (m, k // 2))
+    gm, gk = m // bm, k // bk
+    assert classes.shape == (gm, gk), (classes.shape, (gm, gk))
+    assert bk % 2 == 0, f"the Δ-cache pairs K lanes: bk must be even, got {bk}"
+    gn = n // bn
+    n_k = gk
+    kd, kh, kw = hold_maps(classes, gn, w_transposed=w_transposed)
+
+    def t_of(i, j, kk):
+        return (i * gn + j) * gk + kk
+
+    def d_map(i, j, kk, cls, kd, kh, kw):
+        t = t_of(i, j, kk)
+        return kd[t, 0], kd[t, 1]
+
+    def h_map(i, j, kk, cls, kd, kh, kw):
+        t = t_of(i, j, kk)
+        return kh[t, 0], kh[t, 1]
+
+    def w_map(i, j, kk, cls, kd, kh, kw):
+        t = t_of(i, j, kk)
+        return kw[t, 0], kw[t, 1]
+
+    w_block = (bn, bk) if w_transposed else (bk, bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(gm, gn, n_k),
+        in_specs=[
+            pl.BlockSpec(w_block, w_map),
+            pl.BlockSpec((bm, bk // 2), d_map),
+            pl.BlockSpec((bm, bk), h_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, cls, kd, kh, kw: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, n_k=n_k, w_t=w_transposed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(classes, kd, kh, kw, w_q, dcache, dhigh)

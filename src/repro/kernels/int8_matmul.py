@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .common import resolve_interpret
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -62,8 +64,7 @@ def int8_matmul(
 ) -> jax.Array:
     """interpret=None auto-detects: native lowering on TPU, interpreter
     (bit-identical math) everywhere else."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (x_q.shape, w_q.shape)

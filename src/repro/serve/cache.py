@@ -9,13 +9,15 @@ the model config, the frozen per-layer modes and the kernel config.
 This module adds the cross-batch memory: ONE ``jax.jit``-wrapped step per
 
     RunnerKey = (model-cfg signature, layer-mode signature,
-                 kernel block / interpret / collect_stats / low_bits,
+                 kernel block / interpret / collect_stats / low_bits / fused,
                  extra — e.g. (denoise steps, padded batch bucket))
 
-``low_bits`` is a first-class key component: the int4 low-tile path
-(``low_bits=4``) lowers a different kernel body than the int8 path, so
-two serve configs differing only in ``low_bits`` must never share a
-trace — even though their outputs are bit-identical.
+``low_bits`` and ``fused`` are first-class key components: the int4
+low-tile path (``low_bits=4``) and the single-pass fused kernel
+(``fused=True``, scalar-prefetch DMA skipping) each lower a different
+kernel body than the two-pass int8 path, so serve configs differing in
+either knob must never share a trace — even though their outputs are
+bit-identical.
 
 shared by every subsequent batch that maps to the same key (and shapes —
 which the batch bucket pins). The cache counts actual Python traces via a
@@ -31,12 +33,9 @@ from typing import Any, Callable
 import jax
 
 from ..core.ditto import dit_runner
-
-
-def _resolve_interpret(interpret: bool | None) -> bool:
-    # mirror the kernels' auto-detection so None and its resolved value
-    # cannot create two cache entries for the same lowering
-    return jax.default_backend() != "tpu" if interpret is None else interpret
+# the kernels' own auto-detection, so None and its resolved value cannot
+# create two cache entries for the same lowering
+from ..kernels.common import resolve_interpret as _resolve_interpret
 
 
 def cfg_signature(cfg) -> tuple:
@@ -54,6 +53,7 @@ class RunnerKey:
     interpret: bool
     collect_stats: bool
     low_bits: int = 8
+    fused: bool = False
     extra: tuple = ()
 
 
@@ -81,26 +81,28 @@ class CompiledRunnerCache:
     # ------------------------------------------------------------------ api
     def key_for(self, cfg, modes: dict[str, str] | tuple, *, block: int = 128,
                 interpret: bool | None = None, collect_stats: bool = True,
-                low_bits: int = 8, extra: tuple = ()) -> RunnerKey:
+                low_bits: int = 8, fused: bool = False, extra: tuple = ()) -> RunnerKey:
         mode_sig = tuple(sorted(modes.items())) if isinstance(modes, dict) else tuple(modes)
         return RunnerKey(cfg_signature(cfg), mode_sig, block,
-                         _resolve_interpret(interpret), collect_stats, low_bits,
-                         tuple(extra))
+                         _resolve_interpret(interpret), collect_stats,
+                         low_bits=low_bits, fused=fused, extra=tuple(extra))
 
     def step_for(self, cfg, modes: dict[str, str], *, block: int = 128,
                  interpret: bool | None = None, collect_stats: bool = True,
-                 low_bits: int = 8, extra: tuple = ()) -> Callable:
+                 low_bits: int = 8, fused: bool = False, extra: tuple = ()) -> Callable:
         """Jitted ``step(dparams, mparams, state, latents, t, labels)`` for
         the key; traced at most once per (key, input shapes)."""
         key = self.key_for(cfg, modes, block=block, interpret=interpret,
-                           collect_stats=collect_stats, low_bits=low_bits, extra=extra)
+                           collect_stats=collect_stats, low_bits=low_bits,
+                           fused=fused, extra=extra)
         with self._lock:
             if key in self._steps:
                 self.hits += 1
                 return self._steps[key]
             self.misses += 1
             raw = dit_runner.make_step_fn(cfg, modes, block=block, interpret=interpret,
-                                          collect_stats=collect_stats, low_bits=low_bits)
+                                          collect_stats=collect_stats, low_bits=low_bits,
+                                          fused=fused)
 
             def counting_step(*args):
                 # executes only while jax is TRACING (jit caches the jaxpr

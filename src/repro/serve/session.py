@@ -66,14 +66,16 @@ class ServeSession:
     shared between sessions serving the same model (e.g. one per request
     thread) — the runner key includes the model-config signature, so
     distinct models never collide. ``low_bits=4`` serves the packed-int4
-    low-tile path (bit-identical samples); it is part of the runner key,
-    so int4 and int8 sessions sharing one cache never share a trace.
+    low-tile path and ``fused=True`` the single-pass fused kernel
+    (both bit-identical samples); each is part of the runner key, so
+    sessions differing in either knob never share a trace even when they
+    share one cache.
     """
 
     def __init__(self, params, cfg, sched, *, steps: int, sampler: str = "ddim",
                  policy: str = "defo", compiled: bool = True,
                  interpret: bool | None = None, collect_stats: bool = True,
-                 block: int = 128, low_bits: int = 8,
+                 block: int = 128, low_bits: int = 8, fused: bool = False,
                  max_batch: int = DEFAULT_MAX_BATCH,
                  cache: CompiledRunnerCache | None = None):
         self.params = params
@@ -87,6 +89,7 @@ class ServeSession:
         self.collect_stats = collect_stats
         self.block = block
         self.low_bits = low_bits
+        self.fused = fused
         self.max_batch = max_batch
         self.cache = cache if cache is not None else CompiledRunnerCache()
         self.batches_served = 0
@@ -119,7 +122,7 @@ class ServeSession:
             self.params, self.cfg, self.sched, x, labels, steps=self.steps,
             sampler=self.sampler, policy=self.policy, compiled=self.compiled,
             interpret=self.interpret, collect_stats=self.collect_stats,
-            block=self.block, low_bits=self.low_bits,
+            block=self.block, low_bits=self.low_bits, fused=self.fused,
             runner_cache=self.cache, bucket=bucket,
         )
         jax.block_until_ready(sample)

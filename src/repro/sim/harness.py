@@ -42,7 +42,7 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
 def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
                   sampler: str = "ddim", policy: str = "defo", compiled: bool = True,
                   interpret: bool | None = None, collect_stats: bool = True,
-                  block: int = 128, low_bits: int = 8,
+                  block: int = 128, low_bits: int = 8, fused: bool = False,
                   runner_cache=None, bucket: int | None = None):
     """The deployment pass: eager calibration (+ the Defo mode decision
     after step 2), then the remaining steps through the jit-compiled Pallas
@@ -66,8 +66,11 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int
 
     ``low_bits=4`` executes class-1 diff tiles through the packed-int4
     kernel branch — bit-identical samples, separate runner-cache key;
-    ``block`` sets the kernel tile edge (smaller blocks = finer class
-    maps, more skippable/narrowable tiles at toy dims)."""
+    ``fused=True`` runs diff layers through the single-pass fused kernel
+    (scalar-prefetch DMA skipping, y_prev epilogue) — also bit-identical,
+    also a separate key; ``block`` sets the kernel tile edge (smaller
+    blocks = finer class maps, more skippable/narrowable tiles at toy
+    dims)."""
     true_b = x_T.shape[0]
     if bucket is not None and bucket != true_b:
         from ..serve import bucketing  # function-level: repro.serve imports sim.harness
@@ -76,7 +79,7 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int
     eng = DittoEngine(policy=policy, collect_oracle=collect_stats)
     fn = make_denoise_fn(params, cfg, eng, compiled=compiled, interpret=interpret,
                          collect_stats=collect_stats, block=block, low_bits=low_bits,
-                         runner_cache=runner_cache,
+                         fused=fused, runner_cache=runner_cache,
                          cache_extra=(steps, x_T.shape[0]))
     eng.begin_sample()
     sample = diffusion.SAMPLERS[sampler](sched, fn, x_T, steps=steps, labels=labels)

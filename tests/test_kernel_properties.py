@@ -1,6 +1,9 @@
 """Property tests for the kernel stack: Encoding-Unit class boundaries,
-128-pad invariance, the int4 pack/unpack contract, and the int8/int4
-branch equivalence matrix of ``ditto_diff_matmul`` against the jnp oracle.
+128-pad invariance, the int4 pack/unpack contract, the int8/int4 branch
+equivalence matrix of ``ditto_diff_matmul`` against the jnp oracle, and
+the fused-vs-two-pass equivalence matrix of the single-pass fused kernel
+(``kernels.fused_step``) plus its tile-DMA skip guarantees
+(``kernels.dma_model``).
 
 Every property is implemented as a plain ``_check_*`` function and driven
 two ways: a deterministic seeded sweep that ALWAYS runs (this container
@@ -15,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import dma_model, ops, ref
 from repro.kernels.diff_encode import LOW_BIT_MAX, diff_encode
+from repro.kernels.fused_step import diff_encode_fused
 from repro.kernels.int4_pack import pack_int4, unpack_int4, unpack_int4_lanes
 
 try:
@@ -106,6 +110,24 @@ def _check_branch_equivalence(seed: int, m: int, k: int, n: int, interpret):
     np.testing.assert_array_equal(np.asarray(cls8), np.asarray(cls4))
 
 
+def _check_fused_equivalence(seed: int, m: int, k: int, n: int, low_bits: int,
+                             with_yp: bool, interpret=True):
+    """The fused single-pass kernel == the two-pass oracle, bit-for-bit,
+    for the given shape x low_bits x y_prev-presence cell."""
+    xt, xp, w, yp = _mixed_class_operands(seed, m, k, n)
+    y_prev = yp if with_yp else None
+    y_tp, cls_tp = ops.ditto_linear_step(xt, xp, w, y_prev, interpret=interpret,
+                                         low_bits=low_bits, fused=False)
+    y_fu, cls_fu = ops.ditto_linear_step(xt, xp, w, y_prev, interpret=interpret,
+                                         low_bits=low_bits, fused=True)
+    want = np.asarray(ref.ditto_diff_matmul_ref(xt, xp, w, yp))
+    if not with_yp:
+        want = want - np.asarray(yp)
+    np.testing.assert_array_equal(np.asarray(y_tp), want)
+    np.testing.assert_array_equal(np.asarray(y_fu), want)
+    np.testing.assert_array_equal(np.asarray(cls_fu), np.asarray(cls_tp))
+
+
 # ----------------------------------------------- deterministic sweeps (always)
 @pytest.mark.parametrize("target,expected", [(0, 0), (LOW_BIT_MAX, 1), (LOW_BIT_MAX + 1, 2)])
 @pytest.mark.parametrize("seed", [0, 1])
@@ -160,6 +182,144 @@ def test_branch_equivalence_matrix(m, k, n, interpret):
     _check_branch_equivalence(17, m, k, n, interpret)
 
 
+@pytest.mark.parametrize("m,k,n,low_bits,with_yp", [
+    (96, 128, 160, 8, True), (160, 96, 128, 4, False), (128, 160, 96, 4, True)])
+def test_fused_equivalence_fast(m, k, n, low_bits, with_yp):
+    """3-cell diagonal of the fused matrix — stays in the fast suite."""
+    _check_fused_equivalence(13, m, k, n, low_bits, with_yp)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("with_yp", [True, False])
+@pytest.mark.parametrize("low_bits", [8, 4])
+@pytest.mark.parametrize("m", _EDGE)
+@pytest.mark.parametrize("k", _EDGE)
+@pytest.mark.parametrize("n", _EDGE)
+def test_fused_equivalence_matrix(m, k, n, low_bits, with_yp):
+    """Full ragged-shape matrix x low_bits x y_prev presence: the fused
+    single-pass kernel is bit-identical to the two-pass oracle in every
+    cell (the acceptance matrix of the fused-step PR)."""
+    _check_fused_equivalence(19, m, k, n, low_bits, with_yp)
+
+
+def test_fused_w_transposed():
+    """The (N, K) weight layout (transpose folded into the index map)
+    matches the materialized-transpose result for both flows."""
+    xt, xp, w, yp = _mixed_class_operands(23, 160, 128, 96)
+    want, _ = ops.ditto_linear_step(xt, xp, w, yp)
+    wt = jnp.asarray(np.ascontiguousarray(np.asarray(w).T))
+    for fused in (False, True):
+        got, _ = ops.ditto_linear_step(xt, xp, wt, yp, w_transposed=True,
+                                       fused=fused)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_attention_delta_no_materialized_state():
+    """attention_delta (no zeros y_prev, transpose in the index map) is
+    exact for both flows, including a ragged non-square token count."""
+    rng = np.random.RandomState(29)
+    mq, nk, d = 96, 160, 64
+    qt = rng.randint(-119, 120, size=(mq, d)).astype(np.int8)
+    qp = np.clip(qt + rng.randint(-9, 10, size=(mq, d)), -127, 127).astype(np.int8)
+    kt = rng.randint(-119, 120, size=(nk, d)).astype(np.int8)
+    kp = np.clip(kt + rng.randint(-90, 91, size=(nk, d)), -127, 127).astype(np.int8)
+    sp = rng.randint(-(2 ** 20), 2 ** 20, size=(mq, nk)).astype(np.int32)
+    want = (sp
+            + qt.astype(np.int32) @ (kt.astype(np.int32) - kp.astype(np.int32)).T
+            + (qt.astype(np.int32) - qp.astype(np.int32)) @ kp.astype(np.int32).T)
+    for fused in (False, True):
+        for lb in (8, 4):
+            s, (cls_dk, cls_dq) = ops.attention_delta(
+                jnp.asarray(qt), jnp.asarray(qp), jnp.asarray(kt), jnp.asarray(kp),
+                jnp.asarray(sp), low_bits=lb, fused=fused)
+            np.testing.assert_array_equal(np.asarray(s), want)
+            assert np.asarray(cls_dk).shape[0] == -(-nk // 128)
+            assert np.asarray(cls_dq).shape[0] == -(-mq // 128)
+
+
+# ------------------------------------------------------ tile-DMA skip model
+def test_fused_dma_all_zero_issues_no_copy():
+    """All-zero Δ: under revisit elision the fused kernel issues NO
+    per-tile copy of any operand — only the single pipeline-resident
+    startup block per operand — while the two-pass kernel re-fetches
+    every activation block for every output column."""
+    gm, gn, gk = 2, 9, 9
+    cls = np.zeros((gm, gk), np.int32)
+    fu = dma_model.fused_tile_dma(cls, gn)
+    for op in ("dc", "dh", "w"):
+        assert fu[op]["by_class"] == [0, 0, 0], (op, fu[op])
+        assert fu[op]["copies"] == 1  # the startup fetch only
+    tp = dma_model.two_pass_tile_dma(cls, gn)
+    assert tp["x_t"]["copies"] == gm * gn * gk
+    assert tp["x_prev"]["copies"] == gm * gn * gk
+
+
+def test_fused_dma_mixed_attribution():
+    """On a mixed map, copies land only where the class needs the
+    operand: dh moves only into class-2 steps, dc/W only into class>=1
+    steps — zero-class tiles never attract a copy."""
+    rng = np.random.RandomState(31)
+    cls = rng.choice(3, size=(3, 5), p=(0.4, 0.35, 0.25)).astype(np.int32)
+    cls[0, 0] = 0  # ensure the traversal STARTS on a skipped tile
+    fu = dma_model.fused_tile_dma(cls, gn=4)
+    assert fu["dc"]["by_class"][0] == 0
+    assert fu["dh"]["by_class"][0] == 0 and fu["dh"]["by_class"][1] == 0
+    assert fu["w"]["by_class"][0] == 0
+    # and the model prices the realistic regime as a bandwidth win
+    bytes_model = dma_model.model_hbm_bytes(cls, 4, bm=128, bn=128, bk=128)
+    assert bytes_model["fused"] < bytes_model["two_pass"]
+
+
+def test_fused_dma_interpret_execution_matches_model_claim():
+    """Execution check behind the model: an all-zero-Δ fused step returns
+    exactly y_prev (nothing read from the Δ stream can change that) and
+    classifies every tile 0."""
+    rng = np.random.RandomState(37)
+    x = jnp.asarray(rng.randint(-119, 120, size=(256, 256)).astype(np.int8))
+    yp = jnp.asarray(rng.randint(-(2 ** 20), 2 ** 20, size=(256, 384)).astype(np.int32))
+    w = jnp.asarray(rng.randint(-127, 128, size=(256, 384)).astype(np.int8))
+    y, cls = ops.ditto_linear_step(x, x, w, yp, fused=True, interpret=True)
+    assert (np.asarray(cls) == 0).all()
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yp))
+
+
+def test_encode_fused_delta_split_exact():
+    """The Δ-cache planes reconstruct every Δ exactly: lo + (dh << 4) == Δ
+    on class-2 tiles (extreme magnitudes included), and the nibble plane
+    alone IS Δ on class-1 tiles."""
+    rng = np.random.RandomState(41)
+    xp = np.full((128, 256), -119, np.int8)
+    xt = np.full((128, 256), 119, np.int8)  # Δ = +238 everywhere: class 2
+    xt[:, 128:] = np.clip(xp[:, 128:].astype(np.int16)
+                          + rng.randint(1, LOW_BIT_MAX + 1, size=(128, 128)),
+                          -127, 127).astype(np.int8)  # class 1 tile
+    cls, dc, dh = diff_encode_fused(jnp.asarray(xt), jnp.asarray(xp))
+    cls, dc, dh = np.asarray(cls), np.asarray(dc), np.asarray(dh)
+    assert cls[0, 0] == 2 and cls[0, 1] == 1
+    d = xt.astype(np.int32) - xp.astype(np.int32)
+    lo = np.asarray(unpack_int4(jnp.asarray(dc)))
+    np.testing.assert_array_equal(lo[:, :128] + (dh[:, :128].astype(np.int32) << 4),
+                                  d[:, :128])
+    np.testing.assert_array_equal(lo[:, 128:], d[:, 128:])  # class-1: nibbles ARE Δ
+
+
+# ----------------------------------------------------------- low_bits guard
+def test_low_bits_validated_at_ops_boundary():
+    """Anything but 4 or 8 raises a clear ValueError before any kernel
+    runs — in every ops entry point that accepts the knob."""
+    rng = np.random.RandomState(43)
+    x = jnp.asarray(rng.randint(-5, 6, size=(8, 8)).astype(np.int8))
+    w = jnp.asarray(rng.randint(-5, 6, size=(8, 8)).astype(np.int8))
+    s = jnp.zeros((8, 8), jnp.int32)
+    for bad in (2, 5, 16, 0):
+        with pytest.raises(ValueError, match="low_bits"):
+            ops.ditto_linear_step(x, x, w, None, low_bits=bad)
+        with pytest.raises(ValueError, match="low_bits"):
+            ops.int8_act_matmul(x, w, low_bits=bad)
+        with pytest.raises(ValueError, match="low_bits"):
+            ops.attention_delta(x, x, w, w, s, low_bits=bad)
+
+
 def test_int4_all_low_tiles():
     """All-class-1 grid: every tile takes the packed branch; still exact."""
     rng = np.random.RandomState(5)
@@ -211,3 +371,10 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=5, deadline=None)
     def test_hyp_branch_equivalence(seed, m, k, n):
         _check_branch_equivalence(seed, m, k, n, interpret=True)
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(_EDGE),
+           st.sampled_from(_EDGE), st.sampled_from(_EDGE),
+           st.sampled_from([8, 4]), st.booleans())
+    @settings(max_examples=5, deadline=None)
+    def test_hyp_fused_equivalence(seed, m, k, n, low_bits, with_yp):
+        _check_fused_equivalence(seed, m, k, n, low_bits, with_yp)
