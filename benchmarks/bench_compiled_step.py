@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 import common
 from repro.core import diffusion
-from repro.core.ditto import DittoEngine, make_denoise_fn
+from repro.core.ditto import DittoEngine, DittoPlan, make_denoise_fn
 
 # enough steps that adjacent-step similarity is high and Defo actually
 # freezes layers into diff mode (few steps = big temporal gaps = act wins)
@@ -43,7 +43,9 @@ def _timed(fn):
 def _run_once(params, dcfg, sched, x, labels, *, compiled: bool, policy: str = "defo",
               collect_stats: bool = True):
     eng = DittoEngine(policy=policy)
-    fn = make_denoise_fn(params, dcfg, eng, compiled=compiled, collect_stats=collect_stats)
+    plan = DittoPlan(steps=STEPS, policy=policy, compiled=compiled,
+                     collect_stats=collect_stats)
+    fn = make_denoise_fn(params, dcfg, eng, plan)
     tfn, times = _timed(fn)
     eng.begin_sample()
     diffusion.SAMPLERS["ddim"](sched, tfn, x, steps=STEPS, labels=labels)

@@ -35,7 +35,7 @@ import numpy as np
 
 import common
 from repro.kernels import LOW_BIT_MAX, dma_model, ops
-from repro.serve import CompiledRunnerCache
+from repro.serve import CompiledRunnerCache, DittoPlan
 from repro.sim import harness
 
 # DiT-block-like step: 256 tokens x 1152 features (grid 2 x 9 x 9 at 128s)
@@ -151,11 +151,12 @@ def _per_step_rows():
 
 
 def _serve_fn(params, dcfg, sched, x, labels, cache, *, fused: bool):
+    plan = DittoPlan(steps=SERVE_STEPS, sampler="ddim", policy="diff",
+                     block=SERVE_BLOCK, low_bits=4, fused=fused)
+
     def go():
-        _, sample, _ = harness.serve_records(
-            params, dcfg, sched, x, labels, steps=SERVE_STEPS, sampler="ddim",
-            policy="diff", compiled=True, block=SERVE_BLOCK, low_bits=4,
-            fused=fused, runner_cache=cache)
+        _, sample, _ = harness.serve_records(params, dcfg, sched, x, labels, plan,
+                                             runner_cache=cache)
         return sample
 
     return go

@@ -31,7 +31,7 @@ import numpy as np
 
 import common
 from repro.kernels import LOW_BIT_MAX, diff_encode, ditto_diff_matmul, ref
-from repro.serve import CompiledRunnerCache
+from repro.serve import CompiledRunnerCache, DittoPlan
 from repro.sim import harness
 
 STEPS = 12
@@ -49,12 +49,12 @@ def _serve(params, dcfg, sched, x, labels, *, low_bits: int):
     recorded wall-clock is the steady serving regime, not compile time.
     """
     cache = CompiledRunnerCache()
+    plan = DittoPlan(steps=STEPS, sampler="ddim", policy="diff", block=BLOCK,
+                     low_bits=low_bits)
 
     def go():
-        return harness.serve_records(
-            params, dcfg, sched, x, labels, steps=STEPS, sampler="ddim",
-            policy="diff", compiled=True, block=BLOCK, low_bits=low_bits,
-            runner_cache=cache)
+        return harness.serve_records(params, dcfg, sched, x, labels, plan,
+                                     runner_cache=cache)
 
     go()  # warm: pays XLA trace + compile for this low_bits' kernel body
     assert cache.n_traces >= 1

@@ -1,0 +1,95 @@
+"""Continuous-batching benchmark: coalesced vs naive ragged request stream.
+
+A ragged stream of small requests (mostly batch-3 under max_batch=4 — the
+worst case the scheduler exists for) is served twice on the dit* model:
+
+  naive     : each request is an independent ``ServeSession.serve()`` call
+              — every remainder chunk pads up to its own power-of-two
+              bucket, so the stream wastes a pad row on most dispatches
+              and calibrates eagerly once per request;
+  coalesced : the same submissions through a ``ServeScheduler`` — queued
+              rows pack into FULL buckets across request boundaries, so
+              only the final ragged tail pays padding, and eager
+              calibration runs once per dispatch instead of once per
+              request.
+
+Per-request samples are asserted BIT-IDENTICAL between the two regimes
+(per-sample calibration makes batch composition invisible — the invariant
+tests/test_scheduler.py property-tests). Reported: pad rows and pad-waste
+ratio (pad / dispatched rows) for both regimes, dispatch and XLA-trace
+counts, and total wall-clock. Results land in benchmarks/BENCH_serve.json
+(common.record_perf).
+
+    PYTHONPATH=src python benchmarks/bench_scheduler.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import common
+from repro.serve import DittoPlan, ServeScheduler, ServeSession
+
+STEPS = 8
+MAX_BATCH = 4
+# ragged on purpose: batch-3 requests waste a quarter of every bucket-4
+# dispatch when served independently
+SIZES = [3, 3, 2, 3, 1, 3, 2, 3]
+
+
+def run():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    plan = DittoPlan(steps=STEPS, sampler=bm.sampler, collect_stats=False,
+                     max_batch=MAX_BATCH)
+    requests = [common.sample_inputs(bm, batch=b, seed=200 + i)
+                for i, b in enumerate(SIZES)]
+
+    # ---- naive: one serve() per request, each pads its own remainder ----
+    sess = ServeSession(params, dcfg, sched, plan)
+    t0 = time.monotonic()
+    naive = [sess.serve(x, labels) for x, labels in requests]
+    naive_s = time.monotonic() - t0
+    naive_pad = sum(r.pad_rows for r in naive)
+    naive_rows = sum(sum(c.bucket for c in r.chunks) for r in naive)
+
+    # ---- coalesced: same submissions through the scheduler --------------
+    s = ServeScheduler(params, dcfg, sched, plan)
+    t0 = time.monotonic()
+    tickets = [s.submit(x, labels) for x, labels in requests]
+    s.flush()
+    coalesced_s = time.monotonic() - t0
+    st = s.stats()
+    dispatched = st["dispatched_rows"] + s.pad_rows
+
+    # bit-identity: every ticket's rows == its independent serve() rows
+    for t, r in zip(tickets, naive):
+        np.testing.assert_array_equal(np.asarray(t.result()), np.asarray(r.sample))
+
+    rows = [
+        ("bench_scheduler/requests", 0, len(SIZES)),
+        ("bench_scheduler/request_rows", 0, sum(SIZES)),
+        ("bench_scheduler/naive_pad_rows", 0, naive_pad),
+        ("bench_scheduler/coalesced_pad_rows", 0, s.pad_rows),
+        ("bench_scheduler/naive_pad_frac", 0, round(naive_pad / naive_rows, 3)),
+        ("bench_scheduler/coalesced_pad_frac", 0,
+         round(s.pad_rows / max(dispatched, 1), 3)),
+        ("bench_scheduler/naive_dispatches", 0, sum(len(r.chunks) for r in naive)),
+        ("bench_scheduler/coalesced_dispatches", 0, st["dispatches"]),
+        ("bench_scheduler/naive_traces", 0, sess.cache.n_traces),
+        ("bench_scheduler/coalesced_traces", 0, st["traces"]),
+        ("bench_scheduler/naive_total_s", round(naive_s * 1e6 / len(SIZES), 1),
+         round(naive_s, 2)),
+        ("bench_scheduler/coalesced_total_s", round(coalesced_s * 1e6 / len(SIZES), 1),
+         round(coalesced_s, 2)),
+        ("bench_scheduler/speedup_total", 0, round(naive_s / coalesced_s, 2)),
+        ("bench_scheduler/bitidentical_samples", 0, True),
+    ]
+    common.record_perf("bench_scheduler", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

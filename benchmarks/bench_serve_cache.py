@@ -26,7 +26,7 @@ import time
 import jax
 
 import common
-from repro.serve import ServeSession
+from repro.serve import DittoPlan, ServeSession
 from repro.sim import harness
 
 STEPS = 8
@@ -43,18 +43,17 @@ def run():
         x, labels = common.sample_inputs(bm, batch=b, seed=100 + i)
         requests.append((x, labels))
 
+    plan = DittoPlan(steps=STEPS, sampler=bm.sampler, collect_stats=False, max_batch=8)
+
     # ---- nocache: fresh compiled runner per batch (one trace per batch) --
     t0 = time.monotonic()
     for x, labels in requests:
-        _, sample, _ = harness.serve_records(params, dcfg, sched, x, labels, steps=STEPS,
-                                             sampler=bm.sampler, compiled=True,
-                                             collect_stats=False)
+        _, sample, _ = harness.serve_records(params, dcfg, sched, x, labels, plan)
         jax.block_until_ready(sample)  # symmetric with ServeSession._serve_chunk
     nocache_s = time.monotonic() - t0
 
     # ---- cached: one session, shared runner cache, bucket padding --------
-    sess = ServeSession(params, dcfg, sched, steps=STEPS, sampler=bm.sampler,
-                        compiled=True, collect_stats=False, max_batch=8)
+    sess = ServeSession(params, dcfg, sched, plan)
     t0 = time.monotonic()
     results = [sess.serve(x, labels) for x, labels in requests]
     cached_s = time.monotonic() - t0

@@ -30,6 +30,7 @@ MODULES = [
     "bench_serve_cache",
     "bench_int4_path",
     "bench_fused_step",
+    "bench_scheduler",
 ]
 
 

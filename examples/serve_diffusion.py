@@ -3,14 +3,16 @@ persistent Ditto serving runtime (the paper's deployment scenario —
 inference acceleration).
 
 A request queue of (n_images, class) jobs is dynamically batched and fed
-to a :class:`repro.serve.ServeSession`; each batch runs the quantized
-DDIM loop with Defo execution-flow optimization: steps 1-2 run the eager
-calibration engine, then the per-layer modes are frozen and the remaining
-steps run through the jit-compiled Pallas path (act layers ->
-int8_matmul, diff layers -> diff_encode + ditto_diff_matmul with
-on-device tile skipping). The session pads ragged batches to power-of-two
-batch buckets and reuses ONE compiled runner per (mode signature, bucket)
-across the whole queue — only the first batch of a bucket pays XLA
+to a :class:`repro.serve.ServeSession` configured by ONE
+:class:`repro.serve.DittoPlan` (the CLI flags below just fill plan
+fields); each batch runs the quantized DDIM loop with Defo execution-flow
+optimization: steps 1-2 run the eager calibration engine, then the
+per-layer modes are frozen and the remaining steps run through the
+jit-compiled Pallas path (act layers -> int8_matmul, diff layers ->
+diff_encode + ditto_diff_matmul with on-device tile skipping). The
+session pads ragged batches to power-of-two batch buckets and reuses ONE
+compiled runner per (mode signature, plan.cache_sig(), bucket) across
+the whole queue — only the first batch of a bucket pays XLA
 trace + compile. Per request we report: wall time, simulated
 Ditto-hardware time, simulated ITC time (the baseline an operator would
 compare against), and the runner-cache hit/trace stats. Fault tolerance:
@@ -38,7 +40,7 @@ from repro import configs
 from repro.core import diffusion
 from repro.data.synthetic import DataCfg, batch_for
 from repro.launch import steps as steps_mod
-from repro.serve import ServeSession
+from repro.serve import DittoPlan, ServeSession
 from repro.sim import harness
 
 
@@ -84,9 +86,13 @@ def main(argv=None):
         print(f"[serve] resuming: {len(done)} requests already served")
     queue = [(i, i % arch.n_classes) for i in range(args.requests) if i not in done]
 
-    sess = ServeSession(params, dcfg, sched, steps=args.steps, compiled=not args.eager,
-                        low_bits=args.low_bits, fused=args.fused,
-                        max_batch=max(args.batch, 1))
+    # ONE DittoPlan is the whole serving configuration: sampling loop,
+    # kernel lowering and serve behavior (the plan is also the runner-cache
+    # trace identity — see repro.serve.cache.RunnerKey)
+    plan = DittoPlan(steps=args.steps, compiled=not args.eager,
+                     low_bits=args.low_bits, fused=args.fused,
+                     max_batch=max(args.batch, 1))
+    sess = ServeSession(params, dcfg, sched, plan)
     while queue:
         batch_reqs, queue = queue[: args.batch], queue[args.batch :]
         rids = [r for r, _ in batch_reqs]
@@ -104,7 +110,8 @@ def main(argv=None):
         modes = dict(s["modes"])
         # records are collected at BUCKET scale (padded rows are replicas),
         # so per-request sim cost divides by the bucket, not the true batch
-        bucket = result.chunks[0].bucket
+        bucket = result.chunks[0].bucket  # None = eager (unbucketed) chunk
+        dispatch_b = bucket or result.chunks[0].batch
         for i, rid in enumerate(rids):
             done[rid] = {
                 "class": int(labels[i]),
@@ -113,8 +120,8 @@ def main(argv=None):
                 "bucket": bucket,
                 "cached_runner": result.traces_delta == 0,
                 "modes": modes,
-                "sim_ditto_ms": res["ditto"]["time_s"] * 1e3 / bucket,
-                "sim_itc_ms": res["itc"]["time_s"] * 1e3 / bucket,
+                "sim_ditto_ms": res["ditto"]["time_s"] * 1e3 / dispatch_b,
+                "sim_itc_ms": res["itc"]["time_s"] * 1e3 / dispatch_b,
                 "speedup": res["itc"]["time_s"] / res["ditto"]["time_s"],
                 "bops_ratio": s["bops"] / s["bops_act"],
             }
@@ -124,7 +131,8 @@ def main(argv=None):
         with open(tmp, "w") as f:
             json.dump(done, f)
         os.replace(tmp, args.log)
-        cache_note = "cached runner" if result.traces_delta == 0 else \
+        cache_note = "eager (no compiled runner)" if bucket is None else \
+            "cached runner" if result.traces_delta == 0 else \
             f"{result.traces_delta} new trace(s)"
         print(f"[serve] batch {rids} (bucket {result.chunks[0].bucket}, {cache_note}): "
               f"wall {wall:.1f}s  "

@@ -3,12 +3,15 @@ from .compiled import CompiledDittoEngine
 from .dit_runner import CompiledDittoDiT, DittoDiT, make_denoise_fn, make_step_fn
 from .engine import DittoEngine, LayerMeta
 from .hwmodel import ALL_HW, CAMBRICON_D, DEFAULT_HW, DIFFY, DITTO_HW, ITC, HwModel
+from .plan import EAGER_PLAN, DittoPlan
 
 __all__ = [
     "bops",
     "classify",
     "defo",
     "quant",
+    "DittoPlan",
+    "EAGER_PLAN",
     "DittoDiT",
     "CompiledDittoDiT",
     "CompiledDittoEngine",

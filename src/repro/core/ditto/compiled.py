@@ -25,6 +25,11 @@ function in which:
         spatial branch computes — via ``int8_matmul``; their row-delta
         statistics are still reduced for the records.
 
+Configuration arrives as ONE :class:`~repro.core.ditto.DittoPlan`
+(``linear_apply(..., plan=plan)``): the kernel lowering knobs it carries
+are the same fields ``RunnerKey`` keys traces by, so an op and its cache
+entry can never disagree about what was lowered.
+
 Token and feature dims are zero-padded to the 128-tile grid inside the
 kernels' ops wrappers; padding is exact in the int32 domain, so the
 compiled pass is bit-identical to the eager engine (property-tested in
@@ -48,9 +53,9 @@ import jax
 import jax.numpy as jnp
 
 from ...kernels import ops
-from ...kernels.common import validate_low_bits
 from . import classify, quant
 from .engine import DittoEngine
+from .plan import UNSET, DittoPlan, plan_from_kwargs
 
 
 def _class_fractions(d: jax.Array) -> tuple:
@@ -84,28 +89,30 @@ def _spatial_fractions(q2: jax.Array) -> tuple:
     return (z * (1 - w0), l * (1 - w0), f * (1 - w0) + w0)
 
 
-def linear_apply(p: dict, mode: str, x: jax.Array, st: dict, *, blk: dict,
-                 collect_stats: bool) -> tuple[jax.Array, dict, dict]:
+def linear_apply(p: dict, mode: str, x: jax.Array, st: dict, *,
+                 plan: DittoPlan) -> tuple[jax.Array, dict, dict]:
     """Pure compiled linear op: params in, state in -> (y fp32, state, aux).
 
     Functional core of :meth:`CompiledDittoEngine.linear`. Everything
     data-dependent — weight q-tensors, calibrated scales, temporal state —
     arrives as arguments rather than closure constants, so one traced step
     function can be REUSED across serve batches (repro.serve's runner
-    cache); only ``mode``/``blk``/``collect_stats`` are trace-static.
+    cache); only ``mode`` and the plan's kernel config are trace-static.
     Bit-identical int32 y_prev to the eager path for every mode.
     """
+    collect_stats = plan.collect_stats
     x2 = x.reshape(-1, x.shape[-1])
     n = p["w_q"].shape[1]
     q_t = quant.quantize(x2, p["x_scale"])
 
     aux: dict = {}
     if mode == "diff":
-        y_i32, classes = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"], **blk)
+        y_i32, classes = ops.ditto_linear_step(q_t, st["x_prev"], p["w_q"], st["y_prev"],
+                                               plan=plan)
         if collect_stats:
             aux["tile_hist"] = _tile_hist(classes)
     else:  # act, and spatial (whose eager branch computes the direct GEMM)
-        y_i32 = ops.int8_act_matmul(q_t, p["w_q"], **blk)
+        y_i32 = ops.int8_act_matmul(q_t, p["w_q"], plan=plan)
     if collect_stats:
         # executed-mode stats for pricing this step, plus candidate
         # temporal/spatial fractions for every layer so the simulator
@@ -127,7 +134,7 @@ def linear_apply(p: dict, mode: str, x: jax.Array, st: dict, *, blk: dict,
 
 
 def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
-                    blk: dict, collect_stats: bool) -> tuple[jax.Array, dict, dict]:
+                    plan: DittoPlan) -> tuple[jax.Array, dict, dict]:
     """Pure compiled attention matmul (a @ b^T per leading-dim element).
 
     Functional core of :meth:`CompiledDittoEngine.attention_matmul`: diff
@@ -136,6 +143,7 @@ def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
     (batch x heads) leading dim keeps one kernel trace. Params/state are
     arguments so the trace is shareable across batches.
     """
+    collect_stats = plan.collect_stats
     lead = a.shape[:-2]
     m, d_ = a.shape[-2], a.shape[-1]
     n = b.shape[-2]
@@ -148,7 +156,8 @@ def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
     if mode == "diff":
         def body(c, ins):
             qa_i, qb_i, ap_i, bp_i, yp_i = ins
-            y_i, (cls_dk, cls_dq) = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i, **blk)
+            y_i, (cls_dk, cls_dq) = ops.attention_delta(qa_i, ap_i, qb_i, bp_i, yp_i,
+                                                        plan=plan)
             if collect_stats:  # trace-static, mirrors the linear path
                 return c, (y_i, _tile_hist(cls_dk) + _tile_hist(cls_dq))
             return c, y_i
@@ -162,7 +171,7 @@ def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
     else:
         def body(c, ins):
             qa_i, qb_i = ins
-            return c, ops.int8_act_matmul(qa_i, qb_i.T, **blk)
+            return c, ops.int8_act_matmul(qa_i, qb_i.T, plan=plan)
 
         _, y_i32 = jax.lax.scan(body, 0, (qa, qb))
     if collect_stats:
@@ -181,21 +190,20 @@ class CompiledDittoEngine:
     eager engine. All methods are pure (state in, state out) and
     jit-traceable; mode selection happens at trace time."""
 
-    def __init__(self, engine: DittoEngine, *, interpret: bool | None = None,
-                 block: int = 128, collect_stats: bool = True, low_bits: int = 8,
-                 fused: bool = False):
+    def __init__(self, engine: DittoEngine, *, plan: DittoPlan | None = None,
+                 interpret=UNSET, block=UNSET, collect_stats=UNSET, low_bits=UNSET,
+                 fused=UNSET):
         if not engine.ready_for_compiled():
             raise ValueError(
                 "engine not calibrated: run >= 1 eager step (>= 2 for defo policies, "
                 "whose mode decision lands after the step-2 diff probe) before "
                 f"compiling (step_idx={engine.step_idx}, decided={engine._decided})")
-        validate_low_bits(low_bits)
+        # plan construction validates low_bits/block once for the whole pass
+        self.plan = plan_from_kwargs("core.ditto.CompiledDittoEngine", plan,
+                                     interpret=interpret, block=block,
+                                     collect_stats=collect_stats, low_bits=low_bits,
+                                     fused=fused)
         self.engine = engine
-        self.block = block
-        self.interpret = interpret
-        self.collect_stats = collect_stats
-        self.low_bits = low_bits
-        self.fused = fused
         self.modes = engine.compiled_modes()
         self.meta = engine.meta
         self.params: dict[str, dict] = {}
@@ -218,10 +226,26 @@ class CompiledDittoEngine:
                 state[name] = dict(a_prev=st.a_prev, b_prev=st.b_prev, y_prev=st.y_prev)
         return state
 
-    def _blk(self) -> dict:
-        b = self.block
-        return dict(bm=b, bn=b, bk=b, interpret=self.interpret,
-                    low_bits=self.low_bits, fused=self.fused)
+    # ------------------------------------------------- plan-field accessors
+    @property
+    def block(self) -> int:
+        return self.plan.block
+
+    @property
+    def interpret(self) -> bool | None:
+        return self.plan.interpret
+
+    @property
+    def collect_stats(self) -> bool:
+        return self.plan.collect_stats
+
+    @property
+    def low_bits(self) -> int:
+        return self.plan.low_bits
+
+    @property
+    def fused(self) -> bool:
+        return self.plan.fused
 
     # --------------------------------------------------------------- linear
     def linear(self, name: str, x: jax.Array, st: dict) -> tuple[jax.Array, dict, dict]:
@@ -230,8 +254,7 @@ class CompiledDittoEngine:
         Returns (y fp32, new_state, aux). Bit-identical int32 y_prev to the
         eager path for every mode. Delegates to :func:`linear_apply`.
         """
-        return linear_apply(self.params[name], self.modes[name], x, st,
-                            blk=self._blk(), collect_stats=self.collect_stats)
+        return linear_apply(self.params[name], self.modes[name], x, st, plan=self.plan)
 
     # ------------------------------------------------------------ attention
     def attention_matmul(self, name: str, a: jax.Array, b: jax.Array,
@@ -242,4 +265,4 @@ class CompiledDittoEngine:
         int8_matmul. lax.scan over the batch keeps one kernel trace.
         Delegates to :func:`attention_apply`."""
         return attention_apply(self.params[name], self.modes[name], a, b, st,
-                               blk=self._blk(), collect_stats=self.collect_stats)
+                               plan=self.plan)

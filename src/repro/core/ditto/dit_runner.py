@@ -7,12 +7,14 @@ takes the two engine ops as callables, so the eager calibration pass
 (:class:`CompiledDittoDiT`) share the exact same forward — a structural
 divergence between the two phases is impossible by construction.
 
-``make_denoise_fn(..., compiled=True)`` runs eager steps until the engine
-is calibrated (>= 1 step; for Defo policies, until the step-2 decision),
-then hands the remaining denoising steps to the compiled per-step function
-in which each layer's mode is a static bake-in: act-mode layers hit the
-``int8_matmul`` Pallas kernel, diff-mode layers ``diff_encode`` ->
-``ditto_diff_matmul`` (zero tiles skipped on-device). fp32-mode
+``make_denoise_fn(..., plan)`` with ``plan.compiled=True`` runs eager
+steps until the engine is calibrated (>= 1 step; for Defo policies, until
+the step-2 decision), then hands the remaining denoising steps to the
+compiled per-step function in which each layer's mode is a static
+bake-in: act-mode layers hit the ``int8_matmul`` Pallas kernel, diff-mode
+layers ``diff_encode`` -> ``ditto_diff_matmul`` (zero tiles skipped
+on-device). The plan (one ``repro.core.ditto.DittoPlan``) carries every
+knob; its ``cache_sig()`` is the runner-cache trace identity. fp32-mode
 equivalence against nn.dit.apply is tested in tests/test_ditto_engine.py;
 eager/compiled bit-identity in tests/test_compiled_engine.py.
 """
@@ -30,6 +32,25 @@ from . import compiled as compiled_mod
 from . import defo
 from .compiled import CompiledDittoEngine
 from .engine import DittoEngine, LayerMeta
+from .plan import EAGER_PLAN, UNSET, DittoPlan, is_unset, plan_from_kwargs
+
+
+def _resolve_legacy(site, plan, bucket, cache_extra, *, default=None, **legacy):
+    """Map a deprecated (splatted kwargs + cache_extra) call onto
+    (plan, bucket). The legacy ``cache_extra`` was always the
+    ``(steps, padded batch)`` pair the old harness threaded into the
+    runner-cache key; its components live on the plan (``steps``) and the
+    key's ``bucket`` field now."""
+    steps = UNSET
+    if not is_unset(cache_extra):
+        extra = tuple(cache_extra)
+        if len(extra) == 2:
+            steps, bucket = extra
+        elif extra:  # () was the legacy signature's own default — allowed
+            raise TypeError(
+                f"{site}: legacy cache_extra must be (steps, bucket), got {extra!r}")
+    plan = plan_from_kwargs(site, plan, default=default, steps=steps, **legacy)
+    return plan, bucket
 
 
 def _v(tree, *path):
@@ -128,9 +149,9 @@ class DittoDiT:
                             latents, t, labels)
 
 
-def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128,
-                 interpret: bool | None = None, collect_stats: bool = True,
-                 low_bits: int = 8, fused: bool = False):
+def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], plan: DittoPlan | None = None,
+                 *, block=UNSET, interpret=UNSET, collect_stats=UNSET,
+                 low_bits=UNSET, fused=UNSET):
     """Build the pure per-step function of the compiled execution pass.
 
     Returns ``step(ditto_params, model_params, state, latents, t, labels)
@@ -138,35 +159,36 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], *, block: int = 128
     per-layer Ditto params (weight q-tensors, calibrated scales, biases),
     the fp32 model params for the VPU-side glue, and the temporal state —
     is an ARGUMENT, so the only trace-static inputs are ``cfg``, the
-    frozen per-layer ``modes``, and the kernel config (``block``,
-    ``interpret``, ``low_bits``). Two serve batches that share those
-    statics (and shapes) can therefore share ONE ``jax.jit`` trace: this
-    is what :class:`repro.serve.CompiledRunnerCache` keys on to amortize
-    compilation across the whole request stream. ``low_bits=4`` routes
-    class-1 diff tiles through the packed-int4 kernel branch
-    (bit-identical output, distinct cache key); ``fused=True`` runs diff
+    frozen per-layer ``modes``, and the plan's trace identity
+    (``plan.cache_sig()``: block / interpret / collect_stats / low_bits /
+    fused / steps). Two serve batches that share those statics (and
+    shapes) can therefore share ONE ``jax.jit`` trace: this is what
+    :class:`repro.serve.CompiledRunnerCache` keys on to amortize
+    compilation across the whole request stream. ``plan.low_bits == 4``
+    routes class-1 diff tiles through the packed-int4 kernel branch
+    (bit-identical output, distinct cache key); ``plan.fused`` runs diff
     layers through the single-pass fused kernel with scalar-prefetch DMA
     skipping (bit-identical output, distinct cache key — a different
-    lowering entirely).
+    lowering entirely). The per-knob keywords are a deprecated shim.
     """
+    plan = plan_from_kwargs("core.ditto.make_step_fn", plan, block=block,
+                            interpret=interpret, collect_stats=collect_stats,
+                            low_bits=low_bits, fused=fused)
     modes = dict(modes)
-    blk = dict(bm=block, bn=block, bk=block, interpret=interpret,
-               low_bits=low_bits, fused=fused)
 
     def step(dparams, mparams, state, latents, t, labels):
         new_state: dict = {}
         aux: dict = {}
 
         def lin(name, x):
-            y, st2, a = compiled_mod.linear_apply(dparams[name], modes[name], x, state[name],
-                                                  blk=blk, collect_stats=collect_stats)
+            y, st2, a = compiled_mod.linear_apply(dparams[name], modes[name], x,
+                                                  state[name], plan=plan)
             new_state[name], aux[name] = st2, a
             return y
 
         def attn(name, a_, b_):
             y, st2, a = compiled_mod.attention_apply(dparams[name], modes[name], a_, b_,
-                                                     state[name], blk=blk,
-                                                     collect_stats=collect_stats)
+                                                     state[name], plan=plan)
             new_state[name], aux[name] = st2, a
             return y
 
@@ -186,30 +208,27 @@ class CompiledDittoDiT:
 
     With ``cache`` (a :class:`repro.serve.CompiledRunnerCache`) the jitted
     step is fetched from / registered in the cache instead of being jitted
-    per instance, so later batches with the same (cfg, modes, kernel
-    config, shapes) reuse the existing trace. ``cache_extra`` feeds extra
-    key components (e.g. steps / batch bucket) into the cache key."""
+    per instance, so later batches with the same (cfg, modes,
+    ``plan.cache_sig()``, ``bucket``, shapes) reuse the existing trace."""
 
-    def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
-                 interpret: bool | None = None, collect_stats: bool = True,
-                 block: int = 128, low_bits: int = 8, fused: bool = False,
-                 cache=None, cache_extra: tuple = ()):
+    def __init__(self, params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
+                 plan: DittoPlan | None = None, *, cache=None, bucket: int | None = None,
+                 interpret=UNSET, collect_stats=UNSET, block=UNSET, low_bits=UNSET,
+                 fused=UNSET, cache_extra=UNSET):
+        plan, bucket = _resolve_legacy(
+            "core.ditto.CompiledDittoDiT", plan, bucket, cache_extra,
+            interpret=interpret, collect_stats=collect_stats, block=block,
+            low_bits=low_bits, fused=fused)
         self.cfg = cfg
         self.engine = engine
         self.params = params
-        self.ceng = CompiledDittoEngine(engine, interpret=interpret, block=block,
-                                        collect_stats=collect_stats, low_bits=low_bits,
-                                        fused=fused)
+        self.plan = plan
+        self.ceng = CompiledDittoEngine(engine, plan=plan)
         self.state = self.ceng.init_state()
         if cache is not None:
-            self._step = cache.step_for(cfg, self.ceng.modes, block=self.ceng.block,
-                                        interpret=interpret, collect_stats=collect_stats,
-                                        low_bits=low_bits, fused=fused,
-                                        extra=tuple(cache_extra))
+            self._step = cache.step_for(cfg, self.ceng.modes, plan, bucket=bucket)
         else:
-            self._step = jax.jit(make_step_fn(cfg, self.ceng.modes, block=self.ceng.block,
-                                              interpret=interpret, collect_stats=collect_stats,
-                                              low_bits=low_bits, fused=fused))
+            self._step = jax.jit(make_step_fn(cfg, self.ceng.modes, plan))
 
     def __call__(self, latents, t, labels=None):
         out, self.state, aux = self._step(self.ceng.params, self.params, self.state,
@@ -219,34 +238,41 @@ class CompiledDittoDiT:
         return out
 
 
-def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine, *,
-                    compiled: bool = False, interpret: bool | None = None,
-                    collect_stats: bool = True, block: int = 128, low_bits: int = 8,
-                    fused: bool = False, runner_cache=None, cache_extra: tuple = ()):
+def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
+                    plan: DittoPlan | None = None, *, runner_cache=None,
+                    bucket: int | None = None, compiled=UNSET, interpret=UNSET,
+                    collect_stats=UNSET, block=UNSET, low_bits=UNSET, fused=UNSET,
+                    cache_extra=UNSET):
     """denoise_fn(x, t, labels) for repro.core.diffusion samplers; calls
     engine.end_step() after each sampler step.
 
-    compiled=True: once the engine is calibrated (engine.ready_for_compiled),
-    the remaining steps run through the jitted Pallas path, seeded with the
-    eager pass's temporal state. A new compiled runner object is built per
-    sample (begin_sample resets state and Defo may re-decide modes), but
-    with ``runner_cache`` the underlying jitted step function is shared
-    across samples/batches whose (cfg, modes, kernel config, shapes) agree
-    — one trace per runner-cache key instead of one per batch.
-    ``low_bits=4`` executes class-1 diff tiles through the packed-int4
-    kernel branch (bit-identical; separate runner-cache key); ``fused=True``
-    through the single-pass fused kernel (bit-identical; separate key).
+    With no ``plan`` this is the bare eager path (:data:`EAGER_PLAN` —
+    calibration / analysis runs). ``plan.compiled=True``: once the engine
+    is calibrated (engine.ready_for_compiled), the remaining steps run
+    through the jitted Pallas path, seeded with the eager pass's temporal
+    state. A new compiled runner object is built per sample (begin_sample
+    resets state and Defo may re-decide modes), but with ``runner_cache``
+    the underlying jitted step function is shared across samples/batches
+    whose (cfg, modes, ``plan.cache_sig()``, ``bucket``, shapes) agree —
+    one trace per runner-cache key instead of one per batch. The
+    per-knob keywords are a deprecated shim (their ``compiled`` default
+    stays False, matching the legacy signature).
     """
+    legacy = dict(compiled=compiled, interpret=interpret, collect_stats=collect_stats,
+                  block=block, low_bits=low_bits, fused=fused)
+    if any(not is_unset(v) for v in legacy.values()) or not is_unset(cache_extra):
+        if is_unset(legacy["compiled"]):
+            legacy["compiled"] = False  # the legacy signature's default
+    plan, bucket = _resolve_legacy("core.ditto.make_denoise_fn", plan, bucket,
+                                   cache_extra, default=EAGER_PLAN, **legacy)
     runner = DittoDiT(params, cfg, engine)
     box: dict = {}
 
     def fn(x, t, labels):
-        if compiled and engine.ready_for_compiled():
+        if plan.compiled and engine.ready_for_compiled():
             if box.get("built_for") is not engine.records:  # rebuilt per begin_sample
-                box["runner"] = CompiledDittoDiT(params, cfg, engine,
-                                                 interpret=interpret, collect_stats=collect_stats,
-                                                 block=block, low_bits=low_bits, fused=fused,
-                                                 cache=runner_cache, cache_extra=cache_extra)
+                box["runner"] = CompiledDittoDiT(params, cfg, engine, plan,
+                                                 cache=runner_cache, bucket=bucket)
                 box["built_for"] = engine.records
             out = box["runner"](x, t, labels)
         else:

@@ -128,7 +128,9 @@ class DittoEngine:
         n = st.w.q.shape[1]
 
         if st.x_scale is None:  # first-step calibration, held afterwards
-            st.x_scale = quant.compute_scale(x2)
+            # per-sample (batch-row) scales: quantized trajectories stay
+            # independent of batch composition (see quant.sample_scale)
+            st.x_scale = quant.sample_scale(x2, x.shape[0] if x.ndim > 1 else 1)
         q_t = quant.quantize(x2, st.x_scale)
 
         mode = self._mode_for_step(st)
@@ -179,8 +181,10 @@ class DittoEngine:
         b2 = b.reshape(-1, n, d_)
 
         if st.a_scale is None:
-            st.a_scale = quant.compute_scale(a2)
-            st.b_scale = quant.compute_scale(b2)
+            # per-(sample, head) scales — same batch-composition invariance
+            # as the linear path (quant.sample_scale)
+            st.a_scale = quant.sample_scale(a2, a2.shape[0])
+            st.b_scale = quant.sample_scale(b2, b2.shape[0])
         qa = quant.quantize(a2, st.a_scale)
         qb = quant.quantize(b2, st.b_scale)
 

@@ -1,0 +1,162 @@
+"""DittoPlan: the one authoritative execution-configuration object.
+
+Every serving knob used to be a loose keyword argument threaded through
+seven signatures (``kernels/ops.py`` -> ``core/ditto/compiled.py`` ->
+``dit_runner.make_step_fn`` -> ``serve.cache`` -> ``sim.harness`` ->
+``ServeSession`` -> the examples); adding one knob meant editing all of
+them, and nothing guaranteed the knob reached the runner-cache key. A
+:class:`DittoPlan` is a frozen, hashable dataclass holding the whole
+configuration in three groups:
+
+  kernel   : ``block``, ``interpret``, ``low_bits``, ``fused`` — what the
+             Pallas step lowers to (validated once, at construction);
+  sampling : ``steps``, ``sampler``, ``policy`` — the denoising loop and
+             the engine's mode policy;
+  serve    : ``compiled``, ``collect_stats``, ``max_batch`` — runtime
+             behavior of the serving layer.
+
+A plan IS a trace identity: :meth:`cache_sig` returns the ordered tuple
+of exactly the fields that select a distinct XLA lowering, and
+``serve.cache.RunnerKey`` is ``(cfg_sig, mode_sig, plan.cache_sig(),
+bucket)``. Per-request plans therefore compose naturally with the shared
+runner cache — two requests whose plans agree on ``cache_sig()`` (and on
+model/modes/bucket) replay one trace no matter how the rest of their
+plans differ, and plans that lower differently can never collide.
+
+Deprecation shims: the legacy splatted-kwarg call styles still work
+through :func:`plan_from_kwargs`, which rebuilds the equivalent plan and
+warns once per call site name. New code should construct plans directly:
+
+    plan = DittoPlan(steps=20, low_bits=4)
+    sess = ServeSession(params, cfg, sched, plan=plan)
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from ...kernels.common import DEFAULT_LOW_BITS, resolve_interpret, validate_low_bits
+
+DEFAULT_MAX_BATCH = 64  # mirrored by repro.serve.bucketing
+
+_SAMPLERS = ("ddim", "plms")
+_POLICIES = ("act", "diff", "spatial", "defo", "defo+")
+
+
+@dataclasses.dataclass(frozen=True)
+class DittoPlan:
+    """Frozen, hashable execution plan for one request (or one session)."""
+
+    # --- kernel config: selects the Pallas lowering -----------------------
+    block: int = 128
+    interpret: bool | None = None  # None = auto-detect backend
+    low_bits: int = DEFAULT_LOW_BITS  # 4 = packed-int4 low-tile branch
+    fused: bool = False  # single-pass fused diff-step kernel
+    # --- sampling config: the denoising loop ------------------------------
+    steps: int = 20
+    sampler: str = "ddim"
+    policy: str = "defo"
+    # --- serve config: runtime behavior ------------------------------------
+    compiled: bool = True
+    collect_stats: bool = True
+    max_batch: int = DEFAULT_MAX_BATCH
+
+    def __post_init__(self):
+        validate_low_bits(self.low_bits)
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.sampler not in _SAMPLERS:
+            raise ValueError(f"sampler must be one of {_SAMPLERS}, got {self.sampler!r}")
+        if self.policy not in _POLICIES:
+            raise ValueError(f"policy must be one of {_POLICIES}, got {self.policy!r}")
+
+    # ------------------------------------------------------------------ api
+    def replace(self, **kw) -> "DittoPlan":
+        """A copy with fields overridden (re-validated)."""
+        return dataclasses.replace(self, **kw)
+
+    def normalized(self) -> "DittoPlan":
+        """The plan with ``interpret=None`` resolved to its backend value,
+        so auto-detected and explicit plans that lower identically compare
+        (and hash) equal — the scheduler groups requests by this."""
+        return self.replace(interpret=resolve_interpret(self.interpret))
+
+    def cache_sig(self) -> tuple:
+        """Ordered trace-identity tuple — the plan fields that select a
+        distinct jitted step. ``RunnerKey`` embeds this verbatim; the
+        field order is a stable contract (see ``RunnerKey``'s accessors).
+        ``sampler``/``policy``/``compiled``/``max_batch`` are deliberately
+        absent: they shape the loop around the step, not the step itself,
+        so plans differing only there share one trace.
+        """
+        return (self.block, resolve_interpret(self.interpret), self.collect_stats,
+                self.low_bits, self.fused, self.steps)
+
+    def kernel_blk(self) -> dict:
+        """The kernel-config dict the ops wrappers accept (``bm/bn/bk``
+        tile edges plus lowering knobs)."""
+        return dict(bm=self.block, bn=self.block, bk=self.block,
+                    interpret=self.interpret, low_bits=self.low_bits,
+                    fused=self.fused)
+
+
+#: Default plan for the bare eager engine path (`make_denoise_fn` with no
+#: plan): calibration/analysis runs, not the compiled serving fast path.
+EAGER_PLAN = DittoPlan(compiled=False)
+
+
+# --------------------------------------------------------- deprecation shim
+class _Unset:
+    """Sentinel distinguishing "kwarg not passed" from any real value."""
+
+    def __repr__(self):  # pragma: no cover - repr only
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+_warned_sites: set[str] = set()
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which call sites already warned (tests use this)."""
+    _warned_sites.clear()
+
+
+def is_unset(v) -> bool:
+    """True when ``v`` is the :data:`UNSET` sentinel (kwarg not passed)."""
+    return isinstance(v, _Unset)
+
+
+def plan_from_kwargs(site: str, plan: DittoPlan | None, *, default: DittoPlan | None = None,
+                     **kw) -> DittoPlan:
+    """Resolve a (plan, legacy-kwargs) call into one plan.
+
+    ``kw`` maps legacy kwarg names to their passed values, with
+    :data:`UNSET` marking "not passed". Passing any legacy kwarg emits a
+    ``DeprecationWarning`` once per ``site`` and builds the equivalent
+    plan; mixing a plan AND legacy kwargs is an error (two sources of
+    truth). With neither, ``plan`` (or ``default``, or the default plan)
+    is returned.
+    """
+    passed = {k: v for k, v in kw.items() if not isinstance(v, _Unset)}
+    if not passed:
+        if plan is not None:
+            return plan
+        return default if default is not None else DittoPlan()
+    if plan is not None:
+        raise TypeError(
+            f"{site}: pass either plan= or the deprecated keyword arguments "
+            f"({sorted(passed)}), not both")
+    if site not in _warned_sites:
+        _warned_sites.add(site)
+        warnings.warn(
+            f"{site}: the splatted keyword arguments {sorted(passed)} are "
+            f"deprecated; construct a repro.core.ditto.DittoPlan and pass "
+            f"plan= instead",
+            DeprecationWarning, stacklevel=3)
+    return DittoPlan(**passed)

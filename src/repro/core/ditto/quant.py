@@ -7,6 +7,14 @@ calibrated per layer on the first denoising step and the scale is then
 HELD for the remaining steps (temporal differences Δq = q_t - q_{t+1} are
 exact int16 under a shared scale — the property tests rely on this).
 Weights are quantized per output channel once.
+
+Activation calibration is PER SAMPLE (:func:`sample_scale`): each batch
+row group gets a max-abs scale over its own elements only. Temporal
+exactness needs the scale shared across *steps*, not across *rows*, so
+per-sample granularity keeps every Ditto identity intact while making the
+quantized trajectory of a sample independent of which other samples share
+its batch — the invariant the continuous-batching scheduler
+(repro.serve.scheduler) relies on to coalesce requests bit-identically.
 """
 from __future__ import annotations
 
@@ -33,6 +41,29 @@ jax.tree_util.register_pytree_node(
 def compute_scale(x: jax.Array, *, axis=None) -> jax.Array:
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
     return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def sample_scale(x: jax.Array, n_samples: int) -> jax.Array:
+    """Per-sample max-abs activation scale, broadcastable against ``x``.
+
+    ``x`` has ``n_samples`` equal row groups along axis 0 (rows
+    ``[i*g, (i+1)*g)`` belong to sample ``i``); the scale is a max-abs
+    reduction over each sample's own elements only, returned with shape
+    ``(rows, 1, ..., 1)`` and constant within a sample.
+
+    This is the serving runtime's *batch-composition invariance*: no
+    element of sample ``i``'s quantized trajectory depends on which other
+    samples share its batch, so requests may be coalesced, split, padded
+    or re-batched freely (repro.serve.scheduler) with bit-identical
+    per-request results. Replication padding remains exact as the special
+    case where the extra rows are copies.
+    """
+    t = x.shape[0]
+    if n_samples < 1 or t % n_samples:
+        raise ValueError(f"cannot group {t} rows into {n_samples} samples")
+    s = compute_scale(x.reshape(n_samples, -1), axis=1)  # (n_samples, 1)
+    s = jnp.repeat(s, t // n_samples, axis=0)
+    return s.reshape((t,) + (1,) * (x.ndim - 1))
 
 
 def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:

@@ -18,7 +18,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["resolve_interpret", "pad2", "validate_low_bits"]
+__all__ = ["DEFAULT_LOW_BITS", "resolve_interpret", "pad2", "validate_low_bits"]
+
+#: The int8-everywhere default; DittoPlan.low_bits and every kernel
+#: signature share this one constant so the defaults cannot drift.
+DEFAULT_LOW_BITS = 8
 
 
 def resolve_interpret(interpret: bool | None) -> bool:

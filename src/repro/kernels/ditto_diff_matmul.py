@@ -84,7 +84,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from .common import resolve_interpret
+from .common import DEFAULT_LOW_BITS, resolve_interpret
 from .int4_pack import pack_int4, unpack_int4_lanes
 
 
@@ -164,7 +164,7 @@ def ditto_diff_matmul(
     bn: int = 128,
     bk: int = 128,
     interpret: bool | None = None,
-    low_bits: int = 8,
+    low_bits: int = DEFAULT_LOW_BITS,
     w_transposed: bool = False,
 ) -> jax.Array:
     """x_*: (M,K) int8; w_q: (K,N) int8 — or (N,K) with ``w_transposed``;

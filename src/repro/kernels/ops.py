@@ -17,21 +17,36 @@ materializing transposes or zero y_prev tensors.
 ``low_bits`` is validated here (ValueError on anything but 4 or 8) so a
 bad value fails loudly at the API boundary instead of silently running
 the wrong branch inside a jitted kernel.
+
+Every public wrapper accepts ``plan=`` — a ``repro.core.ditto.DittoPlan``
+(duck-typed: anything with ``block`` / ``interpret`` / ``low_bits`` /
+``fused`` attributes works, which keeps this kernels layer free of a
+dependency on ``repro.core``). A plan overrides the per-knob kwargs,
+which remain as the micro-API for kernel tests and benchmarks that need
+non-square ``bm/bn/bk`` tiles.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .common import pad2, resolve_interpret, validate_low_bits
+from .common import DEFAULT_LOW_BITS, pad2, resolve_interpret, validate_low_bits
 from .diff_encode import diff_encode
 from .ditto_diff_matmul import ditto_diff_matmul
 from .fused_step import diff_encode_fused, ditto_fused_matmul
 from .int8_matmul import int8_matmul
 
 
-def int8_act_matmul(x_q, w_q, *, bm=128, bn=128, bk=128, interpret=None, low_bits=8,
-                    fused=False):
+def _plan_knobs(plan, bm, bn, bk, interpret, low_bits, fused):
+    """Resolve (plan | per-knob kwargs) to one kernel config; plan wins."""
+    if plan is None:
+        return bm, bn, bk, interpret, low_bits, fused
+    b = plan.block
+    return b, b, b, plan.interpret, plan.low_bits, plan.fused
+
+
+def int8_act_matmul(x_q, w_q, *, plan=None, bm=128, bn=128, bk=128, interpret=None,
+                    low_bits=DEFAULT_LOW_BITS, fused=False):
     """(M,K) int8 @ (K,N) int8 -> (M,N) int32, exact (act-mode ITC path).
 
     Pads both operands to the (bm, bn, bk) tile grid with zeros — padding
@@ -41,8 +56,10 @@ def int8_act_matmul(x_q, w_q, *, bm=128, bn=128, bk=128, interpret=None, low_bit
     ``low_bits`` and ``fused`` are accepted (validated, then ignored) for
     call-site uniformity with the diff path: the act GEMM has no Δ
     operand, so there is nothing to narrow or skip — the compiled engine
-    passes one kernel-config dict to every mode's op.
+    passes one plan to every mode's op.
     """
+    bm, bn, bk, interpret, low_bits, fused = _plan_knobs(
+        plan, bm, bn, bk, interpret, low_bits, fused)
     validate_low_bits(low_bits)
     del low_bits, fused
     interpret = resolve_interpret(interpret)
@@ -67,8 +84,8 @@ def encode_classes(x_t_q, x_prev_q, *, bm=128, bk=128, interpret=None):
 
 
 def ditto_linear_step(
-    x_t_q, x_prev_q, w_q, y_prev_i32=None, *, bm=128, bn=128, bk=128, interpret=None,
-    low_bits=8, fused=False, w_transposed=False,
+    x_t_q, x_prev_q, w_q, y_prev_i32=None, *, plan=None, bm=128, bn=128, bk=128,
+    interpret=None, low_bits=DEFAULT_LOW_BITS, fused=False, w_transposed=False,
 ):
     """One temporal-difference linear step, tile-skipped.
 
@@ -95,6 +112,8 @@ def ditto_linear_step(
     its storage format) — bit-identical either way (the class-1 verdict
     bounds |Δ| inside the exact pack/unpack range).
     """
+    bm, bn, bk, interpret, low_bits, fused = _plan_knobs(
+        plan, bm, bn, bk, interpret, low_bits, fused)
     validate_low_bits(low_bits)
     interpret = resolve_interpret(interpret)
     m, k = x_t_q.shape
@@ -117,7 +136,8 @@ def ditto_linear_step(
     return y[:m, :n], classes
 
 
-def attention_delta(q_t, q_prev, k_t, k_prev, s_prev_i32, *, interpret=None, **blk):
+def attention_delta(q_t, q_prev, k_t, k_prev, s_prev_i32, *, plan=None, interpret=None,
+                    **blk):
     """Paper §IV-A attention identity via two diff-matmuls:
 
         S_t = S_prev + Q_t ΔK^T + ΔQ K_prev^T
@@ -135,11 +155,14 @@ def attention_delta(q_t, q_prev, k_t, k_prev, s_prev_i32, *, interpret=None, **b
     map — and y_prev is omitted entirely (no zeros tensor, no y_prev
     operand pass); S_prev joins in the epilogue sum below.
     """
+    if plan is not None:
+        blk = {}
+        interpret = plan.interpret
     interpret = resolve_interpret(interpret)
     #   Q_t ΔK^T  = ((k_t - k_prev) @ Q_t^T)^T   — x = K rows, W = Q_t (N,K) layout
     #   ΔQ K_prev^T = (q_t - q_prev) @ K_prev^T  — W = K_prev in (N,K) layout
-    y1, cls_dk = ditto_linear_step(k_t, k_prev, q_t, None,
+    y1, cls_dk = ditto_linear_step(k_t, k_prev, q_t, None, plan=plan,
                                    interpret=interpret, w_transposed=True, **blk)
-    y2, cls_dq = ditto_linear_step(q_t, q_prev, k_prev, None,
+    y2, cls_dq = ditto_linear_step(q_t, q_prev, k_prev, None, plan=plan,
                                    interpret=interpret, w_transposed=True, **blk)
     return s_prev_i32 + y1.T + y2, (cls_dk, cls_dq)

@@ -1,19 +1,29 @@
-"""Persistent compiled serving runtime (runner cache + batch buckets).
+"""Persistent compiled serving runtime (runner cache + batch buckets +
+continuous-batching scheduler).
 
-The production-facing layer over the two-phase Ditto engine:
+The production-facing layer over the two-phase Ditto engine, configured
+by one :class:`~repro.core.ditto.DittoPlan` per request (re-exported here
+for convenience):
 
-  :class:`CompiledRunnerCache` — one ``jax.jit`` trace per (model config,
-      layer-mode signature, kernel config, steps, batch bucket), reused
-      across every serve batch that maps to the same key;
+  :class:`CompiledRunnerCache` — one ``jax.jit`` trace per
+      ``RunnerKey = (model-cfg signature, layer-mode signature,
+      plan.cache_sig(), batch bucket)``, reused across every serve batch
+      that maps to the same key;
   :mod:`bucketing` — ragged request batches padded to power-of-two batch
       buckets by row replication (bit-exact w.r.t. the unbucketed path);
   :class:`ServeSession` — the request-stream front-end threading both
-      through ``sim.harness.serve_records``.
+      through ``sim.harness.serve_records``;
+  :class:`ServeScheduler` — continuous batching: coalesces queued ragged
+      requests ACROSS submissions into full buckets per plan group
+      (bit-identical per-request results; per-request plan overrides
+      share one cache), resolving :class:`Ticket` handles.
 
 See docs/architecture.md for the request lifecycle.
 """
+from ..core.ditto.plan import DittoPlan
 from .bucketing import DEFAULT_MAX_BATCH, bucket_for, pad_batch
 from .cache import CompiledRunnerCache, RunnerKey, cfg_signature
+from .scheduler import ServeScheduler, Ticket
 from .session import ChunkResult, ServeResult, ServeSession
 
 __all__ = [
@@ -26,4 +36,7 @@ __all__ = [
     "ChunkResult",
     "ServeResult",
     "ServeSession",
+    "ServeScheduler",
+    "Ticket",
+    "DittoPlan",
 ]

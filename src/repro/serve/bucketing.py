@@ -9,21 +9,24 @@ signature, instead of one per distinct batch size.
 
 Correctness contract (tested in tests/test_serve_cache.py): padding
 REPLICATES existing batch rows (cyclic ``arange(bucket) % n`` gather)
-rather than appending zeros. Every data-dependent quantity the engine
-calibrates per batch is a max-abs reduction over the batch
-(``quant.compute_scale``), and replicated rows can never change a max —
-so the calibrated scales, and therefore the quantized trajectory of the
-REAL rows, are bit-identical to an unpadded run. All remaining per-row
-compute in the DiT forward (attention within a sample, layernorm per
-token, DDIM per element) never mixes batch rows. Slicing the sample back
-to the true batch recovers exactly the unbucketed result.
+rather than appending zeros. Activation calibration is PER SAMPLE
+(``quant.sample_scale`` — each batch row group's max-abs scale is a
+function of its own elements only), so extra rows of ANY content can
+never change a real row's scale; replication keeps the padded rows
+meaningful (their class statistics mirror the real rows') and is the
+special case where even a batch-global reduction would have been safe.
+All remaining per-row compute in the DiT forward (attention within a
+sample, layernorm per token, DDIM per element) never mixes batch rows —
+the same batch-composition invariance the continuous-batching scheduler
+(repro.serve.scheduler) relies on. Slicing the sample back to the true
+batch recovers exactly the unbucketed result.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-DEFAULT_MAX_BATCH = 64
+from ..core.ditto.plan import DEFAULT_MAX_BATCH  # single-sourced with DittoPlan
 
 
 def bucket_for(n: int, *, max_batch: int = DEFAULT_MAX_BATCH) -> int:

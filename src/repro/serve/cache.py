@@ -5,24 +5,29 @@ jitted Pallas function — but every serve batch still built its own
 ``CompiledDittoDiT``, whose step closed over that batch's params, so XLA
 re-traced and re-compiled per batch. ``make_step_fn`` (core.ditto.
 dit_runner) removed the closure: the step's only trace-static inputs are
-the model config, the frozen per-layer modes and the kernel config.
-This module adds the cross-batch memory: ONE ``jax.jit``-wrapped step per
+the model config, the frozen per-layer modes and the plan's trace
+identity. This module adds the cross-batch memory: ONE ``jax.jit``-
+wrapped step per
 
     RunnerKey = (model-cfg signature, layer-mode signature,
-                 kernel block / interpret / collect_stats / low_bits / fused,
-                 extra — e.g. (denoise steps, padded batch bucket))
+                 plan.cache_sig(), batch bucket)
 
-``low_bits`` and ``fused`` are first-class key components: the int4
-low-tile path (``low_bits=4``) and the single-pass fused kernel
-(``fused=True``, scalar-prefetch DMA skipping) each lower a different
-kernel body than the two-pass int8 path, so serve configs differing in
-either knob must never share a trace — even though their outputs are
-bit-identical.
+``plan.cache_sig()`` is the ordered tuple of exactly the
+:class:`~repro.core.ditto.DittoPlan` fields that select a distinct XLA
+lowering — ``(block, interpret, collect_stats, low_bits, fused, steps)``
+— so a plan IS a trace identity: serve configs that lower different
+kernel bodies (``low_bits=4`` packed-int4, ``fused=True`` single-pass
+DMA-skipping) can never share a trace, while plans differing only in
+loop-level fields (``sampler``/``policy``/``max_batch``) always do.
 
-shared by every subsequent batch that maps to the same key (and shapes —
+The key is shared by every subsequent batch that maps to it (and shapes —
 which the batch bucket pins). The cache counts actual Python traces via a
 trace-time side effect, so tests can assert "N same-bucket batches
 compile exactly once" instead of inferring it from wall-clock.
+
+The pre-plan keyword style (``block=...``, ``extra=(steps, bucket)``) is
+a deprecated shim that builds the equivalent plan and lands on the SAME
+RunnerKey, so migrating callers can share traces with un-migrated ones.
 """
 from __future__ import annotations
 
@@ -33,9 +38,7 @@ from typing import Any, Callable
 import jax
 
 from ..core.ditto import dit_runner
-# the kernels' own auto-detection, so None and its resolved value cannot
-# create two cache entries for the same lowering
-from ..kernels.common import resolve_interpret as _resolve_interpret
+from ..core.ditto.plan import UNSET, DittoPlan, is_unset, plan_from_kwargs
 
 
 def cfg_signature(cfg) -> tuple:
@@ -49,12 +52,34 @@ def cfg_signature(cfg) -> tuple:
 class RunnerKey:
     cfg_sig: tuple
     mode_sig: tuple
-    block: int
-    interpret: bool
-    collect_stats: bool
-    low_bits: int = 8
-    fused: bool = False
-    extra: tuple = ()
+    plan_sig: tuple  # DittoPlan.cache_sig(), ordered — see accessors below
+    bucket: int | None = None
+
+    # ------------------------------------------------- plan_sig accessors
+    # plan_sig's field order is DittoPlan.cache_sig()'s stable contract
+    @property
+    def block(self) -> int:
+        return self.plan_sig[0]
+
+    @property
+    def interpret(self) -> bool:
+        return self.plan_sig[1]
+
+    @property
+    def collect_stats(self) -> bool:
+        return self.plan_sig[2]
+
+    @property
+    def low_bits(self) -> int:
+        return self.plan_sig[3]
+
+    @property
+    def fused(self) -> bool:
+        return self.plan_sig[4]
+
+    @property
+    def steps(self) -> int:
+        return self.plan_sig[5]
 
 
 class CompiledRunnerCache:
@@ -78,31 +103,53 @@ class CompiledRunnerCache:
         self.misses = 0
         self._lock = threading.RLock()
 
-    # ------------------------------------------------------------------ api
-    def key_for(self, cfg, modes: dict[str, str] | tuple, *, block: int = 128,
-                interpret: bool | None = None, collect_stats: bool = True,
-                low_bits: int = 8, fused: bool = False, extra: tuple = ()) -> RunnerKey:
+    # ------------------------------------------------------------ resolve
+    @staticmethod
+    def _resolve(site: str, modes, plan: DittoPlan | None, bucket, extra, legacy
+                 ) -> tuple[DittoPlan, int | None, tuple]:
+        """(plan | legacy kwargs + extra) -> (plan, bucket). The legacy
+        ``extra`` was always the ``(steps, bucket)`` pair; steps moved
+        onto the plan and bucket became a first-class key field."""
+        steps = UNSET
+        if not is_unset(extra):
+            extra = tuple(extra)
+            if len(extra) not in (0, 2):
+                raise TypeError(
+                    f"{site}: legacy extra must be (steps, bucket), got {extra!r}")
+            if extra:
+                steps, bucket = extra
+        plan = plan_from_kwargs(site, plan, steps=steps, **legacy)
         mode_sig = tuple(sorted(modes.items())) if isinstance(modes, dict) else tuple(modes)
-        return RunnerKey(cfg_signature(cfg), mode_sig, block,
-                         _resolve_interpret(interpret), collect_stats,
-                         low_bits=low_bits, fused=fused, extra=tuple(extra))
+        return plan, bucket, mode_sig
 
-    def step_for(self, cfg, modes: dict[str, str], *, block: int = 128,
-                 interpret: bool | None = None, collect_stats: bool = True,
-                 low_bits: int = 8, fused: bool = False, extra: tuple = ()) -> Callable:
+    # ------------------------------------------------------------------ api
+    def key_for(self, cfg, modes: dict[str, str] | tuple, plan: DittoPlan | None = None,
+                *, bucket: int | None = None, block=UNSET, interpret=UNSET,
+                collect_stats=UNSET, low_bits=UNSET, fused=UNSET,
+                extra=UNSET) -> RunnerKey:
+        plan, bucket, mode_sig = self._resolve(
+            "serve.CompiledRunnerCache.key_for", modes, plan, bucket, extra,
+            dict(block=block, interpret=interpret, collect_stats=collect_stats,
+                 low_bits=low_bits, fused=fused))
+        return RunnerKey(cfg_signature(cfg), mode_sig, plan.cache_sig(), bucket)
+
+    def step_for(self, cfg, modes: dict[str, str], plan: DittoPlan | None = None,
+                 *, bucket: int | None = None, block=UNSET, interpret=UNSET,
+                 collect_stats=UNSET, low_bits=UNSET, fused=UNSET,
+                 extra=UNSET) -> Callable:
         """Jitted ``step(dparams, mparams, state, latents, t, labels)`` for
         the key; traced at most once per (key, input shapes)."""
-        key = self.key_for(cfg, modes, block=block, interpret=interpret,
-                           collect_stats=collect_stats, low_bits=low_bits,
-                           fused=fused, extra=extra)
+        plan, bucket, mode_sig = self._resolve(
+            "serve.CompiledRunnerCache.step_for", modes, plan, bucket, extra,
+            dict(block=block, interpret=interpret, collect_stats=collect_stats,
+                 low_bits=low_bits, fused=fused))
+        key = RunnerKey(cfg_signature(cfg), mode_sig, plan.cache_sig(), bucket)
         with self._lock:
             if key in self._steps:
                 self.hits += 1
                 return self._steps[key]
             self.misses += 1
-            raw = dit_runner.make_step_fn(cfg, modes, block=block, interpret=interpret,
-                                          collect_stats=collect_stats, low_bits=low_bits,
-                                          fused=fused)
+            raw = dit_runner.make_step_fn(cfg, modes, plan)
 
             def counting_step(*args):
                 # executes only while jax is TRACING (jit caches the jaxpr

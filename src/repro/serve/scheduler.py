@@ -1,0 +1,217 @@
+"""ServeScheduler: continuous batching across request submissions.
+
+``ServeSession.serve`` batches WITHIN one call: each call chunks to
+``max_batch`` and pads its own remainder chunk up to a power-of-two
+bucket. A stream of small requests therefore wastes pad rows on every
+call — batch-3 requests each pad to bucket 4, throwing away a quarter of
+every dispatch. The scheduler closes that gap by coalescing ACROSS
+submissions:
+
+  * ``submit(x, labels, plan=None) -> Ticket`` queues a request (with an
+    optional per-request :class:`DittoPlan` override) and returns
+    immediately. Whenever a plan group's queue holds at least
+    ``max_batch`` rows, a full bucket is dispatched eagerly — requests
+    never wait behind an arbitrary flush to make forward progress.
+  * ``flush()`` dispatches everything still queued (the ragged tail pays
+    the only padding in the stream) and resolves all tickets.
+  * ``Ticket.result()`` returns this request's rows of the sample —
+    flushing first if the request is still (partly) queued.
+
+Requests are grouped by ``plan.normalized()`` (+ label presence): mixed
+submissions are only ever batched with requests that run the same
+sampling loop and kernel lowering, so per-request plan overrides (one
+client on ``fused``, another on ``low_bits=4``) coexist in one scheduler
+sharing one runner cache — and can never share a trace, since the plan
+is the trace identity (``RunnerKey`` embeds ``plan.cache_sig()``).
+
+Dispatches may split a request across two batches or pack several
+requests into one; both are invisible in the results because activation
+calibration is PER SAMPLE (``quant.sample_scale``): no element of a
+sample's quantized trajectory depends on which other samples share its
+batch, so the coalesced rows are bit-identical to a per-request
+``serve()`` (property-tested in tests/test_scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ditto.plan import DittoPlan
+from .bucketing import bucket_for
+from .cache import CompiledRunnerCache
+from .session import ServeResult, ServeSession
+
+
+class Ticket:
+    """Handle for one submitted request; resolves to its own sample rows."""
+
+    def __init__(self, scheduler: "ServeScheduler", index: int, batch: int,
+                 plan: DittoPlan):
+        self._scheduler = scheduler
+        self.index = index  # submission order, scheduler-wide
+        self.batch = batch  # rows in this request
+        self.plan = plan  # normalized plan this request runs under
+        self._pieces: list[jax.Array] = []  # filled in row order by dispatches
+        self._filled = 0
+        self.results: list[ServeResult] = []  # ServeResults that covered rows of this request
+
+    @property
+    def done(self) -> bool:
+        return self._filled == self.batch
+
+    def result(self) -> jax.Array:
+        """This request's sample at its TRUE batch size (rows in submission
+        order). Triggers ``flush()`` if any of the request is still queued."""
+        if not self.done:
+            self._scheduler.flush()
+        if len(self._pieces) == 1:
+            return self._pieces[0]
+        return jnp.concatenate(self._pieces, axis=0)
+
+    # ------------------------------------------------------------- internal
+    def _deliver(self, rows: jax.Array, result: ServeResult) -> None:
+        self._pieces.append(rows)
+        self._filled += rows.shape[0]
+        self.results.append(result)
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: Ticket
+    x: jax.Array
+    labels: jax.Array | None
+    used: int = 0  # rows already dispatched
+
+    @property
+    def remaining(self) -> int:
+        return self.x.shape[0] - self.used
+
+
+class _Group:
+    """FIFO queue of pending requests sharing one (plan, labels?) shape."""
+
+    def __init__(self, plan: DittoPlan):
+        self.plan = plan
+        self.pending: deque[_Pending] = deque()
+
+    @property
+    def queued_rows(self) -> int:
+        return sum(p.remaining for p in self.pending)
+
+
+class ServeScheduler:
+    """Continuous-batching front-end over one :class:`ServeSession`.
+
+    ``plan`` is the default for submissions that don't carry their own;
+    ``cache`` (shared runner cache) and the session are owned by the
+    scheduler. ``eager=False`` disables the dispatch-on-full-bucket
+    behavior, queueing everything until ``flush()`` (useful for tests and
+    offline/batch workloads that want maximal packing decisions made at
+    one point in time).
+    """
+
+    def __init__(self, params, cfg, sched, plan: DittoPlan | None = None, *,
+                 cache: CompiledRunnerCache | None = None, eager: bool = True):
+        self.session = ServeSession(params, cfg, sched,
+                                    plan if plan is not None else DittoPlan(),
+                                    cache=cache)
+        self.eager = eager
+        self._groups: dict[tuple, _Group] = {}
+        self._n_submitted = 0
+        self.tickets: list[Ticket] = []
+        self.dispatches: list[ServeResult] = []
+
+    # ------------------------------------------------------------------ api
+    def submit(self, x: jax.Array, labels=None, plan: DittoPlan | None = None) -> Ticket:
+        """Queue one request; returns its :class:`Ticket` immediately.
+
+        ``plan`` overrides the scheduler default for this request. Full
+        ``max_batch`` buckets are dispatched as soon as they fill (unless
+        ``eager=False``)."""
+        if x.shape[0] < 1:
+            raise ValueError("empty request")
+        plan = (plan if plan is not None else self.session.plan).normalized()
+        key = (plan, labels is not None)
+        group = self._groups.get(key)
+        if group is None:
+            group = self._groups[key] = _Group(plan)
+        ticket = Ticket(self, self._n_submitted, x.shape[0], plan)
+        self._n_submitted += 1
+        self.tickets.append(ticket)
+        group.pending.append(_Pending(ticket, x, labels))
+        if self.eager:
+            while group.queued_rows >= plan.max_batch:
+                self._dispatch(group, plan.max_batch)
+        return ticket
+
+    def flush(self) -> list[Ticket]:
+        """Dispatch every queued row (full buckets first; the ragged tail
+        is the only padded dispatch) and return the tickets resolved by
+        this call."""
+        undone = [t for t in self.tickets if not t.done]
+        for group in self._groups.values():
+            while group.queued_rows:
+                self._dispatch(group, min(group.queued_rows, group.plan.max_batch))
+        return [t for t in undone if t.done]
+
+    # ------------------------------------------------------------ internals
+    def _dispatch(self, group: _Group, rows: int) -> ServeResult:
+        """Serve exactly ``rows`` queued rows of ``group`` as one batch
+        (FIFO, splitting a request across dispatches when needed) and
+        deliver each covered ticket its slice."""
+        xs, ls, segments = [], [], []
+        take = rows
+        while take:
+            p = group.pending[0]
+            c = min(p.remaining, take)
+            xs.append(p.x[p.used:p.used + c])
+            if p.labels is not None:
+                ls.append(p.labels[p.used:p.used + c])
+            segments.append((p.ticket, c))
+            p.used += c
+            take -= c
+            if not p.remaining:
+                group.pending.popleft()
+        x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
+        labels = None if not ls else (ls[0] if len(ls) == 1 else jnp.concatenate(ls, axis=0))
+        result = self.session.serve(x, labels, plan=group.plan)
+        self.dispatches.append(result)
+        off = 0
+        for ticket, c in segments:
+            ticket._deliver(result.sample[off:off + c], result)
+            off += c
+        return result
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def pad_rows(self) -> int:
+        """Replicated (wasted) rows across all dispatches so far."""
+        return sum(r.pad_rows for r in self.dispatches)
+
+    def naive_pad_rows(self) -> int:
+        """Pad rows the same submissions would have wasted as independent
+        per-request ``serve()`` calls — the baseline the coalescing is
+        beating (recorded by benchmarks/bench_scheduler.py)."""
+        total = 0
+        for t in self.tickets:
+            b = t.batch
+            while b > 0:
+                c = min(b, t.plan.max_batch)
+                total += bucket_for(c, max_batch=t.plan.max_batch) - c
+                b -= c
+        return total
+
+    def stats(self) -> dict[str, Any]:
+        queued = sum(g.queued_rows for g in self._groups.values())
+        return {"submitted": self._n_submitted,
+                "submitted_rows": sum(t.batch for t in self.tickets),
+                "queued_rows": queued,
+                "dispatches": len(self.dispatches),
+                "dispatched_rows": sum(sum(c.batch for c in r.chunks) for r in self.dispatches),
+                "pad_rows": self.pad_rows,
+                "plan_groups": len(self._groups),
+                **self.session.stats()}

@@ -1,10 +1,10 @@
 """ServeSession: the stateful front-end of the persistent serving runtime.
 
 One session owns the model (params + config + schedule), a
-:class:`CompiledRunnerCache`, and the serving policy. Each ``serve(x,
-labels)`` call is one request batch; the session
+:class:`CompiledRunnerCache`, and a default :class:`DittoPlan`. Each
+``serve(x, labels)`` call is one request batch; the session
 
-  1. chunks oversized requests to ``max_batch``,
+  1. chunks oversized requests to ``plan.max_batch``,
   2. pads each chunk up to its power-of-two batch bucket
      (:mod:`repro.serve.bucketing` — replication padding, bit-exact),
   3. runs the two-phase Ditto pass (eager calibration + Defo decision,
@@ -12,9 +12,15 @@ labels)`` call is one request batch; the session
      with the shared runner cache, and
   4. slices the sample back to the true batch.
 
+``serve(..., plan=...)`` overrides the session plan for one request while
+still sharing the session's runner cache — the per-request-plan hook the
+continuous-batching scheduler (:mod:`repro.serve.scheduler`) builds on.
 Across a request stream this turns one-XLA-trace-per-batch into
 one-trace-per-(mode-signature, bucket): the first batch of a bucket pays
 trace + compile, every later batch replays the cached runner.
+
+The pre-plan constructor keywords (``steps=``, ``low_bits=``, ...) are a
+deprecated shim that builds the equivalent plan and warns once.
 """
 from __future__ import annotations
 
@@ -24,8 +30,9 @@ from typing import Any
 
 import jax
 
+from ..core.ditto.plan import UNSET, DittoPlan, plan_from_kwargs
 from ..sim import harness
-from .bucketing import DEFAULT_MAX_BATCH, bucket_for
+from .bucketing import bucket_for
 from .cache import CompiledRunnerCache
 
 
@@ -36,9 +43,14 @@ class ChunkResult:
     records: list
     engine: Any
     batch: int
-    bucket: int
+    bucket: int | None  # padded dispatch size; None = eager (unbucketed) chunk
     wall_s: float
     traces_delta: int  # new XLA traces this chunk caused (0 = full cache hit)
+
+    @property
+    def pad_rows(self) -> int:
+        """Wasted (replicated) batch rows this chunk computed."""
+        return 0 if self.bucket is None else self.bucket - self.batch
 
 
 @dataclasses.dataclass
@@ -58,71 +70,73 @@ class ServeResult:
     def traces_delta(self) -> int:
         return sum(c.traces_delta for c in self.chunks)
 
+    @property
+    def pad_rows(self) -> int:
+        return sum(c.pad_rows for c in self.chunks)
+
 
 class ServeSession:
     """Persistent compiled serving runtime for one model.
 
-    Parameters mirror ``sim.harness.serve_records``; ``cache`` may be
-    shared between sessions serving the same model (e.g. one per request
+    ``plan`` is the session's default :class:`DittoPlan`; omitting it
+    means ``DittoPlan()`` — the documented defaults (20-step ddim, defo
+    policy, compiled serving), not an error. ``cache`` may be shared
+    between sessions serving the same model (e.g. one per request
     thread) — the runner key includes the model-config signature, so
-    distinct models never collide. ``low_bits=4`` serves the packed-int4
-    low-tile path and ``fused=True`` the single-pass fused kernel
-    (both bit-identical samples); each is part of the runner key, so
-    sessions differing in either knob never share a trace even when they
-    share one cache.
+    distinct models never collide. ``plan.low_bits=4`` serves the packed-
+    int4 low-tile path and ``plan.fused=True`` the single-pass fused
+    kernel (both bit-identical samples); each is part of the runner key
+    (``plan.cache_sig()``), so plans differing in either knob never share
+    a trace even when they share one cache.
     """
 
-    def __init__(self, params, cfg, sched, *, steps: int, sampler: str = "ddim",
-                 policy: str = "defo", compiled: bool = True,
-                 interpret: bool | None = None, collect_stats: bool = True,
-                 block: int = 128, low_bits: int = 8, fused: bool = False,
-                 max_batch: int = DEFAULT_MAX_BATCH,
-                 cache: CompiledRunnerCache | None = None):
+    def __init__(self, params, cfg, sched, plan: DittoPlan | None = None, *,
+                 cache: CompiledRunnerCache | None = None, steps=UNSET, sampler=UNSET,
+                 policy=UNSET, compiled=UNSET, interpret=UNSET, collect_stats=UNSET,
+                 block=UNSET, low_bits=UNSET, fused=UNSET, max_batch=UNSET):
         self.params = params
         self.cfg = cfg
         self.sched = sched
-        self.steps = steps
-        self.sampler = sampler
-        self.policy = policy
-        self.compiled = compiled
-        self.interpret = interpret
-        self.collect_stats = collect_stats
-        self.block = block
-        self.low_bits = low_bits
-        self.fused = fused
-        self.max_batch = max_batch
+        self.plan = plan_from_kwargs("serve.ServeSession", plan, steps=steps,
+                                     sampler=sampler, policy=policy, compiled=compiled,
+                                     interpret=interpret, collect_stats=collect_stats,
+                                     block=block, low_bits=low_bits, fused=fused,
+                                     max_batch=max_batch)
         self.cache = cache if cache is not None else CompiledRunnerCache()
         self.batches_served = 0
         self.requests_served = 0
 
     # ------------------------------------------------------------------ api
-    def serve(self, x: jax.Array, labels=None) -> ServeResult:
+    def serve(self, x: jax.Array, labels=None, *, plan: DittoPlan | None = None
+              ) -> ServeResult:
         """Serve one request batch; returns the sample at the TRUE batch
-        size plus per-chunk records/engines for the design-point simulator."""
+        size plus per-chunk records/engines for the design-point simulator.
+        ``plan`` overrides the session default for this request only (same
+        shared runner cache)."""
+        plan = self.plan if plan is None else plan
         n = x.shape[0]
         chunks: list[ChunkResult] = []
         samples = []
-        for lo in range(0, n, self.max_batch):
-            hi = min(lo + self.max_batch, n)
+        for lo in range(0, n, plan.max_batch):
+            hi = min(lo + plan.max_batch, n)
             xc = x[lo:hi]
             lc = None if labels is None else labels[lo:hi]
-            chunks.append(self._serve_chunk(xc, lc))
+            chunks.append(self._serve_chunk(xc, lc, plan))
             samples.append(chunks[-1].sample)
         self.batches_served += 1
         self.requests_served += n
         sample = samples[0] if len(samples) == 1 else jax.numpy.concatenate(samples, axis=0)
         return ServeResult(sample=sample, chunks=chunks)
 
-    def _serve_chunk(self, x, labels) -> ChunkResult:
+    def _serve_chunk(self, x, labels, plan: DittoPlan) -> ChunkResult:
         b = x.shape[0]
-        bucket = bucket_for(b, max_batch=self.max_batch) if self.compiled else b
+        # eager chunks run unbucketed (no trace to share) — bucket=None,
+        # so pad accounting and the serve log can't claim a padded dispatch
+        bucket = bucket_for(b, max_batch=plan.max_batch) if plan.compiled else None
         traces0 = self.cache.n_traces
         t0 = time.monotonic()
         records, sample, eng = harness.serve_records(
-            self.params, self.cfg, self.sched, x, labels, steps=self.steps,
-            sampler=self.sampler, policy=self.policy, compiled=self.compiled,
-            interpret=self.interpret, collect_stats=self.collect_stats,
-            block=self.block, low_bits=self.low_bits, fused=self.fused,
+            self.params, self.cfg, self.sched, x, labels, plan,
             runner_cache=self.cache, bucket=bucket,
         )
         jax.block_until_ready(sample)

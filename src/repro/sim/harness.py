@@ -11,6 +11,7 @@ import jax
 
 from ..core import diffusion
 from ..core.ditto import CAMBRICON_D, DIFFY, DITTO_HW, ITC, DittoEngine, make_denoise_fn
+from ..core.ditto.plan import UNSET, DittoPlan, plan_from_kwargs
 from ..nn import dit as dit_mod
 from . import cycles
 
@@ -39,50 +40,54 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
     return eng.records, sample, eng
 
 
-def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: int,
-                  sampler: str = "ddim", policy: str = "defo", compiled: bool = True,
-                  interpret: bool | None = None, collect_stats: bool = True,
-                  block: int = 128, low_bits: int = 8, fused: bool = False,
-                  runner_cache=None, bucket: int | None = None):
+def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels=None,
+                  plan: DittoPlan | None = None, *, runner_cache=None,
+                  bucket: int | None = None, steps=UNSET, sampler=UNSET, policy=UNSET,
+                  compiled=UNSET, interpret=UNSET, collect_stats=UNSET, block=UNSET,
+                  low_bits=UNSET, fused=UNSET):
     """The deployment pass: eager calibration (+ the Defo mode decision
     after step 2), then the remaining steps through the jit-compiled Pallas
     path — act layers on int8_matmul, diff layers on diff_encode ->
     ditto_diff_matmul with on-device tile skipping. Records cover every
     step (compiled steps synthesize records from on-device class fractions
-    unless collect_stats=False) and keep candidate-mode stats — spatial
-    counterfactuals on the calibration steps (collect_oracle) and
+    unless ``plan.collect_stats=False``) and keep candidate-mode stats —
+    spatial counterfactuals on the calibration steps (collect_oracle) and
     temporal/spatial fractions on compiled steps even for act-frozen
     layers — so run_designs can still re-price every design point.
 
+    ``plan`` (a :class:`repro.core.ditto.DittoPlan`) is the whole
+    configuration: sampling loop (``steps``/``sampler``/``policy``),
+    kernel lowering (``block``/``interpret``/``low_bits``/``fused``) and
+    serve behavior (``compiled``/``collect_stats``); omitting it means
+    ``DittoPlan()`` — the documented defaults (20-step ddim, defo,
+    compiled), not an error. The per-knob keywords are a deprecated shim
+    that builds the equivalent plan (and therefore the same runner-cache
+    key).
+
     ``runner_cache`` (a repro.serve.CompiledRunnerCache) makes the compiled
     step persistent across calls: batches whose (cfg, frozen layer modes,
-    steps, bucket) agree replay one shared XLA trace instead of
-    recompiling. ``bucket`` pads the batch dim up to that size by row
+    ``plan.cache_sig()``, bucket) agree replay one shared XLA trace instead
+    of recompiling. ``bucket`` pads the batch dim up to that size by row
     replication before the pass and slices the sample back afterwards —
     bit-identical to the unbucketed path (see repro.serve.bucketing) while
     letting ragged batch sizes share a trace. Records are collected at
     bucket scale (the padded rows are replicas, so per-element fractions
-    are representative; ``macs`` scale with the bucket).
-
-    ``low_bits=4`` executes class-1 diff tiles through the packed-int4
-    kernel branch — bit-identical samples, separate runner-cache key;
-    ``fused=True`` runs diff layers through the single-pass fused kernel
-    (scalar-prefetch DMA skipping, y_prev epilogue) — also bit-identical,
-    also a separate key; ``block`` sets the kernel tile edge (smaller
-    blocks = finer class maps, more skippable/narrowable tiles at toy
-    dims)."""
+    are representative; ``macs`` scale with the bucket)."""
+    plan = plan_from_kwargs("sim.harness.serve_records", plan, steps=steps,
+                            sampler=sampler, policy=policy, compiled=compiled,
+                            interpret=interpret, collect_stats=collect_stats,
+                            block=block, low_bits=low_bits, fused=fused)
     true_b = x_T.shape[0]
     if bucket is not None and bucket != true_b:
         from ..serve import bucketing  # function-level: repro.serve imports sim.harness
 
         x_T, labels = bucketing.pad_batch(x_T, labels, bucket)
-    eng = DittoEngine(policy=policy, collect_oracle=collect_stats)
-    fn = make_denoise_fn(params, cfg, eng, compiled=compiled, interpret=interpret,
-                         collect_stats=collect_stats, block=block, low_bits=low_bits,
-                         fused=fused, runner_cache=runner_cache,
-                         cache_extra=(steps, x_T.shape[0]))
+    eng = DittoEngine(policy=plan.policy, collect_oracle=plan.collect_stats)
+    fn = make_denoise_fn(params, cfg, eng, plan, runner_cache=runner_cache,
+                         bucket=x_T.shape[0])
     eng.begin_sample()
-    sample = diffusion.SAMPLERS[sampler](sched, fn, x_T, steps=steps, labels=labels)
+    sample = diffusion.SAMPLERS[plan.sampler](sched, fn, x_T, steps=plan.steps,
+                                              labels=labels)
     return eng.records, sample[:true_b], eng
 
 

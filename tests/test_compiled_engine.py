@@ -152,8 +152,10 @@ def test_serve_records_compiled_full_loop(setup):
     sane output, full record coverage, diff never costs more BOPs."""
     params, lat, labels = setup
     sched = diffusion.cosine_schedule(100)
+    from repro.core.ditto import DittoPlan
+
     records, out, eng = harness.serve_records(params, CFG, sched, lat, labels,
-                                              steps=5, compiled=True)
+                                              DittoPlan(steps=5))
     assert out.shape == lat.shape
     assert not bool(jnp.isnan(out).any())
     assert any(r.get("compiled") for r in records)

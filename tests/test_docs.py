@@ -1,15 +1,19 @@
 """Docs stay truthful: tools/check_docs.py is part of tier-1.
 
-Every shell command fenced in README.md / docs/*.md must parse and every
-repository path they reference must exist — so the docs cannot silently
-rot as files move (the fast suite runs the same lint up front, see
-tools/fast_tests.py).
+Every shell command fenced in README.md / docs/*.md must parse, every
+repository path they reference must exist, and no doc or example shows
+the deprecated pre-DittoPlan call style — so the docs cannot silently
+rot as files move or APIs migrate (the fast suite runs the same lint up
+front, see tools/fast_tests.py).
 """
 import os
 import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import check_docs  # noqa: E402
 
 
 def test_docs_lint_clean():
@@ -18,3 +22,28 @@ def test_docs_lint_clean():
         cwd=ROOT, capture_output=True, text=True,
     )
     assert proc.returncode == 0, f"docs lint failed:\n{proc.stderr}\n{proc.stdout}"
+
+
+def test_deprecated_api_lint_flags_legacy_calls():
+    """The lint's own contract: legacy splatted kwargs inside a shimmed
+    call are flagged; plan-style calls (even multi-line, even with kwargs
+    inside the DittoPlan construction) are not."""
+    legacy = "sess = ServeSession(params, cfg, sched, steps=8, low_bits=4)\n"
+    errs = check_docs.deprecated_api_errors("x.py", legacy)
+    assert len(errs) == 1 and "low_bits=" in errs[0] and "steps=" in errs[0]
+    multiline = ("records, out, eng = harness.serve_records(\n"
+                 "    params, cfg, sched, x, labels,\n"
+                 "    steps=8, policy='defo')\n")
+    assert check_docs.deprecated_api_errors("x.py", multiline)
+    plan_style = ("plan = DittoPlan(steps=8, low_bits=4, max_batch=4)\n"
+                  "sess = ServeSession(params, cfg, sched, plan)\n"
+                  "sess2 = ServeSession(params, cfg, sched,\n"
+                  "                     DittoPlan(steps=8, fused=True), cache=cache)\n")
+    assert check_docs.deprecated_api_errors("x.py", plan_style) == []
+    # nested parenthesized expressions inside the plan construction are
+    # still the new style — the balanced-paren strip must not stop early
+    nested = "s = ServeSession(p, c, n, DittoPlan(steps=max(s, 4), low_bits=4))\n"
+    assert check_docs.deprecated_api_errors("x.py", nested) == []
+    # non-shimmed calls with the same kwarg names are none of our business
+    other = "plan.replace(steps=9); bucket_for(3, max_batch=4)\n"
+    assert check_docs.deprecated_api_errors("x.py", other) == []

@@ -1,0 +1,172 @@
+"""DittoPlan: the one authoritative execution-configuration object.
+
+Contracts under test:
+
+  * validation happens once, at construction (bad low_bits / block /
+    steps / sampler / policy raise ValueError immediately);
+  * cache_sig() is exactly the trace identity: kernel-lowering fields and
+    steps change it, loop-level fields don't, and interpret=None equals
+    its resolved value;
+  * the deprecation shims: legacy splatted-kwarg calls to
+    make_denoise_fn / serve_records / ServeSession still work
+    BIT-IDENTICALLY to the plan style, warn exactly once per call site,
+    and refuse plan+kwargs mixtures.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diffusion
+from repro.core.ditto import DittoEngine, DittoPlan, EAGER_PLAN, make_denoise_fn
+from repro.core.ditto import plan as plan_mod
+from repro.kernels.common import resolve_interpret
+from repro.nn import dit as dit_mod
+from repro.serve import ServeSession
+from repro.sim import harness
+
+CFG = dit_mod.DiTCfg(d_model=64, n_layers=2, n_heads=2, patch=2, in_channels=4,
+                     input_size=8, n_classes=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init(key, CFG)
+    sched = diffusion.cosine_schedule(100)
+    lat = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, 4))
+    labels = jnp.array([0, 1])
+    return params, sched, lat, labels
+
+
+# ------------------------------------------------------------- validation
+def test_plan_validates_at_construction():
+    with pytest.raises(ValueError):
+        DittoPlan(low_bits=2)
+    with pytest.raises(ValueError):
+        DittoPlan(block=0)
+    with pytest.raises(ValueError):
+        DittoPlan(steps=0)
+    with pytest.raises(ValueError):
+        DittoPlan(max_batch=0)
+    with pytest.raises(ValueError):
+        DittoPlan(sampler="euler")
+    with pytest.raises(ValueError):
+        DittoPlan(policy="random")
+    # replace() re-validates
+    with pytest.raises(ValueError):
+        DittoPlan().replace(low_bits=16)
+
+
+def test_plan_frozen_and_hashable():
+    p = DittoPlan(steps=8, low_bits=4)
+    assert p == DittoPlan(steps=8, low_bits=4)
+    assert hash(p) == hash(DittoPlan(steps=8, low_bits=4))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.steps = 9
+    assert EAGER_PLAN.compiled is False
+
+
+# ------------------------------------------------------------- cache_sig
+def test_cache_sig_is_the_trace_identity():
+    base = DittoPlan(steps=8)
+    # kernel-lowering fields (and steps) change the signature ...
+    for kw in (dict(block=64), dict(low_bits=4), dict(fused=True),
+               dict(collect_stats=False), dict(steps=9)):
+        assert base.replace(**kw).cache_sig() != base.cache_sig(), kw
+    # ... loop-level fields don't
+    for kw in (dict(sampler="plms"), dict(policy="diff"), dict(compiled=False),
+               dict(max_batch=2)):
+        assert base.replace(**kw).cache_sig() == base.cache_sig(), kw
+    # interpret=None means its backend-resolved value, not a third state
+    assert base.cache_sig() == \
+        base.replace(interpret=resolve_interpret(None)).cache_sig()
+    assert base.normalized().interpret == resolve_interpret(None)
+
+
+def test_kernel_blk_matches_ops_contract():
+    blk = DittoPlan(block=64, low_bits=4, fused=True).kernel_blk()
+    assert blk == dict(bm=64, bn=64, bk=64, interpret=None, low_bits=4, fused=True)
+
+
+# ----------------------------------------------------------------- shims
+def test_shim_warns_once_per_site(setup):
+    params, sched, lat, labels = setup
+    plan_mod.reset_deprecation_warnings()
+    eng = DittoEngine(policy="diff")
+    with pytest.warns(DeprecationWarning, match="make_denoise_fn"):
+        make_denoise_fn(params, CFG, eng, compiled=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # second call: silent
+        make_denoise_fn(params, CFG, eng, compiled=True)
+    # a DIFFERENT site still gets its one warning
+    with pytest.warns(DeprecationWarning, match="ServeSession"):
+        ServeSession(params, CFG, sched, steps=3)
+
+
+def test_shim_rejects_plan_plus_kwargs(setup):
+    params, sched, lat, labels = setup
+    with pytest.raises(TypeError, match="not both"):
+        ServeSession(params, CFG, sched, DittoPlan(steps=3), steps=4)
+    with pytest.raises(TypeError, match="not both"):
+        harness.serve_records(params, CFG, sched, lat, labels, DittoPlan(steps=3),
+                              steps=4)
+
+
+def test_plan_default_is_eager_for_make_denoise_fn(setup):
+    """Bare make_denoise_fn keeps its historical eager default; the legacy
+    kwarg style keeps its compiled=False default too."""
+    params, sched, lat, labels = setup
+    eng = DittoEngine(policy="diff")
+    fn = make_denoise_fn(params, CFG, eng)  # no plan, no kwargs: eager
+    eng.begin_sample()
+    out = diffusion.ddim_sample(sched, fn, lat, steps=3, labels=labels)
+    assert not any(r.get("compiled") for r in eng.records)
+    # legacy kwargs WITHOUT compiled= must stay eager as well
+    eng2 = DittoEngine(policy="diff")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fn2 = make_denoise_fn(params, CFG, eng2, collect_stats=True)
+    eng2.begin_sample()
+    out2 = diffusion.ddim_sample(sched, fn2, lat, steps=3, labels=labels)
+    assert not any(r.get("compiled") for r in eng2.records)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+@pytest.mark.slow
+def test_legacy_serve_records_bitidentical(setup):
+    """Old-style serve_records == plan-style serve_records, bit-for-bit
+    (and through the same engine/record schema)."""
+    params, sched, lat, labels = setup
+    plan = DittoPlan(steps=4, policy="defo", low_bits=4)
+    rec_new, out_new, _ = harness.serve_records(params, CFG, sched, lat, labels, plan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rec_old, out_old, _ = harness.serve_records(
+            params, CFG, sched, lat, labels, steps=4, policy="defo", low_bits=4)
+    np.testing.assert_array_equal(np.asarray(out_new), np.asarray(out_old))
+    assert [r["mode"] for r in rec_new] == [r["mode"] for r in rec_old]
+
+
+@pytest.mark.slow
+def test_legacy_session_bitidentical_and_shares_traces(setup):
+    """Old-style ServeSession == plan-style ServeSession bit-for-bit, and
+    both styles sharing one cache produce NO duplicate runner."""
+    from repro.serve import CompiledRunnerCache
+
+    params, sched, lat, labels = setup
+    cache = CompiledRunnerCache()
+    plan = DittoPlan(steps=3, policy="diff", max_batch=4, collect_stats=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess_old = ServeSession(params, CFG, sched, steps=3, policy="diff",
+                                max_batch=4, collect_stats=False, cache=cache)
+    sess_new = ServeSession(params, CFG, sched, plan, cache=cache)
+    out_old = sess_old.serve(lat, labels)
+    out_new = sess_new.serve(lat, labels)
+    np.testing.assert_array_equal(np.asarray(out_old.sample), np.asarray(out_new.sample))
+    st = cache.stats()
+    assert st["runners"] == 1 and st["traces"] == 1, st  # no migration duplication

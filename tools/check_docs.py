@@ -1,5 +1,6 @@
 #!/usr/bin/env python
-"""Docs lint: fenced shell commands must parse, referenced paths must exist.
+"""Docs lint: fenced shell commands must parse, referenced paths must exist,
+and no doc or example teaches the deprecated serving call style.
 
 Scans README.md and every markdown file under docs/ for
 
@@ -11,6 +12,13 @@ Scans README.md and every markdown file under docs/ for
     extension) must exist. Paths with a directory component are resolved
     against the repo root, ``src/`` and ``src/repro/``; bare filenames
     must match somewhere in the tree (typo catcher).
+
+Additionally scans the docs AND ``examples/*.py`` for the pre-DittoPlan
+call style: ``ServeSession`` / ``serve_records`` / ``make_denoise_fn`` /
+``make_step_fn`` invoked with splatted config kwargs (``steps=``,
+``low_bits=``, ...) instead of a plan. The shims keep old code running,
+but anything we SHOW people must model the plan API — kwargs inside a
+``DittoPlan(...)`` construction are of course fine.
 
 Exit code 0 = clean. Run standalone or via tools/fast_tests.py (which
 runs it before the pytest fast suite); tests/test_docs.py keeps it in
@@ -31,6 +39,70 @@ KNOWN_EXTS = (".py", ".md", ".json", ".ini", ".txt", ".sh", ".toml", ".yaml", ".
 # plausible repo-path token: no spaces/quotes/shell syntax/templating
 _TOKEN_RE = re.compile(r"^[A-Za-z0-9_.\-/*]+$")
 _SPAN_RE = re.compile(r"`([^`\n]+)`")
+
+
+# ------------------------------------------------- deprecated-API lint
+# entry points that grew DittoPlan shims in the api_redesign PR; showing
+# their legacy splatted-kwarg style in docs/examples re-teaches dead API
+_SHIMMED_CALLS = ("ServeSession", "serve_records", "make_denoise_fn", "make_step_fn")
+_DEPRECATED_KWARGS = ("steps", "sampler", "policy", "compiled", "interpret",
+                      "collect_stats", "block", "low_bits", "fused", "max_batch",
+                      "cache_extra")
+
+
+def _call_spans(text: str, name: str):
+    """Yield (1-based line, balanced-paren argument text) per ``name(...)``."""
+    for m in re.finditer(rf"\b{name}\s*\(", text):
+        depth = 0
+        start = m.end() - 1
+        for j in range(start, len(text)):
+            if text[j] == "(":
+                depth += 1
+            elif text[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    yield text.count("\n", 0, m.start()) + 1, text[start + 1:j]
+                    break
+
+
+def _strip_plan_calls(args: str) -> str:
+    """Blank out every (balanced) ``DittoPlan(...)`` span inside ``args`` —
+    kwargs in a plan construction ARE the new style, including nested
+    parenthesized expressions like ``DittoPlan(steps=max(s, 4))``."""
+    out = args
+    for m in re.finditer(r"\bDittoPlan\s*\(", args):
+        depth = 0
+        for j in range(m.end() - 1, len(args)):
+            if args[j] == "(":
+                depth += 1
+            elif args[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    out = out[:m.end()] + " " * (j - m.end()) + out[j:]
+                    break
+    return out
+
+
+def deprecated_api_errors(rel: str, text: str) -> list[str]:
+    errors = []
+    for name in _SHIMMED_CALLS:
+        for lineno, args in _call_spans(text, name):
+            stripped = _strip_plan_calls(args)
+            bad = sorted(kw for kw in _DEPRECATED_KWARGS
+                         if re.search(rf"\b{kw}\s*=", stripped))
+            if bad:
+                errors.append(
+                    f"{rel}:{lineno}: deprecated splatted-kwarg call style "
+                    f"{name}({', '.join(k + '=' for k in bad)}...) — "
+                    f"construct a DittoPlan and pass plan= instead")
+    return errors
+
+
+def example_files() -> list[str]:
+    ex = os.path.join(ROOT, "examples")
+    if not os.path.isdir(ex):
+        return []
+    return [os.path.join(ex, n) for n in sorted(os.listdir(ex)) if n.endswith(".py")]
 
 
 def doc_files() -> list[str]:
@@ -127,6 +199,10 @@ def main(argv=None) -> int:
     errors: list[str] = []
     for path in files:
         errors.extend(check_file(path, basenames, verbose=verbose))
+    # deprecated-API lint covers the docs and every example script
+    for path in files + example_files():
+        with open(path) as f:
+            errors.extend(deprecated_api_errors(os.path.relpath(path, ROOT), f.read()))
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     n_files = len(files)
