@@ -1,0 +1,40 @@
+"""Static-analysis subsystem behind ``tools/dittolint.py``.
+
+Two pass families guard the serving stack's central invariant — a
+:class:`~repro.core.ditto.DittoPlan` IS a trace identity:
+
+* :mod:`.trace_audit` proves both directions of ``cache_sig() ⇔ jaxpr``
+  abstractly (``jax.make_jaxpr`` over shape structs, no kernel runs);
+* :mod:`.kernel_contract`, :mod:`.trace_leak` and :mod:`.repo_rules` are
+  pure-AST rules over the kernels package, the plan-threading boundary
+  and repo hygiene (bench registration, pytest markers).
+
+Everything reports through :mod:`.findings` — one Finding/report/baseline
+format shared with ``tools/check_docs.py``.
+
+The AST passes import no JAX; :mod:`.trace_audit` defers its JAX imports
+to call time so ``--ast-only`` runs stay import-light.
+"""
+from .findings import (
+    Finding,
+    apply_baseline,
+    load_baseline,
+    render_report,
+    report_json,
+    write_baseline,
+)
+from .kernel_contract import check_kernels
+from .repo_rules import check_repo_rules
+from .trace_leak import check_trace_leaks
+
+__all__ = [
+    "Finding",
+    "apply_baseline",
+    "check_kernels",
+    "check_repo_rules",
+    "check_trace_leaks",
+    "load_baseline",
+    "render_report",
+    "report_json",
+    "write_baseline",
+]

@@ -1,0 +1,317 @@
+"""Kernel-contract lint: AST rules over ``src/repro/kernels/``.
+
+The kernels package repeats five contracts that nothing used to check
+mechanically — each is a rule here, each was once a real drift vector:
+
+``kernel-resolve-interpret``
+    Every public function with an ``interpret`` parameter must resolve it
+    through :func:`repro.kernels.common.resolve_interpret` (directly, or
+    by forwarding ``interpret=`` to a public function that does). A
+    wrapper that branches on raw ``interpret is None`` re-implements the
+    backend auto-detection and can disagree with the cache key.
+
+``kernel-validate-low-bits``
+    Every public function with a ``low_bits`` parameter must call
+    ``validate_low_bits`` (or forward to one that does) — a bare
+    ``assert`` disappears under ``python -O`` and an unchecked value
+    silently takes the int8 branch.
+
+``kernel-pad2-boundary``
+    Public functions in the unpadded-operand boundary modules (``ops.py``)
+    that call a Pallas-kernel entry (any function that itself calls
+    ``pl.pallas_call``) must route operands through ``pad2`` — or
+    delegate to a public boundary function that does. Raw kernels assert
+    divisibility; the boundary is where the 128-pad contract is honored.
+
+``kernel-block-default-128``
+    Default values of ``bm``/``bn``/``bk`` tile parameters must be
+    multiples of 128 (the documented MXU/pad contract). Callers may pass
+    smaller tiles explicitly (tests do); defaults must not drift.
+
+``kernel-indexmap-pure``
+    ``pl.BlockSpec`` index maps must be pure index arithmetic: no calls
+    into imported modules (``jnp``/``jax``/...), no calls except local
+    helper functions (recursively checked), and no captures of array
+    operands (parameters annotated ``jax.Array``) or module-level data —
+    only their own parameters (grid indices + prefetch scalars) and
+    static closure ints. An index map that touches a traced array would
+    silently change what the cache key claims was lowered.
+
+``kernel-all-drift``
+    Where ``__all__`` exists, it must list every public name the module
+    defines, and every entry must resolve to a defined or imported name.
+    In ``__init__.py`` every ``from X import ...`` binding must be listed
+    too — the package namespace IS the public API surface.
+
+``check_kernels`` runs everything over a package directory and returns
+:class:`~repro.analysis.findings.Finding`s; per-rule entry points take a
+parsed module so the self-tests can feed fixture snippets.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from . import astutil
+from .findings import Finding
+
+#: modules that take UNPADDED operands and must route through pad2
+PAD_BOUNDARY_MODULES = ("ops.py",)
+
+_INDEXMAP_CALL_ALLOW = {"divmod", "min", "max", "int"}
+
+
+# --------------------------------------------------------------- module info
+class ModuleInfo:
+    """Per-module facts the package-level fixpoint rules consume."""
+
+    def __init__(self, rel: str, tree: ast.Module):
+        self.rel = rel
+        self.tree = tree
+        #: every def in the module, nested ones included — index maps and
+        #: their helpers usually live inside the kernel wrapper's body
+        self.functions = {n.name: n for n in ast.walk(tree)
+                          if isinstance(n, ast.FunctionDef)}
+        self._top = astutil.all_functions(tree)
+
+    def public(self) -> list[ast.FunctionDef]:
+        """Top-level public defs — the module's API surface."""
+        return [f for f in self._top if not f.name.startswith("_")]
+
+
+def load_package(pkg_dir: str, repo_root: str) -> list[ModuleInfo]:
+    mods = []
+    for name in sorted(os.listdir(pkg_dir)):
+        if not name.endswith(".py"):
+            continue
+        path = os.path.join(pkg_dir, name)
+        rel = os.path.relpath(path, repo_root)
+        mods.append(ModuleInfo(rel, astutil.parse_module(path)))
+    return mods
+
+
+# ------------------------------------------------- resolver/validator routing
+def _forwards_param(fn: ast.FunctionDef, param: str) -> list[str]:
+    """Last-segment names of callees that receive ``param=<...param...>``."""
+    out = []
+    for call in astutil.calls_in(fn):
+        for kw in call.keywords:
+            if kw.arg == param and any(
+                isinstance(n, ast.Name) and n.id == param for n in ast.walk(kw.value)
+            ):
+                name = astutil.call_name(call)
+                if name:
+                    out.append(name.rsplit(".", 1)[-1])
+    return out
+
+
+def check_param_routing(mods: list[ModuleInfo], param: str, resolver: str,
+                        rule: str) -> list[Finding]:
+    """Fixpoint: a public fn with ``param`` satisfies the contract iff it
+    calls ``resolver`` or forwards ``param=`` to a satisfying function."""
+    targets = [(m, f) for m in mods for f in m.public()
+               if param in astutil.function_param_names(f) and f.name != resolver]
+    satisfied = {f.name for m, f in targets if resolver in astutil.called_names(f)}
+    # any function anywhere that calls the resolver can absorb a forward
+    satisfied |= {f.name for m in mods for f in m.functions.values()
+                  if resolver in astutil.called_names(f)}
+    changed = True
+    while changed:
+        changed = False
+        for m, f in targets:
+            if f.name in satisfied:
+                continue
+            if any(callee in satisfied for callee in _forwards_param(f, param)):
+                satisfied.add(f.name)
+                changed = True
+    return [
+        Finding(rule, m.rel, f.name,
+                f"public kernel wrapper '{f.name}' takes {param}= but never routes it "
+                f"through {resolver}() (directly or via a delegate)", f.lineno)
+        for m, f in targets if f.name not in satisfied
+    ]
+
+
+# ------------------------------------------------------------- pad2 boundary
+def pallas_entry_names(mods: list[ModuleInfo]) -> set[str]:
+    """Functions that call ``pl.pallas_call`` directly (raw kernel entries)."""
+    return {f.name for m in mods for f in m.functions.values()
+            if "pallas_call" in astutil.called_names(f)}
+
+
+def check_pad_boundary(mods: list[ModuleInfo]) -> list[Finding]:
+    entries = pallas_entry_names(mods)
+    boundary = [m for m in mods if os.path.basename(m.rel) in PAD_BOUNDARY_MODULES]
+    findings = []
+    # fixpoint over delegation: a boundary fn is padded if it calls pad2,
+    # or only reaches kernels through padded public boundary functions
+    padded = {f.name for m in boundary for f in m.public()
+              if "pad2" in astutil.called_names(f)}
+    for m in boundary:
+        for f in m.public():
+            called = astutil.called_names(f)
+            if not (called & entries):
+                continue  # never touches a raw kernel — nothing to pad
+            if f.name in padded:
+                continue
+            findings.append(Finding(
+                "kernel-pad2-boundary", m.rel, f.name,
+                f"'{f.name}' hands operands to a Pallas kernel "
+                f"({sorted(called & entries)}) without pad2() — the 128-pad "
+                f"contract lives at this boundary", f.lineno))
+    return findings
+
+
+# --------------------------------------------------------- block defaults
+def check_block_defaults(mod: ModuleInfo) -> list[Finding]:
+    findings = []
+    for f in mod.functions.values():
+        a = f.args
+        pairs = list(zip(a.args[len(a.args) - len(a.defaults):], a.defaults))
+        pairs += [(p, d) for p, d in zip(a.kwonlyargs, a.kw_defaults) if d is not None]
+        for p, d in pairs:
+            if p.arg in ("bm", "bn", "bk") and isinstance(d, ast.Constant) \
+                    and isinstance(d.value, int) and d.value % 128 != 0:
+                findings.append(Finding(
+                    "kernel-block-default-128", mod.rel, f"{f.name}.{p.arg}",
+                    f"'{f.name}' defaults {p.arg}={d.value}, not a multiple of 128 "
+                    f"(the documented tile/pad contract)", d.lineno))
+    return findings
+
+
+# --------------------------------------------------------- index-map purity
+def _blockspec_index_maps(mod: ModuleInfo):
+    """Yield (index_map expr, enclosing line) for every pl.BlockSpec call."""
+    for call in astutil.calls_in(mod.tree):
+        name = astutil.call_name(call)
+        if not name or name.rsplit(".", 1)[-1] != "BlockSpec":
+            continue
+        imap = None
+        if len(call.args) >= 2:
+            imap = call.args[1]
+        for kw in call.keywords:
+            if kw.arg == "index_map":
+                imap = kw.value
+        if imap is not None:
+            yield imap, call.lineno
+
+
+def _array_param_names(mod: ModuleInfo) -> set[str]:
+    """Parameters annotated as arrays anywhere in the module — values an
+    index map must never capture."""
+    names: set[str] = set()
+    for f in mod.functions.values():
+        for p in f.args.posonlyargs + f.args.args + f.args.kwonlyargs:
+            if p.annotation is not None and "Array" in ast.unparse(p.annotation):
+                names.add(p.arg)
+    return names
+
+
+def _check_indexmap_body(mod: ModuleInfo, fn, line: int, array_params: set[str],
+                         module_data: dict[str, int], banned_roots: set[str],
+                         seen: set[str]) -> list[Finding]:
+    findings = []
+    params = set(astutil.function_param_names(fn))
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    label = getattr(fn, "name", "<lambda>")
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                cname = astutil.call_name(node)
+                root = astutil.root_name(node.func)
+                if root in banned_roots:
+                    findings.append(Finding(
+                        "kernel-indexmap-pure", mod.rel, f"{label}@{line}",
+                        f"BlockSpec index map calls into module '{root}' "
+                        f"({cname}) — index maps must be pure index arithmetic",
+                        node.lineno))
+                elif cname and cname in mod.functions:
+                    if cname not in seen:  # recurse into local helpers once
+                        seen.add(cname)
+                        findings += _check_indexmap_body(
+                            mod, mod.functions[cname], line, array_params,
+                            module_data, banned_roots, seen)
+                elif cname and cname.rsplit(".", 1)[-1] not in _INDEXMAP_CALL_ALLOW \
+                        and root not in params:
+                    findings.append(Finding(
+                        "kernel-indexmap-pure", mod.rel, f"{label}@{line}",
+                        f"BlockSpec index map calls '{cname}', which is neither a "
+                        f"local helper nor pure index arithmetic", node.lineno))
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                if node.id in params:
+                    continue
+                if node.id in array_params:
+                    findings.append(Finding(
+                        "kernel-indexmap-pure", mod.rel, f"{label}@{line}",
+                        f"BlockSpec index map captures array operand '{node.id}' — "
+                        f"only grid indices, prefetch scalars and static ints may "
+                        f"flow into an index map", node.lineno))
+                elif node.id in module_data:
+                    findings.append(Finding(
+                        "kernel-indexmap-pure", mod.rel, f"{label}@{line}",
+                        f"BlockSpec index map reads module-level value '{node.id}'",
+                        node.lineno))
+    return findings
+
+
+def check_indexmap_purity(mod: ModuleInfo) -> list[Finding]:
+    findings = []
+    array_params = _array_param_names(mod)
+    module_data = astutil.module_data_bindings(mod.tree)
+    banned_roots = astutil.imported_names(mod.tree)
+    for imap, line in _blockspec_index_maps(mod):
+        if isinstance(imap, ast.Lambda):
+            findings += _check_indexmap_body(mod, imap, line, array_params,
+                                             module_data, banned_roots, set())
+        elif isinstance(imap, ast.Name) and imap.id in mod.functions:
+            findings += _check_indexmap_body(mod, mod.functions[imap.id], line,
+                                             array_params, module_data, banned_roots,
+                                             {imap.id})
+    return findings
+
+
+# ---------------------------------------------------------------- __all__
+def check_all_drift(mod: ModuleInfo, *, is_init: bool | None = None) -> list[Finding]:
+    names, line = astutil.module_all(mod.tree)
+    if names is None:
+        return []
+    if is_init is None:
+        is_init = os.path.basename(mod.rel) == "__init__.py"
+    findings = []
+    listed = set(names)
+    defined = astutil.defined_public_names(mod.tree)
+    imported = astutil.imported_names(mod.tree)
+    for missing in sorted(defined - listed):
+        findings.append(Finding(
+            "kernel-all-drift", mod.rel, missing,
+            f"public name '{missing}' is defined but missing from __all__", line))
+    for ghost in sorted(listed - defined - imported):
+        findings.append(Finding(
+            "kernel-all-drift", mod.rel, ghost,
+            f"__all__ lists '{ghost}', which the module neither defines nor imports",
+            line))
+    if is_init:
+        reexports = {n for n in astutil.imported_from_names(mod.tree)
+                     if not n.startswith("_")}
+        for missing in sorted(reexports - listed):
+            findings.append(Finding(
+                "kernel-all-drift", mod.rel, missing,
+                f"__init__ imports '{missing}' but __all__ does not re-export it",
+                line))
+    return findings
+
+
+# ------------------------------------------------------------------ driver
+def check_kernels(repo_root: str, pkg: str = "src/repro/kernels") -> list[Finding]:
+    mods = load_package(os.path.join(repo_root, pkg), repo_root)
+    findings: list[Finding] = []
+    findings += check_param_routing(mods, "interpret", "resolve_interpret",
+                                    "kernel-resolve-interpret")
+    findings += check_param_routing(mods, "low_bits", "validate_low_bits",
+                                    "kernel-validate-low-bits")
+    findings += check_pad_boundary(mods)
+    for m in mods:
+        findings += check_block_defaults(m)
+        findings += check_indexmap_purity(m)
+        findings += check_all_drift(m)
+    return findings

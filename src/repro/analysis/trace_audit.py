@@ -1,0 +1,301 @@
+"""Trace-identity audit: prove ``cache_sig()`` ⇔ jaxpr identity, abstractly.
+
+``RunnerKey = (cfg_sig, mode_sig, plan.cache_sig(), bucket)`` — the whole
+serving cache hangs on ``cache_sig()`` being exactly the set of plan
+fields that select a distinct lowering. Two failure modes, one per
+direction:
+
+* **stale trace** — a knob changes the jaxpr but not the sig. Two plans
+  collide on one cache entry and the second silently runs the first
+  plan's computation (wrong results, no error).
+* **trace duplication** — a sig field has no jaxpr effect. Identical
+  computations get distinct cache entries and re-pay the multi-second
+  trace/compile cost the cache exists to amortize.
+
+This module checks both directions without executing a single kernel:
+every step function is built with :func:`make_step_fn` and traced with
+``jax.make_jaxpr`` over ``jax.ShapeDtypeStruct`` inputs (weights are
+never materialized; the temporal-state pytree is bootstrapped with
+``jax.eval_shape``). The canonicalized jaxpr text is hashed into a
+fingerprint; within an audit group (same cfg, modes, bucket):
+
+  equal sig, different fingerprint  -> ``trace-stale`` finding
+  different sig, equal fingerprint  -> ``trace-dup`` finding, unless an
+                                       explicit shared-trace allowlist
+                                       entry covers the pair
+
+The allowlist (``# dittolint: shared-trace``) records pairs that are
+*known and intended* to share a lowering — today only ``fused=True``
+plans differing in ``low_bits``, because the fused kernel always executes
+class-1 tiles from its int4-packed Δ-cache, so ``low_bits`` genuinely
+does not select a lowering there. Keeping ``low_bits`` in the sig is
+still correct (it selects distinct two-pass lowerings); the allowlist
+scopes the exception instead of widening the invariant.
+
+The dup direction is only asserted in all-``diff`` mode groups: in an
+all-``act`` group every diff-path knob is validated-then-ignored by
+design (``int8_act_matmul`` has no Δ operand), so "same jaxpr" there says
+nothing about whether the field earns its place in the sig.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+
+from .findings import Finding
+
+#: where sig/jaxpr mismatches anchor — the sig definition is the defect site
+PLAN_PATH = "src/repro/core/ditto/plan.py"
+
+
+# ------------------------------------------------------------- fingerprints
+def canonical_fingerprint(jaxpr) -> str:
+    """Hash of the jaxpr text with memory addresses canonicalized out.
+
+    ``str(jaxpr)`` embeds ``0x...`` ids for callables closed over by
+    custom primitives (pallas kernel functions); two traces of the same
+    computation differ only there. Everything else — primitive sequence,
+    shapes, dtypes, params — is deterministic within a process.
+    """
+    s = re.sub(r"0x[0-9a-fA-F]+", "0xX", str(jaxpr))
+    return hashlib.sha256(s.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCase:
+    """One audited point: a labelled (sig, jaxpr-fingerprint) pair.
+
+    ``plan`` rides along (not compared) so allowlist predicates can ask
+    *why* two cases were expected to share a trace.
+    """
+    label: str
+    sig: tuple
+    fingerprint: str
+    plan: object = None
+
+
+# -------------------------------------------------------- shared-trace list
+def _differing_fields(pa, pb) -> set[str]:
+    fields = {f.name for f in dataclasses.fields(pa)} if dataclasses.is_dataclass(pa) \
+        else set(vars(pa))
+    return {f for f in fields if getattr(pa, f) != getattr(pb, f, object())}
+
+
+def _fused_low_bits(pa, pb) -> bool:
+    """fused=True plans differing only in ``low_bits`` share one lowering:
+    the fused kernel's Δ-cache IS int4-packed storage, both settings
+    execute class-1 tiles from it identically."""
+    if pa is None or pb is None:
+        return False
+    if not (getattr(pa, "fused", False) and getattr(pb, "fused", False)):
+        return False
+    return _differing_fields(pa, pb) == {"low_bits"}
+
+
+#: # dittolint: shared-trace — (name, predicate(plan_a, plan_b)) entries.
+#: A pair matching any predicate may share a jaxpr despite distinct sigs.
+SHARED_TRACE_ALLOWLIST: tuple = (
+    ("fused-low-bits", _fused_low_bits),
+)
+
+
+# ------------------------------------------------------------------- audit
+def audit_cases(cases: list[TraceCase], *, group: str = "", check_dup: bool = True,
+                allowlist=SHARED_TRACE_ALLOWLIST) -> list[Finding]:
+    """Pairwise both-direction check over one audit group."""
+    findings = []
+    for i, a in enumerate(cases):
+        for b in cases[i + 1:]:
+            if a.sig == b.sig and a.fingerprint != b.fingerprint:
+                findings.append(Finding(
+                    "trace-stale", PLAN_PATH, f"{group}:{a.label}~{b.label}",
+                    f"[{group}] plans '{a.label}' and '{b.label}' share "
+                    f"cache_sig() but lower to different jaxprs — the second "
+                    f"to arrive would silently replay the first's trace; some "
+                    f"knob distinguishing them is missing from cache_sig()"))
+            elif a.sig != b.sig and a.fingerprint == b.fingerprint and check_dup:
+                allowed = next((name for name, pred in allowlist
+                                if pred(a.plan, b.plan)), None)
+                if allowed is None:
+                    findings.append(Finding(
+                        "trace-dup", PLAN_PATH, f"{group}:{a.label}~{b.label}",
+                        f"[{group}] plans '{a.label}' and '{b.label}' have "
+                        f"distinct cache_sig() but identical jaxprs — a sig "
+                        f"field with no lowering effect duplicates traces and "
+                        f"re-pays compilation (add a shared-trace allowlist "
+                        f"entry only if the sharing is intended)"))
+    return findings
+
+
+# -------------------------------------------- abstract DiT inputs (no data)
+def _layer_names(cfg):
+    linear = []
+    for i in range(cfg.n_layers):
+        b = f"blk{i}"
+        linear += [f"{b}.mod", f"{b}.wq", f"{b}.wk", f"{b}.wv", f"{b}.wo",
+                   f"{b}.wi", f"{b}.wd"]
+    linear.append("final.out")
+    attn = [f"blk{i}.{s}" for i in range(cfg.n_layers) for s in ("qk", "pv")]
+    return linear, attn
+
+
+def abstract_inputs(cfg, batch: int):
+    """ShapeDtypeStruct pytrees for one step: (dparams, mparams, latents,
+    t, labels). Weight values never exist — ``init`` runs under
+    ``eval_shape`` and the per-layer Ditto params are written directly as
+    shape structs mirroring what ``DittoEngine.register_*`` produces."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.nn import dit as dit_mod
+
+    S = jax.ShapeDtypeStruct
+    mparams = jax.eval_shape(lambda k: dit_mod.init(k, cfg), jax.random.PRNGKey(0))
+    d, tok, hid = cfg.d_model, cfg.n_tokens, int(cfg.mlp_ratio * cfg.d_model)
+    rows_tok = batch * tok
+    dims = {"mod": (d, 6 * d, batch), "wq": (d, d, rows_tok), "wk": (d, d, rows_tok),
+            "wv": (d, d, rows_tok), "wo": (d, d, rows_tok), "wi": (d, hid, rows_tok),
+            "wd": (hid, d, rows_tok), "out": (d, cfg.patch_dim, rows_tok)}
+
+    def lin_p(k, n, rows):
+        return dict(w_q=S((k, n), jnp.int8), w_scale=S((n,), jnp.float32),
+                    bias=S((n,), jnp.float32), x_scale=S((rows, 1), jnp.float32))
+
+    linear, attn = _layer_names(cfg)
+    dparams = {nm: lin_p(*dims[nm.split(".")[-1]]) for nm in linear}
+    bh = batch * cfg.n_heads
+    for nm in attn:
+        dparams[nm] = dict(a_scale=S((bh, 1, 1), jnp.float32),
+                           b_scale=S((bh, 1, 1), jnp.float32))
+    lat = S((batch, cfg.input_size, cfg.input_size, cfg.in_channels), jnp.float32)
+    t = S((batch,), jnp.float32)
+    labels = S((batch,), jnp.int32)
+    return dparams, mparams, lat, t, labels
+
+
+def uniform_modes(cfg, mode: str) -> dict[str, str]:
+    linear, attn = _layer_names(cfg)
+    return {nm: mode for nm in linear + attn}
+
+
+def abstract_state(cfg, batch: int):
+    """Bootstrap the temporal-state pytree shape with one ``eval_shape``:
+    under all-``act`` modes with ``collect_stats=False`` the step never
+    READS its state argument, so an empty-dict state traces fine and the
+    returned ``new_state`` IS the true state shape tree (the engine writes
+    every field regardless of mode)."""
+    import jax
+
+    from repro.core.ditto import dit_runner
+    from repro.core.ditto.plan import DittoPlan
+
+    dparams, mparams, lat, t, labels = abstract_inputs(cfg, batch)
+    step = dit_runner.make_step_fn(cfg, uniform_modes(cfg, "act"),
+                                   DittoPlan(collect_stats=False))
+    dummy = {nm: {} for nm in uniform_modes(cfg, "act")}
+    _, state_shapes, _ = jax.eval_shape(step, dparams, mparams, dummy, lat, t, labels)
+    return state_shapes
+
+
+def trace_fingerprint(cfg, modes: dict[str, str], plan, batch: int, state=None) -> str:
+    """Fingerprint of the step's jaxpr for (cfg, modes, plan, batch) —
+    pure ``jax.make_jaxpr`` over shape structs, zero FLOPs."""
+    import jax
+
+    from repro.core.ditto import dit_runner
+
+    dparams, mparams, lat, t, labels = abstract_inputs(cfg, batch)
+    if state is None:
+        state = abstract_state(cfg, batch)
+    step = dit_runner.make_step_fn(cfg, modes, plan)
+    jpr = jax.make_jaxpr(step)(dparams, mparams, state, lat, t, labels)
+    return canonical_fingerprint(jpr)
+
+
+# ----------------------------------------------------------- default matrix
+def _tiny_cfgs():
+    """Audit configs: a minimal DiT plus a scaled-down echo of the
+    registry's dit-xl2 geometry (patch 2, 4 latent channels, mlp_ratio 4,
+    class-conditional) — same code paths, trace-sized shapes."""
+    from repro.nn import dit as dit_mod
+
+    tiny = dit_mod.DiTCfg(d_model=16, n_layers=1, n_heads=2, patch=2,
+                          in_channels=2, input_size=4, n_classes=2)
+    xl2_echo = dit_mod.DiTCfg(d_model=32, n_layers=2, n_heads=4, patch=2,
+                              in_channels=4, input_size=8, n_classes=10)
+    return [("tiny", tiny), ("xl2-echo", xl2_echo)]
+
+
+def default_plan_matrix():
+    """(label, plan) variants spanning every cache_sig field plus every
+    deliberately-absent field (the equal-sig probes)."""
+    from repro.core.ditto.plan import DittoPlan
+
+    base = DittoPlan(collect_stats=False)
+    return [
+        # equal-sig probes: must all share one jaxpr with `base`
+        ("base", base),
+        ("interpret-explicit", base.replace(interpret=True)),
+        ("steps-40", base.replace(steps=40)),
+        ("sampler-plms", base.replace(sampler="plms")),
+        ("policy-diff", base.replace(policy="diff")),
+        ("max-batch-8", base.replace(max_batch=8)),
+        ("eager", base.replace(compiled=False)),
+        # distinct-sig probes: each must select a distinct jaxpr
+        ("stats", base.replace(collect_stats=True)),
+        ("low-bits-4", base.replace(low_bits=4)),
+        ("fused", base.replace(fused=True)),
+        ("fused-low-bits-4", base.replace(fused=True, low_bits=4)),  # allowlisted vs fused
+        ("block-256", base.replace(block=256)),
+    ]
+
+
+def run_trace_audit(log=None) -> list[Finding]:
+    """The shipped audit matrix (~20 abstract traces, a few seconds on CPU).
+
+    Full plan matrix on (tiny, all-diff, bucket=2) — the group where every
+    knob is live; equal-sig stale probes on a second bucket, a second cfg
+    and an all-act group (dup checking off there, see module docstring).
+    """
+    say = log or (lambda *_: None)
+    findings: list[Finding] = []
+    cfgs = dict(_tiny_cfgs())
+
+    def build(cfg, modes, plans, batch, group, state):
+        cases = []
+        for label, plan in plans:
+            fp = trace_fingerprint(cfg, modes, plan, batch, state=state)
+            say(f"  traced {group}:{label} sig={plan.cache_sig()} fp={fp}")
+            cases.append(TraceCase(label, plan.cache_sig(), fp, plan))
+        return cases
+
+    plans = default_plan_matrix()
+    tiny = cfgs["tiny"]
+    state = abstract_state(tiny, 2)
+    say("group tiny/diff/b2: full plan matrix, both directions")
+    findings += audit_cases(
+        build(tiny, uniform_modes(tiny, "diff"), plans, 2, "tiny/diff/b2", state),
+        group="tiny/diff/b2")
+
+    stale_probes = [p for p in plans if p[0] in
+                    ("base", "interpret-explicit", "steps-40", "stats")]
+    say("group tiny/act/b2: stale direction only (diff knobs inert under act)")
+    findings += audit_cases(
+        build(tiny, uniform_modes(tiny, "act"), stale_probes, 2, "tiny/act/b2", state),
+        group="tiny/act/b2", check_dup=False)
+
+    say("group tiny/diff/b4: stale probes at a second bucket")
+    findings += audit_cases(
+        build(tiny, uniform_modes(tiny, "diff"), stale_probes, 4, "tiny/diff/b4",
+              abstract_state(tiny, 4)),
+        group="tiny/diff/b4", check_dup=False)
+
+    echo = cfgs["xl2-echo"]
+    echo_probes = [p for p in plans if p[0] in ("base", "steps-40", "fused")]
+    say("group xl2-echo/diff/b2: registry-geometry spot check")
+    findings += audit_cases(
+        build(echo, uniform_modes(echo, "diff"), echo_probes, 2, "xl2-echo/diff/b2",
+              abstract_state(echo, 2)),
+        group="xl2-echo/diff/b2")
+    return findings

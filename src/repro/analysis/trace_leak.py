@@ -1,0 +1,110 @@
+"""AST trace-leak pass: no cache-key-invisible state may reach a kernel.
+
+The trace-identity contract says the jitted step is a pure function of
+``(cfg, modes, plan.cache_sig(), bucket)``. The way that contract breaks
+in practice is mundane: someone threads a lowering knob into a
+``pl.pallas_call`` wrapper or a ``compiled.*_apply`` call from a
+module-level variable (a "tuning table", a debug toggle, a cached
+default) instead of from a :class:`DittoPlan` field. The knob changes the
+traced computation, the cache key never hears about it, and a stale trace
+serves wrong results.
+
+This pass flags exactly that shape: at every *boundary call* (a Pallas
+wrapper, anything named ``*_apply``, or ``pl.pallas_call`` itself), every
+knob-carrying keyword argument is scanned for free names — names not
+bound by any enclosing function scope (parameters, locals, closure
+bindings all count as plan-threaded, since the only way a value enters a
+scope is through the plan-carrying call chain). A free name that resolves
+to a module-level DATA binding is a trace leak. Imports, function/class
+defs and literal constants are fine — they are part of the code identity,
+not runtime state.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from . import astutil
+from .findings import Finding
+
+#: files whose boundary calls the default driver audits
+DEFAULT_PATHS = (
+    "src/repro/kernels/ops.py",
+    "src/repro/core/ditto/compiled.py",
+    "src/repro/core/ditto/dit_runner.py",
+)
+
+#: keyword names that select a lowering (the knob surface of the stack)
+KNOB_KWARGS = frozenset({
+    "bm", "bn", "bk", "block", "interpret", "low_bits", "fused",
+    "collect_stats", "plan", "w_transposed", "grid",
+})
+
+
+def _is_boundary(callee_last: str, wrapper_names: set[str]) -> bool:
+    return (callee_last == "pallas_call"
+            or callee_last.endswith("_apply")
+            or callee_last in wrapper_names)
+
+
+def _calls_with_scopes(tree: ast.Module):
+    """Yield (enclosing function stack, Call) for every call in the module."""
+    out: list[tuple[list, ast.Call]] = []
+
+    def walk(stack, node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                walk(stack + [child], child)
+            else:
+                if isinstance(child, ast.Call):
+                    out.append((list(stack), child))
+                walk(stack, child)
+
+    walk([], tree)
+    return out
+
+
+def check_module(tree: ast.Module, rel: str, *,
+                 wrapper_names: set[str] = frozenset()) -> list[Finding]:
+    """Trace-leak findings for one parsed module."""
+    findings: list[Finding] = []
+    module_data = astutil.module_data_bindings(tree)
+    for stack, call in _calls_with_scopes(tree):
+        name = astutil.call_name(call)
+        if not name or not _is_boundary(name.rsplit(".", 1)[-1], wrapper_names):
+            continue
+        bound = astutil.bound_names_in_scope(stack) if stack else set()
+        for kw in call.keywords:
+            if kw.arg is not None and kw.arg not in KNOB_KWARGS:
+                continue
+            for node in ast.walk(kw.value):
+                if not (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)):
+                    continue
+                if node.id in bound or node.id not in module_data:
+                    continue
+                knob = kw.arg or f"**{node.id}"
+                findings.append(Finding(
+                    "trace-leak", rel,
+                    f"{name.rsplit('.', 1)[-1]}.{knob}",
+                    f"module-level value '{node.id}' (defined at line "
+                    f"{module_data[node.id]}) flows into {name}({knob}=...) — "
+                    f"lowering knobs must come from a DittoPlan field or a "
+                    f"threaded parameter, never module state the cache key "
+                    f"cannot see", call.lineno))
+    return findings
+
+
+def ops_wrapper_names(repo_root: str) -> set[str]:
+    """Public functions of kernels/ops.py — the Pallas wrapper boundary."""
+    path = os.path.join(repo_root, "src/repro/kernels/ops.py")
+    tree = astutil.parse_module(path)
+    return {f.name for f in astutil.public_functions(tree)}
+
+
+def check_trace_leaks(repo_root: str, paths=DEFAULT_PATHS) -> list[Finding]:
+    wrappers = ops_wrapper_names(repo_root)
+    findings: list[Finding] = []
+    for rel in paths:
+        tree = astutil.parse_module(os.path.join(repo_root, rel))
+        findings += check_module(tree, rel, wrapper_names=wrappers)
+    return findings

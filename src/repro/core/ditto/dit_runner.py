@@ -161,7 +161,7 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], plan: DittoPlan | N
     is an ARGUMENT, so the only trace-static inputs are ``cfg``, the
     frozen per-layer ``modes``, and the plan's trace identity
     (``plan.cache_sig()``: block / interpret / collect_stats / low_bits /
-    fused / steps). Two serve batches that share those statics (and
+    fused). Two serve batches that share those statics (and
     shapes) can therefore share ONE ``jax.jit`` trace: this is what
     :class:`repro.serve.CompiledRunnerCache` keys on to amortize
     compilation across the whole request stream. ``plan.low_bits == 4``

@@ -89,12 +89,16 @@ class DittoPlan:
         """Ordered trace-identity tuple — the plan fields that select a
         distinct jitted step. ``RunnerKey`` embeds this verbatim; the
         field order is a stable contract (see ``RunnerKey``'s accessors).
-        ``sampler``/``policy``/``compiled``/``max_batch`` are deliberately
-        absent: they shape the loop around the step, not the step itself,
-        so plans differing only there share one trace.
+        ``steps``/``sampler``/``policy``/``compiled``/``max_batch`` are
+        deliberately absent: they shape the loop around the step, not the
+        step itself, so plans differing only there share one trace
+        (``steps`` counts how often the step runs — the trace-identity
+        audit in ``repro.analysis.trace_audit`` proves it has no jaxpr
+        effect, and keeping it in the sig re-traced the whole denoiser
+        per step-count).
         """
         return (self.block, resolve_interpret(self.interpret), self.collect_stats,
-                self.low_bits, self.fused, self.steps)
+                self.low_bits, self.fused)
 
     def kernel_blk(self) -> dict:
         """The kernel-config dict the ops wrappers accept (``bm/bn/bk``

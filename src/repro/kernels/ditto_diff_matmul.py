@@ -84,7 +84,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from .common import DEFAULT_LOW_BITS, resolve_interpret
+from .common import DEFAULT_LOW_BITS, resolve_interpret, validate_low_bits
 from .int4_pack import pack_int4, unpack_int4_lanes
 
 
@@ -180,7 +180,7 @@ def ditto_diff_matmul(
     interpret=None auto-detects: native lowering on TPU, interpreter
     (bit-identical math) everywhere else."""
     interpret = resolve_interpret(interpret)
-    assert low_bits in (4, 8), f"low_bits must be 4 or 8, got {low_bits}"
+    validate_low_bits(low_bits)
     m, k = x_t.shape
     n, k2 = w_q.shape if w_transposed else w_q.shape[::-1]
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0

@@ -14,11 +14,12 @@ wrapped step per
 
 ``plan.cache_sig()`` is the ordered tuple of exactly the
 :class:`~repro.core.ditto.DittoPlan` fields that select a distinct XLA
-lowering — ``(block, interpret, collect_stats, low_bits, fused, steps)``
-— so a plan IS a trace identity: serve configs that lower different
-kernel bodies (``low_bits=4`` packed-int4, ``fused=True`` single-pass
+lowering — ``(block, interpret, collect_stats, low_bits, fused)`` — so a
+plan IS a trace identity: serve configs that lower different kernel
+bodies (``low_bits=4`` packed-int4, ``fused=True`` single-pass
 DMA-skipping) can never share a trace, while plans differing only in
-loop-level fields (``sampler``/``policy``/``max_batch``) always do.
+loop-level fields (``steps``/``sampler``/``policy``/``max_batch``)
+always do.
 
 The key is shared by every subsequent batch that maps to it (and shapes —
 which the batch bucket pins). The cache counts actual Python traces via a
@@ -76,10 +77,6 @@ class RunnerKey:
     @property
     def fused(self) -> bool:
         return self.plan_sig[4]
-
-    @property
-    def steps(self) -> int:
-        return self.plan_sig[5]
 
 
 class CompiledRunnerCache:

@@ -1,0 +1,334 @@
+"""Per-rule self-tests for the dittolint AST passes (repro.analysis).
+
+Each rule is exercised on a good and a bad fixture snippet (parsed with
+``ast``, never imported or executed), the finding/baseline plumbing is
+round-tripped, and the shipped tree itself must come back clean — the
+same invariant `python tools/dittolint.py` enforces in CI.
+"""
+import ast
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import (
+    Finding,
+    apply_baseline,
+    check_kernels,
+    check_repo_rules,
+    check_trace_leaks,
+    load_baseline,
+    report_json,
+    write_baseline,
+)
+from repro.analysis import kernel_contract, repo_rules, trace_leak
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def mk(src: str, rel: str = "src/repro/kernels/fixture.py"):
+    return kernel_contract.ModuleInfo(rel, ast.parse(textwrap.dedent(src)))
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ----------------------------------------------------------- finding format
+def test_finding_key_and_render():
+    f = Finding("kernel-all-drift", "src/x.py", "foo", "msg", 7)
+    assert f.key == "kernel-all-drift::src/x.py::foo"
+    assert f.render() == "src/x.py:7: [kernel-all-drift] msg"
+    assert Finding("r", "p", "i", "m").render() == "p: [r] m"  # no line -> no :0
+    data = json.loads(report_json([f]))
+    assert data["version"] == 1 and data["findings"][0]["ident"] == "foo"
+
+
+def test_baseline_round_trip(tmp_path):
+    f1 = Finding("r1", "a.py", "x", "m1", 3)
+    f2 = Finding("r2", "b.py", "y", "m2", 9)
+    path = str(tmp_path / "baseline.json")
+    write_baseline(path, [f1])
+    keys = load_baseline(path)
+    assert keys == [f1.key]
+    active, suppressed, stale = apply_baseline([f1, f2], keys)
+    assert active == [f2] and suppressed == [f1] and stale == []
+    # a suppression whose finding disappeared is stale — baselines only shrink
+    active, suppressed, stale = apply_baseline([f2], keys)
+    assert active == [f2] and suppressed == [] and stale == [f1.key]
+    assert load_baseline(str(tmp_path / "absent.json")) == []
+
+
+def test_baseline_rejects_malformed(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('["just", "a", "list"]')
+    try:
+        load_baseline(str(path))
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("malformed baseline must raise ValueError")
+
+
+# ------------------------------------------------------ resolver routing
+def test_resolve_interpret_rule():
+    bad = mk("""
+        from .common import resolve_interpret
+        def wrapper(x, *, interpret=None):
+            return x if interpret else -x
+    """)
+    fs = kernel_contract.check_param_routing(
+        [bad], "interpret", "resolve_interpret", "kernel-resolve-interpret")
+    assert rules_of(fs) == ["kernel-resolve-interpret"] and fs[0].ident == "wrapper"
+
+    good = mk("""
+        from .common import resolve_interpret
+        def wrapper(x, *, interpret=None):
+            interpret = resolve_interpret(interpret)
+            return x
+    """)
+    assert kernel_contract.check_param_routing(
+        [good], "interpret", "resolve_interpret", "kernel-resolve-interpret") == []
+
+
+def test_resolver_routing_delegation_fixpoint():
+    # quantized_matmul-style: forwards interpret= to a wrapper that resolves
+    mods = [mk("""
+        from .common import resolve_interpret
+        def inner(x, *, interpret=None):
+            interpret = resolve_interpret(interpret)
+            return x
+        def outer(x, *, interpret=None):
+            return inner(x, interpret=interpret)
+        def broken(x, *, interpret=None):
+            return inner(x, interpret=True)  # drops the caller's value
+    """)]
+    fs = kernel_contract.check_param_routing(
+        mods, "interpret", "resolve_interpret", "kernel-resolve-interpret")
+    assert [f.ident for f in fs] == ["broken"]
+
+
+def test_validate_low_bits_rule():
+    bad = mk("""
+        def kernel(x, *, low_bits=8):
+            assert low_bits in (4, 8)
+            return x
+    """)
+    fs = kernel_contract.check_param_routing(
+        [bad], "low_bits", "validate_low_bits", "kernel-validate-low-bits")
+    assert [f.ident for f in fs] == ["kernel"]  # a bare assert is not validation
+
+
+# ----------------------------------------------------------- pad2 boundary
+_RAW = """
+    from jax.experimental import pallas as pl
+    def raw_kernel(x, *, bm=128):
+        return pl.pallas_call(lambda r, o: None)(x)
+"""
+
+
+def test_pad2_boundary_rule():
+    raw = mk(_RAW, rel="src/repro/kernels/raw.py")
+    bad = mk("""
+        from .raw import raw_kernel
+        def wrapper(x):
+            return raw_kernel(x)
+    """, rel="src/repro/kernels/ops.py")
+    fs = kernel_contract.check_pad_boundary([raw, bad])
+    assert [f.ident for f in fs] == ["wrapper"]
+
+    good = mk("""
+        from .common import pad2
+        from .raw import raw_kernel
+        def wrapper(x):
+            return raw_kernel(pad2(x, 128, 128))
+    """, rel="src/repro/kernels/ops.py")
+    assert kernel_contract.check_pad_boundary([raw, good]) == []
+    # non-boundary modules may call raw kernels unpadded (they assert shape)
+    elsewhere = mk("def probe(x):\n    return raw_kernel(x)\n",
+                   rel="src/repro/kernels/dma_model.py")
+    assert kernel_contract.check_pad_boundary([raw, elsewhere]) == []
+
+
+def test_block_default_rule():
+    bad = mk("""
+        def kernel(x, *, bm=100, bn=128):
+            return x
+        def kern2(x, bk=64):
+            return x
+    """)
+    fs = kernel_contract.check_block_defaults(bad)
+    assert [f.ident for f in fs] == ["kernel.bm", "kern2.bk"]
+    good = mk("def kernel(x, *, bm=128, bn=256, bk=128):\n    return x\n")
+    assert kernel_contract.check_block_defaults(good) == []
+
+
+# --------------------------------------------------------- index-map purity
+def test_indexmap_rejects_jnp_calls():
+    bad = mk("""
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        def f(x):
+            return pl.BlockSpec((8, 8), lambda i, j: (jnp.mod(i, 2), j))
+    """)
+    fs = kernel_contract.check_indexmap_purity(bad)
+    assert rules_of(fs) == ["kernel-indexmap-pure"] and "jnp" in fs[0].message
+
+
+def test_indexmap_rejects_array_capture():
+    bad = mk("""
+        import jax
+        from jax.experimental import pallas as pl
+        def f(x: jax.Array):
+            return pl.BlockSpec((8, 8), lambda i, j: (x.shape[0], j))
+    """)
+    fs = kernel_contract.check_indexmap_purity(bad)
+    assert len(fs) == 1 and "captures array operand 'x'" in fs[0].message
+
+
+def test_indexmap_allows_local_helpers_and_static_ints():
+    # the fused_step idiom: named local maps calling a closure helper that
+    # captures static grid ints — pure, must not be flagged
+    good = mk("""
+        from jax.experimental import pallas as pl
+        def f(x, grid):
+            gn = grid // 2
+            def t_of(kk):
+                return kk // gn
+            def d_map(i, j, kk):
+                return (t_of(kk), j)
+            return pl.BlockSpec((8, 8), d_map)
+    """)
+    assert kernel_contract.check_indexmap_purity(good) == []
+
+
+def test_indexmap_rejects_module_state():
+    bad = mk("""
+        from jax.experimental import pallas as pl
+        OFFSET = 3
+        def f(x):
+            return pl.BlockSpec((8, 8), lambda i, j: (i + OFFSET, j))
+    """)
+    fs = kernel_contract.check_indexmap_purity(bad)
+    assert len(fs) == 1 and "module-level value 'OFFSET'" in fs[0].message
+
+
+# ---------------------------------------------------------------- __all__
+def test_all_drift_rule():
+    bad = mk("""
+        __all__ = ["present", "ghost"]
+        def present():
+            pass
+        def missing():
+            pass
+    """)
+    fs = kernel_contract.check_all_drift(bad)
+    assert {(f.ident, "missing from __all__" in f.message) for f in fs} == \
+        {("missing", True), ("ghost", False)}
+
+    init = mk("""
+        from .ops import exported, hidden
+        __all__ = ["exported"]
+    """, rel="src/repro/kernels/__init__.py")
+    fs = kernel_contract.check_all_drift(init)
+    assert [f.ident for f in fs] == ["hidden"]  # re-export not in __all__
+    assert kernel_contract.check_all_drift(mk("x = 1\n")) == []  # no __all__: opt-in
+
+
+# --------------------------------------------------------------- trace-leak
+def test_trace_leak_flags_module_state():
+    bad = ast.parse(textwrap.dedent("""
+        TILE = 256
+        def linear_apply(p, x, *, plan):
+            return ditto_linear_step(x, x, p, bm=TILE, interpret=plan.interpret)
+    """))
+    fs = trace_leak.check_module(bad, "src/repro/core/ditto/compiled.py",
+                                 wrapper_names={"ditto_linear_step"})
+    assert len(fs) == 1 and fs[0].rule == "trace-leak"
+    assert "'TILE'" in fs[0].message and fs[0].ident == "ditto_linear_step.bm"
+
+
+def test_trace_leak_allows_plan_threading():
+    good = ast.parse(textwrap.dedent("""
+        DEFAULT = 128
+        def helper(n):
+            return n
+        def linear_apply(p, x, *, plan):
+            b = plan.block
+            return ditto_linear_step(x, x, p, bm=b, low_bits=plan.low_bits,
+                                     interpret=plan.interpret, fused=plan.fused)
+        def other(x):
+            return unrelated_call(bm=DEFAULT)  # not a boundary call
+    """))
+    assert trace_leak.check_module(good, "x.py",
+                                   wrapper_names={"ditto_linear_step"}) == []
+
+
+# ---------------------------------------------------------- repo rules
+def test_bench_registration_rule(tmp_path):
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "run.py").write_text("MODULES = ['bench_a', 'bench_ghost', 'fig1']\n")
+    (bench / "bench_a.py").write_text("def run():\n    return []\n")
+    (bench / "bench_orphan.py").write_text("def run():\n    return []\n")
+    fs = repo_rules.check_bench_registration(str(tmp_path))
+    assert {(f.rule, f.ident) for f in fs} == {
+        ("bench-registration", "bench_orphan"),  # on disk, unregistered
+        ("bench-registration", "bench_ghost"),   # registered, no file
+    }
+
+
+def test_marker_audit_rule(tmp_path):
+    (tmp_path / "pytest.ini").write_text(
+        "[pytest]\nmarkers =\n    slow: long tests\n    dead: never used\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_x.py").write_text(textwrap.dedent("""
+        import pytest
+        @pytest.mark.slow
+        def test_a():
+            pass
+        @pytest.mark.gpu
+        def test_b():
+            pass
+        @pytest.mark.parametrize("v", [1])  # builtin: needs no declaration
+        def test_c(v):
+            pass
+    """))
+    fs = repo_rules.check_markers(str(tmp_path))
+    assert {(f.rule, f.ident) for f in fs} == {
+        ("marker-audit", "gpu"),   # used, undeclared
+        ("marker-audit", "dead"),  # declared, unused
+    }
+
+
+# --------------------------------------------------- the shipped tree itself
+def test_shipped_tree_is_clean():
+    """The invariant CI enforces: zero AST-pass findings on this repo."""
+    assert check_kernels(ROOT) == []
+    assert check_trace_leaks(ROOT) == []
+    assert check_repo_rules(ROOT) == []
+
+
+def test_cli_ast_only_exits_zero(tmp_path):
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "dittolint.py"),
+         "--ast-only", "--json", str(report)],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "dittolint: clean" in proc.stdout
+    data = json.loads(report.read_text())
+    assert data == {"version": 1, "findings": [], "suppressed": []}
+
+
+def test_cli_fails_on_stale_suppression(tmp_path):
+    stale = tmp_path / "baseline.json"
+    stale.write_text(json.dumps(
+        {"version": 1, "suppressions": ["kernel-all-drift::gone.py::x"]}))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "dittolint.py"),
+         "--ast-only", "--baseline", str(stale)],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 1 and "stale baseline suppression" in proc.stdout

@@ -229,8 +229,9 @@ def test_int4_serve_bitidentical(setup):
 def test_cache_key_hit_miss_bookkeeping():
     """Key construction and hit/miss accounting without paying any XLA
     trace (the jitted step is never called): same (cfg, modes, plan,
-    bucket) -> one entry + a hit; different bucket/steps/modes ->
-    distinct entries."""
+    bucket) -> one entry + a hit; different bucket/low_bits/modes ->
+    distinct entries; different steps shares the entry (steps is not a
+    trace identity — the same step just runs more times)."""
     cache = CompiledRunnerCache()
     modes = {"l1": "diff", "l2": "act"}
     plan = DittoPlan(steps=4)
@@ -238,8 +239,11 @@ def test_cache_key_hit_miss_bookkeeping():
     f2 = cache.step_for(CFG, dict(reversed(list(modes.items()))), plan, bucket=8)
     assert f1 is f2  # mode signature is order-insensitive
     assert cache.stats() == {"runners": 1, "traces": 0, "hits": 1, "misses": 1}
+    f3 = cache.step_for(CFG, modes, plan.replace(steps=8), bucket=8)
+    assert f3 is f1  # steps is loop-level: same trace, a cache HIT
+    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 2, "misses": 1}
     cache.step_for(CFG, modes, plan, bucket=4)  # different bucket
-    cache.step_for(CFG, modes, plan.replace(steps=8), bucket=8)  # different steps
+    cache.step_for(CFG, modes, plan.replace(low_bits=4), bucket=8)  # different lowering
     cache.step_for(CFG, {"l1": "act", "l2": "act"}, plan, bucket=8)  # different modes
     assert len(cache) == 4 and cache.misses == 4
     k1 = cache.key_for(CFG, modes, plan, bucket=8)

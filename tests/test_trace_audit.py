@@ -1,0 +1,137 @@
+"""Trace-identity audit: both failure directions caught, zero kernels run.
+
+The audit's claim is ``cache_sig() ⇔ jaxpr`` — these tests prove the
+machinery catches each direction failing by injecting deliberately broken
+toy plans (duck-typed ``DittoPlan`` subclasses; ``make_step_fn`` accepts
+them unchanged):
+
+  * ``LeakyPlan`` drops ``low_bits`` from the sig — two plans that lower
+    DIFFERENT kernels now collide on one cache key. The audit must flag
+    ``trace-stale``.
+  * ``RedundantPlan`` adds ``max_batch`` (loop-level, no jaxpr effect) —
+    identical computations get distinct keys. The audit must flag
+    ``trace-dup``.
+
+Everything here is ``jax.make_jaxpr`` / ``jax.eval_shape`` over
+``ShapeDtypeStruct`` inputs: no weights exist and no kernel executes —
+demonstrated directly by fingerprinting a plan with ``interpret=False``
+(native TPU lowering), which could never RUN on this CPU host but traces
+fine.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis import trace_audit as ta
+from repro.core.ditto.plan import DittoPlan
+from repro.kernels.common import resolve_interpret
+from repro.nn import dit as dit_mod
+
+CFG = dit_mod.DiTCfg(d_model=16, n_layers=1, n_heads=2, patch=2, in_channels=2,
+                     input_size=4, n_classes=2)
+MODES = ta.uniform_modes(CFG, "diff")
+
+
+@pytest.fixture(scope="module")
+def state():
+    return ta.abstract_state(CFG, 2)
+
+
+def fp(plan, state):
+    return ta.trace_fingerprint(CFG, MODES, plan, 2, state=state)
+
+
+# -------------------------------------------------------------- fingerprint
+def test_fingerprint_deterministic_and_knob_sensitive(state):
+    base = DittoPlan(collect_stats=False)
+    f1 = fp(base, state)
+    assert f1 == fp(DittoPlan(collect_stats=False), state)  # fresh trace, same hash
+    assert f1 != fp(base.replace(low_bits=4), state)  # lowering knob -> new jaxpr
+    assert f1 == fp(base.replace(steps=40), state)  # loop knob -> same jaxpr
+
+
+def test_tracing_never_executes_a_kernel(state):
+    # interpret=False selects the native TPU lowering — running it on this
+    # CPU host would fail, so a successful fingerprint IS the proof that
+    # the audit only traces
+    assert fp(DittoPlan(collect_stats=False, interpret=False), state)
+
+
+# ------------------------------------------------- synthetic case algebra
+def _case(label, sig, fingerprint, plan=None):
+    return ta.TraceCase(label, sig, fingerprint, plan)
+
+
+def test_audit_cases_directions():
+    stale = ta.audit_cases([_case("a", (1,), "x"), _case("b", (1,), "y")], group="g")
+    assert [f.rule for f in stale] == ["trace-stale"]
+    dup = ta.audit_cases([_case("a", (1,), "x"), _case("b", (2,), "x")], group="g")
+    assert [f.rule for f in dup] == ["trace-dup"]
+    assert ta.audit_cases([_case("a", (1,), "x"), _case("b", (2,), "x")],
+                          group="g", check_dup=False) == []
+    clean = ta.audit_cases([_case("a", (1,), "x"), _case("b", (2,), "y"),
+                            _case("c", (1,), "x")], group="g")
+    assert clean == []
+
+
+def test_shared_trace_allowlist_scopes_the_fused_exception():
+    pa = DittoPlan(collect_stats=False, fused=True)
+    pb = pa.replace(low_bits=4)
+    allowed = ta.audit_cases(
+        [_case("fused", pa.cache_sig(), "same", pa),
+         _case("fused-lb4", pb.cache_sig(), "same", pb)], group="g")
+    assert allowed == []  # dittolint: shared-trace pair
+    # the same field pair WITHOUT fused is not covered by the allowlist
+    qa = DittoPlan(collect_stats=False)
+    qb = qa.replace(low_bits=4)
+    assert [f.rule for f in ta.audit_cases(
+        [_case("base", qa.cache_sig(), "same", qa),
+         _case("lb4", qb.cache_sig(), "same", qb)], group="g")] == ["trace-dup"]
+
+
+# ------------------------------------------------ injected failure: stale
+@dataclasses.dataclass(frozen=True)
+class LeakyPlan(DittoPlan):
+    """low_bits omitted from the sig — the stale-trace bug, on purpose."""
+
+    def cache_sig(self):
+        return (self.block, resolve_interpret(self.interpret),
+                self.collect_stats, self.fused)
+
+
+def test_leaky_plan_flagged_as_stale_trace(state):
+    p8 = LeakyPlan(collect_stats=False)
+    p4 = LeakyPlan(collect_stats=False, low_bits=4)
+    assert p8.cache_sig() == p4.cache_sig()  # the collision the leak creates
+    found = ta.audit_cases(
+        [_case("lb8", p8.cache_sig(), fp(p8, state), p8),
+         _case("lb4", p4.cache_sig(), fp(p4, state), p4)], group="leaky")
+    assert [f.rule for f in found] == ["trace-stale"]
+    assert "missing from cache_sig()" in found[0].message
+
+
+# -------------------------------------------- injected failure: duplication
+@dataclasses.dataclass(frozen=True)
+class RedundantPlan(DittoPlan):
+    """max_batch added to the sig — the trace-duplication bug, on purpose
+    (exactly the bug ``steps`` used to be, removed in this PR)."""
+
+    def cache_sig(self):
+        return DittoPlan.cache_sig(self) + (self.max_batch,)
+
+
+def test_redundant_sig_field_flagged_as_duplication(state):
+    r1 = RedundantPlan(collect_stats=False)
+    r2 = RedundantPlan(collect_stats=False, max_batch=8)
+    assert r1.cache_sig() != r2.cache_sig()  # distinct keys ...
+    found = ta.audit_cases(
+        [_case("mb64", r1.cache_sig(), fp(r1, state), r1),
+         _case("mb8", r2.cache_sig(), fp(r2, state), r2)], group="dup")
+    assert [f.rule for f in found] == ["trace-dup"]  # ... same computation
+
+
+# --------------------------------------------------------- the shipped tree
+def test_shipped_tree_audit_is_clean():
+    """The acceptance invariant: the real DittoPlan passes both directions
+    over the full audit matrix (this is what CI's dittolint job runs)."""
+    assert ta.run_trace_audit() == []

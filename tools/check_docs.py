@@ -20,11 +20,13 @@ call style: ``ServeSession`` / ``serve_records`` / ``make_denoise_fn`` /
 but anything we SHOW people must model the plan API — kwargs inside a
 ``DittoPlan(...)`` construction are of course fine.
 
-Exit code 0 = clean. Run standalone or via tools/fast_tests.py (which
-runs it before the pytest fast suite); tests/test_docs.py keeps it in
-tier-1.
+Findings use the same format as ``tools/dittolint.py`` (one
+``repro.analysis.findings.Finding`` per violation, same text rendering and
+``--json`` report), so every lint in the repo reads uniformly. Exit code
+0 = clean. Run standalone or via tools/fast_tests.py (which runs it
+before the pytest fast suite); tests/test_docs.py keeps it in tier-1.
 
-    python tools/check_docs.py [-v]
+    python tools/check_docs.py [-v] [--json PATH]
 """
 from __future__ import annotations
 
@@ -34,6 +36,10 @@ import shlex
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis.findings import Finding, render_report, report_json  # noqa: E402
+
 SHELL_LANGS = {"bash", "sh", "shell", "console"}
 KNOWN_EXTS = (".py", ".md", ".json", ".ini", ".txt", ".sh", ".toml", ".yaml", ".cfg")
 # plausible repo-path token: no spaces/quotes/shell syntax/templating
@@ -83,19 +89,26 @@ def _strip_plan_calls(args: str) -> str:
     return out
 
 
-def deprecated_api_errors(rel: str, text: str) -> list[str]:
-    errors = []
+def deprecated_api_findings(rel: str, text: str) -> list[Finding]:
+    findings = []
     for name in _SHIMMED_CALLS:
         for lineno, args in _call_spans(text, name):
             stripped = _strip_plan_calls(args)
             bad = sorted(kw for kw in _DEPRECATED_KWARGS
                          if re.search(rf"\b{kw}\s*=", stripped))
             if bad:
-                errors.append(
-                    f"{rel}:{lineno}: deprecated splatted-kwarg call style "
+                findings.append(Finding(
+                    "docs-deprecated-api", rel, f"{name}({','.join(bad)})",
+                    f"deprecated splatted-kwarg call style "
                     f"{name}({', '.join(k + '=' for k in bad)}...) — "
-                    f"construct a DittoPlan and pass plan= instead")
-    return errors
+                    f"construct a DittoPlan and pass plan= instead", lineno))
+    return findings
+
+
+def deprecated_api_errors(rel: str, text: str) -> list[str]:
+    """Rendered-string view of :func:`deprecated_api_findings` (the stable
+    API tests/test_docs.py asserts against)."""
+    return [f.render() for f in deprecated_api_findings(rel, text)]
 
 
 def example_files() -> list[str]:
@@ -146,8 +159,8 @@ def path_exists(tok: str, basenames: set[str]) -> bool:
     return tok in basenames
 
 
-def check_file(path: str, basenames: set[str], verbose: bool = False) -> list[str]:
-    errors: list[str] = []
+def check_file(path: str, basenames: set[str], verbose: bool = False) -> list[Finding]:
+    findings: list[Finding] = []
     rel = os.path.relpath(path, ROOT)
     in_fence = False
     fence_lang = ""
@@ -156,7 +169,9 @@ def check_file(path: str, basenames: set[str], verbose: bool = False) -> list[st
 
     def check_token(tok: str, lineno: int, ctx: str):
         if is_path_candidate(tok) and not path_exists(tok, basenames):
-            errors.append(f"{rel}:{lineno}: {ctx} references missing path '{tok}'")
+            findings.append(Finding(
+                "docs-missing-path", rel, tok,
+                f"{ctx} references missing path '{tok}'", lineno))
         elif verbose and is_path_candidate(tok):
             print(f"  ok {rel}:{lineno}: {tok}")
 
@@ -175,7 +190,9 @@ def check_file(path: str, basenames: set[str], verbose: bool = False) -> list[st
             try:
                 toks = shlex.split(cmd)
             except ValueError as e:
-                errors.append(f"{rel}:{i}: shell command does not parse ({e}): {cmd!r}")
+                findings.append(Finding(
+                    "docs-shell-parse", rel, cmd[:60],
+                    f"shell command does not parse ({e}): {cmd!r}", i))
                 continue
             for tok in toks:
                 # KEY=VALUE env assignments: lint the value part
@@ -185,32 +202,33 @@ def check_file(path: str, basenames: set[str], verbose: bool = False) -> list[st
             for span in _SPAN_RE.findall(line):
                 check_token(span.strip(), i, "inline code")
     if in_fence:
-        errors.append(f"{rel}: unterminated code fence")
-    return errors
+        findings.append(Finding("docs-fence", rel, "unterminated",
+                                "unterminated code fence", 0))
+    return findings
 
 
 def main(argv=None) -> int:
-    verbose = "-v" in (argv or sys.argv[1:])
+    argv = list(argv if argv is not None else sys.argv[1:])
+    verbose = "-v" in argv
+    json_path = argv[argv.index("--json") + 1] if "--json" in argv else None
     files = doc_files()
     if not files:
         print("check_docs: no README.md or docs/*.md found", file=sys.stderr)
         return 1
     basenames = _basenames()
-    errors: list[str] = []
+    findings: list[Finding] = []
     for path in files:
-        errors.extend(check_file(path, basenames, verbose=verbose))
+        findings.extend(check_file(path, basenames, verbose=verbose))
     # deprecated-API lint covers the docs and every example script
     for path in files + example_files():
         with open(path) as f:
-            errors.extend(deprecated_api_errors(os.path.relpath(path, ROOT), f.read()))
-    for e in errors:
-        print(f"check_docs: {e}", file=sys.stderr)
-    n_files = len(files)
-    if errors:
-        print(f"check_docs: {len(errors)} error(s) across {n_files} file(s)", file=sys.stderr)
-        return 1
-    print(f"check_docs: {n_files} doc file(s) clean")
-    return 0
+            findings.extend(deprecated_api_findings(os.path.relpath(path, ROOT), f.read()))
+    if json_path:
+        with open(json_path, "w") as f:
+            f.write(report_json(findings))
+    print(render_report(findings, tool="check_docs"),
+          file=sys.stderr if findings else sys.stdout)
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

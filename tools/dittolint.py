@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""dittolint — trace-identity audit + kernel-contract analyzer.
+
+    python tools/dittolint.py [-v] [--baseline PATH] [--ast-only]
+                              [--json PATH] [--write-baseline]
+
+Runs every pass in ``repro.analysis`` over the repo:
+
+  * AST passes (fast, no JAX import): kernel-contract rules over
+    ``src/repro/kernels/``, the trace-leak scan over the plan-threading
+    boundary, bench-registration and pytest-marker audits;
+  * the abstract trace-identity audit: ``jax.make_jaxpr`` over shape
+    structs proves ``DittoPlan.cache_sig()`` equality ⇔ jaxpr identity in
+    both directions (no kernel executes, no weights exist; a few seconds
+    on CPU). ``--ast-only`` skips it for the instant pre-commit loop.
+
+Findings not suppressed by the baseline (``tools/dittolint_baseline.json``,
+policy: fix-don't-suppress, ships empty) fail the run, as do STALE
+baseline entries — suppressions whose finding no longer fires must be
+deleted, so the baseline only ever shrinks. ``--json`` writes the
+machine-readable report (CI artifact); ``--write-baseline`` accepts the
+current findings as the new baseline (for bootstrapping a rule, not for
+dodging one).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+DEFAULT_BASELINE = os.path.join(ROOT, "tools", "dittolint_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="narrate passes and every traced (sig, fingerprint)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE, metavar="PATH",
+                    help="suppression baseline JSON (default: %(default)s)")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the abstract jaxpr audit (AST rules only)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the machine-readable findings report")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings as the new baseline and exit 0")
+    args = ap.parse_args(argv)
+    say = print if args.verbose else (lambda *_: None)
+
+    from repro.analysis import (apply_baseline, check_kernels, check_repo_rules,
+                                check_trace_leaks, load_baseline, render_report,
+                                report_json, write_baseline)
+
+    findings = []
+    say("pass: kernel-contract (src/repro/kernels)")
+    findings += check_kernels(ROOT)
+    say("pass: trace-leak (kernels/ops, core/ditto boundary)")
+    findings += check_trace_leaks(ROOT)
+    say("pass: repo rules (bench-registration, marker-audit)")
+    findings += check_repo_rules(ROOT)
+    if not args.ast_only:
+        say("pass: trace-identity audit (abstract jaxprs — no kernel runs)")
+        from repro.analysis.trace_audit import run_trace_audit
+        findings += run_trace_audit(log=say)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"dittolint: wrote {len(findings)} suppression(s) to {args.baseline}")
+        return 0
+
+    try:
+        suppressions = load_baseline(args.baseline)
+    except ValueError as e:
+        print(f"dittolint: {e}", file=sys.stderr)
+        return 2
+    active, suppressed, stale = apply_baseline(findings, suppressions)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(report_json(active, suppressed=suppressed))
+    print(render_report(active, suppressed=suppressed, stale=stale))
+    return 1 if active or stale else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

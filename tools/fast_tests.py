@@ -1,12 +1,14 @@
 #!/usr/bin/env python
-"""Fast tier-1 subset: docs lint + everything not marked ``slow``.
+"""Fast tier-1 subset: lints + everything not marked ``slow``.
 
     python tools/fast_tests.py [extra pytest args]
 
 The full tier-1 run stays `PYTHONPATH=src python -m pytest -x -q` (~8 min);
-this entry point sets PYTHONPATH itself, first runs the docs lint
-(tools/check_docs.py — fenced commands parse, referenced paths exist) and
-then deselects the long system/pipeline/model-equivalence tests for the
+this entry point sets PYTHONPATH itself, first runs the lints — the docs
+lint (tools/check_docs.py — fenced commands parse, referenced paths
+exist) and dittolint (tools/dittolint.py — kernel-contract AST rules plus
+the abstract trace-identity audit; no kernel executes) — and then
+deselects the long system/pipeline/model-equivalence tests for the
 inner dev loop. The kernel property suite (tests/test_kernel_properties.py:
 Encoding-Unit class boundaries, 128-pad invariance, int4 pack round-trip,
 int8/int4 branch equivalence) runs here too — only its exhaustive shape
@@ -20,10 +22,11 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> int:
-    rc = subprocess.call([sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
-                         cwd=ROOT)
-    if rc != 0:
-        return rc
+    for lint in ("check_docs.py", "dittolint.py"):
+        rc = subprocess.call([sys.executable, os.path.join(ROOT, "tools", lint)],
+                             cwd=ROOT)
+        if rc != 0:
+            return rc
     env = dict(os.environ)
     src = os.path.join(ROOT, "src")
     env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
