@@ -1,0 +1,157 @@
+"""Plan schedules: histogram-derived int8→int4 split vs best constant plan.
+
+The Ditto observation is temporal: early denoise steps have large
+inter-step deltas (few class-1 tiles — packed-int4 buys little), late
+steps are similar (class-1 dominates — the int4+fused lowering pays off).
+A :class:`~repro.core.ditto.PlanSchedule` prices that directly: one plan
+per phase, one trace per distinct segment sig.
+
+The dit* serve configuration runs:
+
+  probe        : constant int8 with ``collect_stats=True`` — the per-step
+                 tile-class histogram DERIVES the boundary step (first
+                 step whose low-tile fraction reaches the trajectory
+                 mean, clamped to the interior);
+  const_int8 / const_int4 / const_fused4
+               : the three constant candidates, fresh session + cache
+                 each, warm run then timed run (steady-state wall);
+  schedule     : ``[(0, k, int8), (k, steps, int4+fused)]`` — asserted to
+                 compile EXACTLY ``len(schedule.cache_sigs()) == 2``
+                 traces on a fresh cache.
+
+All four samples are asserted BIT-IDENTICAL (the class-1 pack contract
+makes low_bits/fused invisible to values), so the comparison is purely
+per-step wall, trace count, and the probe's early/late bops_tile mix.
+Results land in benchmarks/BENCH_serve.json (common.record_perf).
+
+    PYTHONPATH=src python benchmarks/bench_schedule.py
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import numpy as np
+
+import common
+from repro.core.ditto import DittoPlan, PlanSchedule
+from repro.serve import CompiledRunnerCache
+from repro.sim import harness
+
+STEPS = 12
+BATCH = 4
+BLOCK = 32  # finer tile grid than the 128 default: at toy dims it exposes
+#             a real zero/low/full mix instead of one coarse tile per layer
+
+
+def _serve(params, dcfg, sched, x, labels, plan):
+    """One warm (traced) + one timed serve on a fresh cache.
+
+    Returns ``(cache, records, sample, wall_s)`` — the warm run pays the
+    XLA trace/compile for every segment of ``plan``, the timed run
+    replays the cached runners (steady serving regime)."""
+    cache = CompiledRunnerCache()
+
+    def go():
+        return harness.serve_records(params, dcfg, sched, x, labels, plan,
+                                     runner_cache=cache)
+
+    go()  # warm
+    t0 = time.monotonic()
+    records, sample, _ = go()
+    jax.block_until_ready(sample)
+    return cache, records, sample, time.monotonic() - t0
+
+
+def _low_fracs(records) -> dict[int, float]:
+    """Per-step class-1 (low) tile fraction from probe records."""
+    hists: dict[int, np.ndarray] = collections.defaultdict(
+        lambda: np.zeros(3, np.int64))
+    for r in records:
+        if "tile_hist" in r:
+            hists[r["step"]] += np.asarray(r["tile_hist"], np.int64)
+    return {step: float(h[1]) / max(float(h.sum()), 1.0)
+            for step, h in sorted(hists.items())}
+
+
+def _boundary(fracs: dict[int, float], steps: int) -> int:
+    """First step whose low-tile fraction reaches the trajectory mean —
+    before it, int4 narrowing has little to bite on. Clamped interior so
+    the schedule always has two non-empty segments."""
+    if not fracs:
+        return steps // 3
+    mean = sum(fracs.values()) / len(fracs)
+    k = next((s for s, f in sorted(fracs.items()) if f >= mean), steps // 3)
+    return min(max(int(k), 1), steps - 1)
+
+
+def _bops_ratio(records, lo, hi) -> float:
+    """bops_tile / bops_act over steps in [lo, hi)."""
+    tile = sum(r["bops_tile"] for r in records
+               if "bops_tile" in r and lo <= r["step"] < hi)
+    act = sum(r["bops_act"] for r in records
+              if "bops_tile" in r and lo <= r["step"] < hi)
+    return round(tile / act, 4) if act else 0.0
+
+
+def run():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    x, labels = common.sample_inputs(bm, batch=BATCH)
+    base = DittoPlan(steps=STEPS, sampler="ddim", policy="diff", block=BLOCK,
+                     collect_stats=False)
+
+    # ---- probe: const int8 histogram run derives the boundary ----------
+    _, probe_rec, _, _ = _serve(params, dcfg, sched, x, labels,
+                                base.replace(collect_stats=True))
+    fracs = _low_fracs(probe_rec)
+    k = _boundary(fracs, STEPS)
+    schedule = PlanSchedule(base, [(0, k, {}),
+                                   (k, STEPS, dict(low_bits=4, fused=True))])
+
+    # ---- candidates: fresh session + cache each ------------------------
+    candidates = [
+        ("const_int8", base),
+        ("const_int4", base.replace(low_bits=4)),
+        ("const_fused4", base.replace(low_bits=4, fused=True)),
+        ("schedule", schedule),
+    ]
+    walls, traces, samples = {}, {}, {}
+    for name, plan in candidates:
+        cache, _, sample, wall = _serve(params, dcfg, sched, x, labels, plan)
+        walls[name], traces[name], samples[name] = wall, cache.n_traces, sample
+
+    # one trace per distinct segment sig — the tentpole's budget contract
+    assert traces["schedule"] == len(schedule.cache_sigs()) == 2, traces
+    assert all(traces[n] == 1 for n in walls if n != "schedule"), traces
+    ref = np.asarray(samples["const_int8"])
+    for name in walls:
+        np.testing.assert_array_equal(np.asarray(samples[name]), ref)
+
+    best_const = min(walls[n] for n in walls if n != "schedule")
+    rows = [
+        ("bench_schedule/boundary_step", 0, k),
+        ("bench_schedule/probe_low_frac_early", 0,
+         round(sum(f for s, f in fracs.items() if s < k) / max(k, 1), 4)),
+        ("bench_schedule/probe_low_frac_late", 0,
+         round(sum(f for s, f in fracs.items() if s >= k) / max(STEPS - k, 1), 4)),
+        ("bench_schedule/bops_tile_over_act_early", 0,
+         _bops_ratio(probe_rec, 0, k)),
+        ("bench_schedule/bops_tile_over_act_late", 0,
+         _bops_ratio(probe_rec, k, STEPS)),
+        ("bench_schedule/schedule_traces", 0, traces["schedule"]),
+        ("bench_schedule/bit_identical", 0, True),
+        ("bench_schedule/schedule_vs_best_const", 0,
+         round(best_const / walls["schedule"], 3)),
+    ]
+    for name in ("const_int8", "const_int4", "const_fused4", "schedule"):
+        rows.append((f"bench_schedule/{name}_s",
+                     round(walls[name] * 1e6 / STEPS, 1), round(walls[name], 3)))
+    common.record_perf("bench_schedule", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

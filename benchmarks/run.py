@@ -31,6 +31,7 @@ MODULES = [
     "bench_int4_path",
     "bench_fused_step",
     "bench_scheduler",
+    "bench_schedule",
 ]
 
 

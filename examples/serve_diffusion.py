@@ -22,6 +22,7 @@ mid-queue.
     PYTHONPATH=src python examples/serve_diffusion.py [--requests 6] [--batch 4] [--eager]
     PYTHONPATH=src python examples/serve_diffusion.py --low-bits 4   # packed-int4 low tiles
     PYTHONPATH=src python examples/serve_diffusion.py --fused        # single-pass fused kernel
+    PYTHONPATH=src python examples/serve_diffusion.py --int4-from 8  # int8 early, int4+fused late
 """
 import argparse
 import json
@@ -40,7 +41,7 @@ from repro import configs
 from repro.core import diffusion
 from repro.data.synthetic import DataCfg, batch_for
 from repro.launch import steps as steps_mod
-from repro.serve import DittoPlan, ServeSession
+from repro.serve import DittoPlan, PlanSchedule, ServeSession
 from repro.sim import harness
 
 
@@ -74,7 +75,14 @@ def main(argv=None):
                     help="run diff layers through the single-pass fused kernel "
                          "(scalar-prefetch DMA skipping, y_prev epilogue) — "
                          "bit-identical samples, separate runner cache key")
+    ap.add_argument("--int4-from", type=int, default=None, metavar="STEP",
+                    help="serve a PlanSchedule instead of one constant plan: "
+                         "steps [0, STEP) run the base lowering, steps "
+                         "[STEP, --steps) run low_bits=4 + fused (bit-identical "
+                         "samples; exactly one extra trace for the late segment)")
     args = ap.parse_args(argv)
+    if args.int4_from is not None and not 0 < args.int4_from < args.steps:
+        ap.error(f"--int4-from must be inside (0, {args.steps})")
 
     arch, dcfg, params = build_model()
     sched = diffusion.cosine_schedule(1000)
@@ -92,6 +100,13 @@ def main(argv=None):
     plan = DittoPlan(steps=args.steps, compiled=not args.eager,
                      low_bits=args.low_bits, fused=args.fused,
                      max_batch=max(args.batch, 1))
+    if args.int4_from is not None:
+        # a schedule is a plan per phase: the denoise loop partitions by
+        # segment, each distinct segment sig compiles one trace
+        plan = PlanSchedule(plan, [
+            (0, args.int4_from, {}),
+            (args.int4_from, args.steps, dict(low_bits=4, fused=True)),
+        ])
     sess = ServeSession(params, dcfg, sched, plan)
     while queue:
         batch_reqs, queue = queue[: args.batch], queue[args.batch :]

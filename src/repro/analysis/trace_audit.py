@@ -213,6 +213,41 @@ def trace_fingerprint(cfg, modes: dict[str, str], plan, batch: int, state=None) 
     return canonical_fingerprint(jpr)
 
 
+# ------------------------------------------------------- schedule expansion
+def expand_schedule(label: str, schedule, *, normalize: bool = True) -> list:
+    """``(label[start:stop), plan)`` audit cases, one per schedule segment.
+
+    The audit's schedule contract is exactly the runtime's: a
+    :class:`~repro.core.ditto.PlanSchedule` IS its segment plans (the
+    denoise loop partitions by segment and each segment hits the cache as
+    a bare plan), so running the sig⇔jaxpr check over this expansion
+    covers schedules with zero new tracing machinery. Normalizing first
+    (default) audits what actually executes — merged segments appear
+    once; a constant schedule expands to exactly its bare plan's case.
+    """
+    sched = schedule.normalized() if normalize else schedule
+    return [(f"{label}[{start}:{stop})", plan)
+            for start, stop, plan in sched.segment_plans()]
+
+
+def default_schedule_matrix() -> list:
+    """(label, schedule) variants for the shipped audit: the
+    histogram-style int8→int4+fused split, a constant schedule (must
+    land on the bare plan's sig AND jaxpr — zero new traces), and a
+    redundantly-split spelling that normalization must merge to one
+    segment."""
+    from repro.core.ditto.plan import DittoPlan, PlanSchedule
+
+    base = DittoPlan(collect_stats=False, steps=12)
+    return [
+        ("const", PlanSchedule(base, [(0, 6, {}), (6, 12, {})])),
+        ("hist", PlanSchedule(base, [(0, 4, {}),
+                                     (4, 12, dict(low_bits=4, fused=True))])),
+        ("resplit-lb4", PlanSchedule(base, [(0, 2, dict(low_bits=4)),
+                                            (2, 12, dict(low_bits=4))])),
+    ]
+
+
 # ----------------------------------------------------------- default matrix
 def _tiny_cfgs():
     """Audit configs: a minimal DiT plus a scaled-down echo of the
@@ -255,17 +290,25 @@ def run_trace_audit(log=None) -> list[Finding]:
     """The shipped audit matrix (~20 abstract traces, a few seconds on CPU).
 
     Full plan matrix on (tiny, all-diff, bucket=2) — the group where every
-    knob is live; equal-sig stale probes on a second bucket, a second cfg
+    knob is live — plus the schedule matrix expanded to segments in the
+    same geometry; equal-sig stale probes on a second bucket, a second cfg
     and an all-act group (dup checking off there, see module docstring).
+    Fingerprints are memoized per (cfg, mode, bucket, plan) so segment
+    plans that coincide with matrix plans cost nothing extra.
     """
     say = log or (lambda *_: None)
     findings: list[Finding] = []
     cfgs = dict(_tiny_cfgs())
+    fps: dict = {}  # (cfg id, mode, batch, plan) -> fingerprint, across groups
 
     def build(cfg, modes, plans, batch, group, state):
         cases = []
+        mode0 = next(iter(modes.values()))
         for label, plan in plans:
-            fp = trace_fingerprint(cfg, modes, plan, batch, state=state)
+            memo = (id(cfg), mode0, batch, plan)
+            fp = fps.get(memo)
+            if fp is None:
+                fp = fps[memo] = trace_fingerprint(cfg, modes, plan, batch, state=state)
             say(f"  traced {group}:{label} sig={plan.cache_sig()} fp={fp}")
             cases.append(TraceCase(label, plan.cache_sig(), fp, plan))
         return cases
@@ -277,6 +320,21 @@ def run_trace_audit(log=None) -> list[Finding]:
     findings += audit_cases(
         build(tiny, uniform_modes(tiny, "diff"), plans, 2, "tiny/diff/b2", state),
         group="tiny/diff/b2")
+
+    # schedules audit as their segment expansion, against the bare base
+    # plan in the same group: a constant schedule's one segment must share
+    # the base's sig AND jaxpr (zero new traces), multi-segment schedules
+    # must split exactly at their distinct sigs
+    from repro.core.ditto.plan import DittoPlan
+
+    sched_cases = [("base", DittoPlan(collect_stats=False))]
+    for label, schedule in default_schedule_matrix():
+        sched_cases += expand_schedule(label, schedule)
+    say("group tiny/diff/b2/sched: schedule segment expansion, both directions")
+    findings += audit_cases(
+        build(tiny, uniform_modes(tiny, "diff"), sched_cases, 2,
+              "tiny/diff/b2/sched", state),
+        group="tiny/diff/b2/sched")
 
     stale_probes = [p for p in plans if p[0] in
                     ("base", "interpret-explicit", "steps-40", "stats")]

@@ -3,7 +3,8 @@ from .compiled import CompiledDittoEngine
 from .dit_runner import CompiledDittoDiT, DittoDiT, make_denoise_fn, make_step_fn
 from .engine import DittoEngine, LayerMeta
 from .hwmodel import ALL_HW, CAMBRICON_D, DEFAULT_HW, DIFFY, DITTO_HW, ITC, HwModel
-from .plan import EAGER_PLAN, DittoPlan
+from .plan import (EAGER_PLAN, SEGMENT_FIELDS, DittoPlan, PlanSchedule,
+                   segment_resolved, segment_view)
 
 __all__ = [
     "bops",
@@ -11,6 +12,10 @@ __all__ = [
     "defo",
     "quant",
     "DittoPlan",
+    "PlanSchedule",
+    "SEGMENT_FIELDS",
+    "segment_resolved",
+    "segment_view",
     "EAGER_PLAN",
     "DittoDiT",
     "CompiledDittoDiT",

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 from ...kernels import ops
 from . import classify, quant
 from .engine import DittoEngine
-from .plan import UNSET, DittoPlan, plan_from_kwargs
+from .plan import UNSET, DittoPlan, plan_from_kwargs, segment_resolved
 
 
 def _class_fractions(d: jax.Array) -> tuple:
@@ -99,7 +99,10 @@ def linear_apply(p: dict, mode: str, x: jax.Array, st: dict, *,
     function can be REUSED across serve batches (repro.serve's runner
     cache); only ``mode`` and the plan's kernel config are trace-static.
     Bit-identical int32 y_prev to the eager path for every mode.
+    ``plan`` must be segment-resolved (a constant ``PlanSchedule`` is
+    accepted and collapses; a multi-segment one raises here).
     """
+    plan = segment_resolved(plan)
     collect_stats = plan.collect_stats
     x2 = x.reshape(-1, x.shape[-1])
     n = p["w_q"].shape[1]
@@ -141,8 +144,10 @@ def attention_apply(p: dict, mode: str, a: jax.Array, b: jax.Array, st: dict, *,
     mode composes the paper's two-sub-op identity from the diff kernel
     (ops.attention_delta), act mode runs int8_matmul; ``lax.scan`` over the
     (batch x heads) leading dim keeps one kernel trace. Params/state are
-    arguments so the trace is shareable across batches.
+    arguments so the trace is shareable across batches. ``plan`` must be
+    segment-resolved, exactly as in :func:`linear_apply`.
     """
+    plan = segment_resolved(plan)
     collect_stats = plan.collect_stats
     lead = a.shape[:-2]
     m, d_ = a.shape[-2], a.shape[-1]
@@ -198,11 +203,12 @@ class CompiledDittoEngine:
                 "engine not calibrated: run >= 1 eager step (>= 2 for defo policies, "
                 "whose mode decision lands after the step-2 diff probe) before "
                 f"compiling (step_idx={engine.step_idx}, decided={engine._decided})")
-        # plan construction validates low_bits/block once for the whole pass
-        self.plan = plan_from_kwargs("core.ditto.CompiledDittoEngine", plan,
-                                     interpret=interpret, block=block,
-                                     collect_stats=collect_stats, low_bits=low_bits,
-                                     fused=fused)
+        # plan construction validates low_bits/block once for the whole pass;
+        # one compiled engine serves one segment's lowering
+        self.plan = segment_resolved(plan_from_kwargs(
+            "core.ditto.CompiledDittoEngine", plan, interpret=interpret,
+            block=block, collect_stats=collect_stats, low_bits=low_bits,
+            fused=fused))
         self.engine = engine
         self.modes = engine.compiled_modes()
         self.meta = engine.meta

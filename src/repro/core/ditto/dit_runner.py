@@ -32,7 +32,8 @@ from . import compiled as compiled_mod
 from . import defo
 from .compiled import CompiledDittoEngine
 from .engine import DittoEngine, LayerMeta
-from .plan import EAGER_PLAN, UNSET, DittoPlan, is_unset, plan_from_kwargs
+from .plan import (EAGER_PLAN, UNSET, DittoPlan, PlanSchedule, is_unset,
+                   plan_from_kwargs, segment_resolved)
 
 
 def _resolve_legacy(site, plan, bucket, cache_extra, *, default=None, **legacy):
@@ -170,10 +171,15 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], plan: DittoPlan | N
     layers through the single-pass fused kernel with scalar-prefetch DMA
     skipping (bit-identical output, distinct cache key — a different
     lowering entirely). The per-knob keywords are a deprecated shim.
+
+    ``plan`` must be segment-resolved: one trace serves one kernel
+    lowering, so a multi-segment :class:`PlanSchedule` is rejected here
+    (a constant schedule collapses to its bare plan) — ``make_denoise_fn``
+    partitions the step loop by segment and builds one step per sig.
     """
-    plan = plan_from_kwargs("core.ditto.make_step_fn", plan, block=block,
-                            interpret=interpret, collect_stats=collect_stats,
-                            low_bits=low_bits, fused=fused)
+    plan = segment_resolved(plan_from_kwargs(
+        "core.ditto.make_step_fn", plan, block=block, interpret=interpret,
+        collect_stats=collect_stats, low_bits=low_bits, fused=fused))
     modes = dict(modes)
 
     def step(dparams, mparams, state, latents, t, labels):
@@ -219,6 +225,7 @@ class CompiledDittoDiT:
             "core.ditto.CompiledDittoDiT", plan, bucket, cache_extra,
             interpret=interpret, collect_stats=collect_stats, block=block,
             low_bits=low_bits, fused=fused)
+        plan = segment_resolved(plan)  # one runner = one segment's lowering
         self.cfg = cfg
         self.engine = engine
         self.params = params
@@ -257,6 +264,15 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
     one trace per runner-cache key instead of one per batch. The
     per-knob keywords are a deprecated shim (their ``compiled`` default
     stays False, matching the legacy signature).
+
+    ``plan`` may be a :class:`PlanSchedule`: the compiled step loop is
+    partitioned by segment. At a segment boundary the current runner is
+    swapped for one built from the new segment's plan — same runner cache,
+    so each distinct ``cache_sig()`` compiles once — and the temporal
+    state pytree is transplanted across the swap, so outputs stay
+    bit-identical to the matching constant plan at every step. Eager
+    calibration steps predate the compiled path and ignore segment kernel
+    knobs (the eager engine has none).
     """
     legacy = dict(compiled=compiled, interpret=interpret, collect_stats=collect_stats,
                   block=block, low_bits=low_bits, fused=fused)
@@ -265,15 +281,28 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
             legacy["compiled"] = False  # the legacy signature's default
     plan, bucket = _resolve_legacy("core.ditto.make_denoise_fn", plan, bucket,
                                    cache_extra, default=EAGER_PLAN, **legacy)
+    schedule = plan.normalized() if isinstance(plan, PlanSchedule) else None
     runner = DittoDiT(params, cfg, engine)
     box: dict = {}
 
     def fn(x, t, labels):
         if plan.compiled and engine.ready_for_compiled():
+            # engine.step_idx is the current sampler step (end_step() below
+            # advances it; both samplers call this fn once per step)
+            seg_plan = (schedule.plan_for(engine.step_idx) if schedule is not None
+                        else plan)
+            sig = seg_plan.cache_sig()
             if box.get("built_for") is not engine.records:  # rebuilt per begin_sample
-                box["runner"] = CompiledDittoDiT(params, cfg, engine, plan,
+                box["runner"] = CompiledDittoDiT(params, cfg, engine, seg_plan,
                                                  cache=runner_cache, bucket=bucket)
                 box["built_for"] = engine.records
+                box["sig"] = sig
+            elif box["sig"] != sig:  # segment boundary: swap lowering, carry state
+                prev = box["runner"]
+                box["runner"] = CompiledDittoDiT(params, cfg, engine, seg_plan,
+                                                 cache=runner_cache, bucket=bucket)
+                box["runner"].state = prev.state
+                box["sig"] = sig
             out = box["runner"](x, t, labels)
         else:
             out = runner(x, t, labels)

@@ -23,6 +23,11 @@ runner cache — two requests whose plans agree on ``cache_sig()`` (and on
 model/modes/bucket) replay one trace no matter how the rest of their
 plans differ, and plans that lower differently can never collide.
 
+Plans can vary across the denoising loop: :class:`PlanSchedule` maps
+timestep ranges to deltas over the kernel-lowering fields
+(:data:`SEGMENT_FIELDS`), normalizes sig-equal neighbors together, and
+compiles one trace per distinct segment — see its docstring.
+
 Deprecation shims: the legacy splatted-kwarg call styles still work
 through :func:`plan_from_kwargs`, which rebuilds the equivalent plan and
 warns once per call site name. New code should construct plans directly:
@@ -111,6 +116,230 @@ class DittoPlan:
 #: Default plan for the bare eager engine path (`make_denoise_fn` with no
 #: plan): calibration/analysis runs, not the compiled serving fast path.
 EAGER_PLAN = DittoPlan(compiled=False)
+
+
+# ----------------------------------------------------------- plan schedules
+#: Plan fields a schedule segment may override — exactly the kernel-lowering
+#: fields of :meth:`DittoPlan.cache_sig`. Loop-level fields (``steps``,
+#: ``sampler``, ``policy``, ``compiled``, ``max_batch``) shape the loop
+#: around the steps and must stay constant across a schedule. The tile
+#: classification threshold is not a knob: it is fixed by the packed-int4
+#: contract (``|delta| <= LOW_BIT_MAX`` so class-1 tiles pack losslessly).
+SEGMENT_FIELDS = ("block", "interpret", "collect_stats", "low_bits", "fused")
+
+
+def _canon_delta(delta) -> tuple:
+    """Delta -> canonical sorted ``((field, value), ...)`` tuple."""
+    if delta is None:
+        return ()
+    items = delta.items() if isinstance(delta, dict) else delta
+    try:
+        pairs = [(k, v) for k, v in items]
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"segment delta must be a dict or (field, value) pairs, got {delta!r}")
+    return tuple(sorted(pairs))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSchedule:
+    """Frozen, hashable mapping of timestep ranges -> plan deltas.
+
+    A schedule is a :class:`DittoPlan` whose kernel-lowering fields vary
+    with the sampler step: ``segments`` is a tuple of ``(start, stop,
+    delta)`` half-open ranges over ``[0, base.steps)`` where each delta
+    overrides a subset of :data:`SEGMENT_FIELDS` on ``base``. Construction
+    validates the partition (full cover, no gaps, no overlaps, no empty
+    ranges) and that every delta yields a valid plan.
+
+    Trace identity is per *segment*, not per step: the step loop in
+    ``make_denoise_fn`` partitions by segment and each distinct
+    ``cache_sig()`` compiles exactly one trace (per bucket). A schedule
+    whose steps all resolve to one plan is *constant* and collapses to
+    that bare plan everywhere that matters — same ``RunnerKey``, same
+    scheduler bucket group, zero new traces.
+
+        sched = PlanSchedule(DittoPlan(steps=12), [
+            (0, 4, {}),                              # int8 two-pass early
+            (4, 12, dict(low_bits=4, fused=True)),   # packed-int4 fused late
+        ])
+    """
+
+    base: DittoPlan
+    segments: tuple = ()
+
+    def __post_init__(self):
+        if not isinstance(self.base, DittoPlan):
+            raise TypeError(
+                f"PlanSchedule.base must be a DittoPlan, got {type(self.base).__name__}")
+        canon = []
+        for seg in tuple(self.segments):
+            try:
+                start, stop, delta = seg
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"segment must be (start, stop, delta), got {seg!r}")
+            canon.append((int(start), int(stop), _canon_delta(delta)))
+        canon.sort(key=lambda s: (s[0], s[1]))
+        object.__setattr__(self, "segments", tuple(canon))
+        self._validate()
+
+    def _validate(self) -> None:
+        steps = self.base.steps
+        if not self.segments:
+            raise ValueError(f"schedule has no segments; must cover [0, {steps})")
+        cursor = 0
+        for start, stop, delta in self.segments:
+            if stop <= start:
+                raise ValueError(f"empty segment [{start}, {stop})")
+            if start < cursor:
+                raise ValueError(
+                    f"segments overlap: [{start}, {stop}) begins before step {cursor}")
+            if start > cursor:
+                raise ValueError(f"gap: steps [{cursor}, {start}) are uncovered")
+            if stop > steps:
+                raise ValueError(
+                    f"segment [{start}, {stop}) exceeds steps={steps}")
+            bad = sorted(k for k, _ in delta if k not in SEGMENT_FIELDS)
+            if bad:
+                raise ValueError(
+                    f"segment [{start}, {stop}) overrides non-segment fields "
+                    f"{bad}; schedulable fields are {SEGMENT_FIELDS}")
+            self.base.replace(**dict(delta))  # each delta must yield a valid plan
+            cursor = stop
+        if cursor != steps:
+            raise ValueError(f"gap: steps [{cursor}, {steps}) are uncovered")
+
+    # ----------------------------------------------- loop-level delegation
+    # Constant across the schedule by construction — callers that only care
+    # about the loop shape (samplers, chunking, bucketing) read these off a
+    # schedule exactly as off a bare plan.
+    @property
+    def steps(self) -> int:
+        return self.base.steps
+
+    @property
+    def sampler(self) -> str:
+        return self.base.sampler
+
+    @property
+    def policy(self) -> str:
+        return self.base.policy
+
+    @property
+    def compiled(self) -> bool:
+        return self.base.compiled
+
+    @property
+    def max_batch(self) -> int:
+        return self.base.max_batch
+
+    @property
+    def collect_stats(self) -> bool:
+        # engine-side oracle stats follow the base; the compiled per-segment
+        # value comes from each segment plan
+        return self.base.collect_stats
+
+    # ------------------------------------------------------------------ api
+    def plan_for(self, step: int) -> DittoPlan:
+        """The fully-resolved plan governing sampler step ``step``."""
+        for start, stop, delta in self.segments:
+            if start <= step < stop:
+                return self.base.replace(**dict(delta))
+        raise ValueError(
+            f"step {step} outside the schedule's [0, {self.base.steps}) range")
+
+    def segment_plans(self) -> tuple:
+        """``((start, stop, DittoPlan), ...)`` — the resolved partition."""
+        return tuple((start, stop, self.base.replace(**dict(delta)))
+                     for start, stop, delta in self.segments)
+
+    def replace(self, **kw) -> "PlanSchedule":
+        """A copy with ``base``/``segments`` overridden (re-validated)."""
+        return dataclasses.replace(self, **kw)
+
+    def normalized(self) -> "PlanSchedule":
+        """Canonical form: base and segment plans normalized, adjacent
+        segments whose deltas resolve to the same plan (⇔ same
+        ``cache_sig()``, since every schedulable field is a sig field)
+        merged, and each delta reduced to the fields that actually differ
+        from the base. Two schedules spelling the same per-step behavior
+        differently compare (and hash) equal after this — the scheduler
+        groups by it, and trace count == number of distinct segment sigs.
+        """
+        base = self.base.normalized()
+        merged: list = []
+        for start, stop, plan in self.segment_plans():
+            plan = plan.normalized()
+            if merged and merged[-1][2] == plan:
+                prev_start, _, prev_plan = merged.pop()
+                merged.append((prev_start, stop, prev_plan))
+            else:
+                merged.append((start, stop, plan))
+        segments = tuple(
+            (start, stop, tuple(sorted(
+                (f, getattr(plan, f)) for f in SEGMENT_FIELDS
+                if getattr(plan, f) != getattr(base, f))))
+            for start, stop, plan in merged)
+        return dataclasses.replace(self, base=base, segments=segments)
+
+    def cache_sigs(self) -> tuple:
+        """Distinct segment ``cache_sig()`` tuples in first-use order — the
+        schedule's trace budget (one jitted step per entry, per bucket)."""
+        sigs: list = []
+        for _, _, plan in self.segment_plans():
+            sig = plan.cache_sig()
+            if sig not in sigs:
+                sigs.append(sig)
+        return tuple(sigs)
+
+    def is_constant(self) -> bool:
+        """True when every step resolves to one plan (after normalization)."""
+        return self.constant_plan() is not None
+
+    def constant_plan(self) -> DittoPlan | None:
+        """The single per-step plan when the schedule is constant, else
+        ``None``. A constant schedule IS its plan: it lands on the same
+        ``RunnerKey`` and scheduler group as the equivalent bare plan."""
+        plans = {plan for _, _, plan in self.normalized().segment_plans()}
+        if len(plans) == 1:
+            return plans.pop()
+        return None
+
+
+def segment_resolved(plan):
+    """Collapse ``plan`` to the one :class:`DittoPlan` step-level APIs need.
+
+    ``make_step_fn``, the compiled ops, and the runner cache consume ONE
+    segment-resolved plan per trace. A bare plan passes through; a
+    constant :class:`PlanSchedule` resolves to its single plan (same
+    ``RunnerKey`` as the bare plan — no trace duplication); a
+    multi-segment schedule cannot be collapsed here and raises — it must
+    be partitioned upstream (``make_denoise_fn`` and the serve layers
+    accept the schedule itself and resolve per segment).
+    """
+    if isinstance(plan, PlanSchedule):
+        const = plan.constant_plan()
+        if const is None:
+            raise TypeError(
+                "a multi-segment PlanSchedule resolves per step; pass one "
+                "segment's plan (PlanSchedule.plan_for / segment_plans) — "
+                "make_denoise_fn and the serve layers accept the schedule "
+                "itself and partition the loop by segment")
+        return const
+    return plan
+
+
+def segment_view(plan):
+    """``((start, stop, DittoPlan), ...)`` for plan OR schedule, normalized.
+
+    A bare plan is one whole-loop segment. Normalization first means two
+    spellings of the same per-step behavior produce equal views — the
+    scheduler's grouping key is built from this."""
+    if isinstance(plan, PlanSchedule):
+        return plan.normalized().segment_plans()
+    plan = plan.normalized()
+    return ((0, plan.steps, plan),)
 
 
 # --------------------------------------------------------- deprecation shim

@@ -20,7 +20,7 @@ for convenience):
 
 See docs/architecture.md for the request lifecycle.
 """
-from ..core.ditto.plan import DittoPlan
+from ..core.ditto.plan import DittoPlan, PlanSchedule
 from .bucketing import DEFAULT_MAX_BATCH, bucket_for, pad_batch
 from .cache import CompiledRunnerCache, RunnerKey, cfg_signature
 from .scheduler import ServeScheduler, Ticket
@@ -39,4 +39,5 @@ __all__ = [
     "ServeScheduler",
     "Ticket",
     "DittoPlan",
+    "PlanSchedule",
 ]

@@ -39,7 +39,8 @@ from typing import Any, Callable
 import jax
 
 from ..core.ditto import dit_runner
-from ..core.ditto.plan import UNSET, DittoPlan, is_unset, plan_from_kwargs
+from ..core.ditto.plan import (UNSET, DittoPlan, is_unset, plan_from_kwargs,
+                               segment_resolved)
 
 
 def cfg_signature(cfg) -> tuple:
@@ -106,7 +107,11 @@ class CompiledRunnerCache:
                  ) -> tuple[DittoPlan, int | None, tuple]:
         """(plan | legacy kwargs + extra) -> (plan, bucket). The legacy
         ``extra`` was always the ``(steps, bucket)`` pair; steps moved
-        onto the plan and bucket became a first-class key field."""
+        onto the plan and bucket became a first-class key field. A
+        constant ``PlanSchedule`` collapses to its bare plan here — the
+        SAME RunnerKey, zero new traces — while a multi-segment schedule
+        is rejected (one key = one segment's lowering; the denoise loop
+        resolves segments before reaching the cache)."""
         steps = UNSET
         if not is_unset(extra):
             extra = tuple(extra)
@@ -115,7 +120,7 @@ class CompiledRunnerCache:
                     f"{site}: legacy extra must be (steps, bucket), got {extra!r}")
             if extra:
                 steps, bucket = extra
-        plan = plan_from_kwargs(site, plan, steps=steps, **legacy)
+        plan = segment_resolved(plan_from_kwargs(site, plan, steps=steps, **legacy))
         mode_sig = tuple(sorted(modes.items())) if isinstance(modes, dict) else tuple(modes)
         return plan, bucket, mode_sig
 

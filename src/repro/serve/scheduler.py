@@ -17,12 +17,18 @@ submissions:
   * ``Ticket.result()`` returns this request's rows of the sample —
     flushing first if the request is still (partly) queued.
 
-Requests are grouped by ``plan.normalized()`` (+ label presence): mixed
-submissions are only ever batched with requests that run the same
-sampling loop and kernel lowering, so per-request plan overrides (one
-client on ``fused``, another on ``low_bits=4``) coexist in one scheduler
-sharing one runner cache — and can never share a trace, since the plan
-is the trace identity (``RunnerKey`` embeds ``plan.cache_sig()``).
+Requests are grouped by behavior, not object identity: the grouping key
+is the loop-level fields plus the normalized ``(start, stop,
+cache_sig())`` segment partition (+ label presence), so sig-equal plans
+or :class:`PlanSchedule`\\ s constructed separately — including a constant
+schedule and its equivalent bare plan, or duck-typed plans whose extra
+fields don't reach the sig — coalesce into ONE bucket group, while
+submissions that differ in sampling loop or in the kernel lowering of
+ANY step never batch together. Per-request overrides (one client on
+``fused``, another on an int8→int4 schedule) therefore coexist in one
+scheduler sharing one runner cache — and can never share a trace, since
+the plan is the trace identity (``RunnerKey`` embeds
+``plan.cache_sig()``).
 
 Dispatches may split a request across two batches or pack several
 requests into one; both are invisible in the results because activation
@@ -40,7 +46,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core.ditto.plan import DittoPlan
+from ..core.ditto.plan import DittoPlan, PlanSchedule, segment_view
 from .bucketing import bucket_for
 from .cache import CompiledRunnerCache
 from .session import ServeResult, ServeSession
@@ -50,11 +56,11 @@ class Ticket:
     """Handle for one submitted request; resolves to its own sample rows."""
 
     def __init__(self, scheduler: "ServeScheduler", index: int, batch: int,
-                 plan: DittoPlan):
+                 plan: DittoPlan | PlanSchedule):
         self._scheduler = scheduler
         self.index = index  # submission order, scheduler-wide
         self.batch = batch  # rows in this request
-        self.plan = plan  # normalized plan this request runs under
+        self.plan = plan  # normalized plan/schedule this request runs under
         self._pieces: list[jax.Array] = []  # filled in row order by dispatches
         self._filled = 0
         self.results: list[ServeResult] = []  # ServeResults that covered rows of this request
@@ -92,9 +98,12 @@ class _Pending:
 
 
 class _Group:
-    """FIFO queue of pending requests sharing one (plan, labels?) shape."""
+    """FIFO queue of pending requests sharing one behavioral group key.
+    ``plan`` is the first-seen normalized plan/schedule of the group —
+    every member is behaviorally identical to it (same loop, same
+    per-step sigs), so dispatching all members under it is exact."""
 
-    def __init__(self, plan: DittoPlan):
+    def __init__(self, plan: DittoPlan | PlanSchedule):
         self.plan = plan
         self.pending: deque[_Pending] = deque()
 
@@ -114,7 +123,7 @@ class ServeScheduler:
     one point in time).
     """
 
-    def __init__(self, params, cfg, sched, plan: DittoPlan | None = None, *,
+    def __init__(self, params, cfg, sched, plan: DittoPlan | PlanSchedule | None = None, *,
                  cache: CompiledRunnerCache | None = None, eager: bool = True):
         self.session = ServeSession(params, cfg, sched,
                                     plan if plan is not None else DittoPlan(),
@@ -126,16 +135,31 @@ class ServeScheduler:
         self.dispatches: list[ServeResult] = []
 
     # ------------------------------------------------------------------ api
-    def submit(self, x: jax.Array, labels=None, plan: DittoPlan | None = None) -> Ticket:
+    @staticmethod
+    def _group_key(plan: DittoPlan | PlanSchedule) -> tuple:
+        """Behavioral coalescing key for a normalized plan or schedule:
+        the loop-level fields plus the ``(start, stop, cache_sig())``
+        segment partition. Built from ``cache_sig()`` rather than plan
+        equality so sig-equal plans/schedules constructed separately — a
+        constant schedule vs its bare plan, duck-typed plan subclasses —
+        land in one group; anything that can change the served rows
+        (different loop, different lowering at any step) cannot."""
+        segments = tuple((start, stop, p.cache_sig())
+                         for start, stop, p in segment_view(plan))
+        return (plan.steps, plan.sampler, plan.policy, plan.compiled,
+                plan.max_batch, segments)
+
+    def submit(self, x: jax.Array, labels=None,
+               plan: DittoPlan | PlanSchedule | None = None) -> Ticket:
         """Queue one request; returns its :class:`Ticket` immediately.
 
-        ``plan`` overrides the scheduler default for this request. Full
-        ``max_batch`` buckets are dispatched as soon as they fill (unless
-        ``eager=False``)."""
+        ``plan`` (a DittoPlan or PlanSchedule) overrides the scheduler
+        default for this request. Full ``max_batch`` buckets are
+        dispatched as soon as they fill (unless ``eager=False``)."""
         if x.shape[0] < 1:
             raise ValueError("empty request")
         plan = (plan if plan is not None else self.session.plan).normalized()
-        key = (plan, labels is not None)
+        key = (self._group_key(plan), labels is not None)
         group = self._groups.get(key)
         if group is None:
             group = self._groups[key] = _Group(plan)

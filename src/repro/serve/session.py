@@ -30,7 +30,7 @@ from typing import Any
 
 import jax
 
-from ..core.ditto.plan import UNSET, DittoPlan, plan_from_kwargs
+from ..core.ditto.plan import UNSET, DittoPlan, PlanSchedule, plan_from_kwargs
 from ..sim import harness
 from .bucketing import bucket_for
 from .cache import CompiledRunnerCache
@@ -88,9 +88,14 @@ class ServeSession:
     kernel (both bit-identical samples); each is part of the runner key
     (``plan.cache_sig()``), so plans differing in either knob never share
     a trace even when they share one cache.
+
+    ``plan`` may also be a :class:`repro.core.ditto.PlanSchedule` — per-
+    timestep kernel config: the denoise loop partitions by segment, each
+    distinct segment sig compiles once into the shared cache, and a
+    constant schedule reuses the bare plan's trace (same RunnerKey).
     """
 
-    def __init__(self, params, cfg, sched, plan: DittoPlan | None = None, *,
+    def __init__(self, params, cfg, sched, plan: DittoPlan | PlanSchedule | None = None, *,
                  cache: CompiledRunnerCache | None = None, steps=UNSET, sampler=UNSET,
                  policy=UNSET, compiled=UNSET, interpret=UNSET, collect_stats=UNSET,
                  block=UNSET, low_bits=UNSET, fused=UNSET, max_batch=UNSET):
@@ -107,12 +112,12 @@ class ServeSession:
         self.requests_served = 0
 
     # ------------------------------------------------------------------ api
-    def serve(self, x: jax.Array, labels=None, *, plan: DittoPlan | None = None
-              ) -> ServeResult:
+    def serve(self, x: jax.Array, labels=None, *,
+              plan: DittoPlan | PlanSchedule | None = None) -> ServeResult:
         """Serve one request batch; returns the sample at the TRUE batch
         size plus per-chunk records/engines for the design-point simulator.
-        ``plan`` overrides the session default for this request only (same
-        shared runner cache)."""
+        ``plan`` (a DittoPlan or PlanSchedule) overrides the session
+        default for this request only (same shared runner cache)."""
         plan = self.plan if plan is None else plan
         n = x.shape[0]
         chunks: list[ChunkResult] = []
@@ -128,7 +133,7 @@ class ServeSession:
         sample = samples[0] if len(samples) == 1 else jax.numpy.concatenate(samples, axis=0)
         return ServeResult(sample=sample, chunks=chunks)
 
-    def _serve_chunk(self, x, labels, plan: DittoPlan) -> ChunkResult:
+    def _serve_chunk(self, x, labels, plan: DittoPlan | PlanSchedule) -> ChunkResult:
         b = x.shape[0]
         # eager chunks run unbucketed (no trace to share) — bucket=None,
         # so pad accounting and the serve log can't claim a padded dispatch

@@ -11,7 +11,7 @@ import jax
 
 from ..core import diffusion
 from ..core.ditto import CAMBRICON_D, DIFFY, DITTO_HW, ITC, DittoEngine, make_denoise_fn
-from ..core.ditto.plan import UNSET, DittoPlan, plan_from_kwargs
+from ..core.ditto.plan import UNSET, DittoPlan, PlanSchedule, plan_from_kwargs
 from ..nn import dit as dit_mod
 from . import cycles
 
@@ -41,7 +41,7 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
 
 
 def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels=None,
-                  plan: DittoPlan | None = None, *, runner_cache=None,
+                  plan: DittoPlan | PlanSchedule | None = None, *, runner_cache=None,
                   bucket: int | None = None, steps=UNSET, sampler=UNSET, policy=UNSET,
                   compiled=UNSET, interpret=UNSET, collect_stats=UNSET, block=UNSET,
                   low_bits=UNSET, fused=UNSET):
@@ -62,7 +62,10 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels=None,
     ``DittoPlan()`` — the documented defaults (20-step ddim, defo,
     compiled), not an error. The per-knob keywords are a deprecated shim
     that builds the equivalent plan (and therefore the same runner-cache
-    key).
+    key). ``plan`` may also be a :class:`repro.core.ditto.PlanSchedule`:
+    the loop-level fields come off its base and the compiled step loop is
+    partitioned by segment (one trace per distinct segment sig, temporal
+    state carried across boundaries — see ``make_denoise_fn``).
 
     ``runner_cache`` (a repro.serve.CompiledRunnerCache) makes the compiled
     step persistent across calls: batches whose (cfg, frozen layer modes,

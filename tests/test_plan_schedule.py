@@ -1,0 +1,317 @@
+"""PlanSchedule: per-timestep plan schedules with segment-level traces.
+
+Contracts under test (docs/architecture.md §PlanSchedule):
+
+  * construction validates the partition — overlapping, gapped, empty or
+    uncovering segment lists raise ``ValueError``; deltas outside
+    ``SEGMENT_FIELDS`` or with invalid values raise at construction;
+  * normalization merges sig-equal neighbors, is idempotent, and is
+    invariant under resplitting a segment — two spellings of the same
+    per-step behavior compare (and hash) equal;
+  * a schedule of identical deltas IS the bare plan: same normalized
+    form, same ``RunnerKey``, zero new traces when served after it;
+  * trace count == number of distinct segment sigs — property-checked
+    against the runner cache's real trace counter (abstract tracing via
+    ``jax.eval_shape``; no kernel executes) and, on the serve path, via
+    full 12-step serving (the acceptance criterion);
+  * bit-identity: a schedule switching ``low_bits`` 8→4 at step k
+    produces, at every step, outputs bit-identical to the matching
+    constant plan — boundaries at steps {1, k, steps-1} plus a
+    degenerate one-step segment.
+
+Every partition property is a plain ``_check_*`` function over a seeded
+random partition of ``[0, steps)`` and driven two ways, following
+tests/test_kernel_properties.py: a deterministic seeded sweep that ALWAYS
+runs (this container has no hypothesis wheel), and — when hypothesis is
+importable — ``@given`` wrappers over the same checkers.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import trace_audit as ta
+from repro.core import diffusion
+from repro.core.ditto import (DittoEngine, DittoPlan, PlanSchedule, dit_runner,
+                              segment_resolved, segment_view)
+from repro.nn import dit as dit_mod
+from repro.serve import CompiledRunnerCache, ServeSession
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TINY = dit_mod.DiTCfg(d_model=16, n_layers=1, n_heads=2, patch=2, in_channels=2,
+                      input_size=4, n_classes=2)
+CFG = dit_mod.DiTCfg(d_model=64, n_layers=2, n_heads=2, patch=2, in_channels=4,
+                     input_size=8, n_classes=4)
+
+# the schedulable deltas a segment realistically carries (collect_stats
+# stays False so serve-path tests skip record synthesis)
+_DELTA_POOL = ({}, {"low_bits": 4}, {"fused": True}, {"low_bits": 4, "fused": True})
+
+
+def _random_partition(seed: int, max_steps: int = 24, empty_deltas: bool = False):
+    """Seed -> a valid (steps, segments) partition of [0, steps)."""
+    rng = np.random.RandomState(seed)
+    steps = int(rng.randint(1, max_steps + 1))
+    n_cuts = int(rng.randint(0, min(5, steps - 1) + 1)) if steps > 1 else 0
+    cuts = sorted(int(c) for c in
+                  rng.choice(np.arange(1, steps), size=n_cuts, replace=False))
+    bounds = [0] + cuts + [steps]
+    pool = ({},) if empty_deltas else _DELTA_POOL
+    segments = [(bounds[i], bounds[i + 1], pool[rng.randint(len(pool))])
+                for i in range(len(bounds) - 1)]
+    return steps, segments
+
+
+def _schedule(steps, segments, **plan_kw):
+    base = DittoPlan(steps=steps, policy="diff", collect_stats=False, **plan_kw)
+    return PlanSchedule(base, segments)
+
+
+# ------------------------------------------------------------- construction
+@pytest.mark.parametrize("segments,err", [
+    ([(0, 4, {}), (5, 12, {})], "gap"),
+    ([(0, 6, {}), (4, 12, {})], "overlap"),
+    ([(0, 0, {}), (0, 12, {})], "empty segment"),
+    ([(0, 4, {})], "gap"),                        # doesn't reach steps
+    ([(2, 12, {})], "gap"),                       # doesn't start at 0
+    ([(0, 14, {})], "exceeds steps"),
+    ([], "no segments"),
+    ([(0, 12, {"steps": 4})], "non-segment"),     # loop field in a delta
+    ([(0, 12, {"low_bits": 5})], "low_bits"),     # invalid delta value
+])
+def test_invalid_partitions_raise_value_error(segments, err):
+    with pytest.raises(ValueError, match=err):
+        PlanSchedule(DittoPlan(steps=12), segments)
+
+
+def test_base_must_be_a_plan():
+    with pytest.raises(TypeError):
+        PlanSchedule("not-a-plan", [(0, 12, {})])
+
+
+def _check_mutations_raise(seed: int):
+    """Any mutation of a valid partition — dropped, stretched, emptied or
+    duplicated segment — fails construction."""
+    steps, segments = _random_partition(seed)
+    with pytest.raises(ValueError):  # drop the first segment: gap (or empty)
+        _schedule(steps, segments[1:])
+    start, stop, delta = segments[-1]
+    with pytest.raises(ValueError):  # stretch the last stop past steps
+        _schedule(steps, segments[:-1] + [(start, stop + 1, delta)])
+    with pytest.raises(ValueError):  # collapse the last segment to empty
+        _schedule(steps, segments[:-1] + [(start, start, delta)])
+    if len(segments) > 1:
+        with pytest.raises(ValueError):  # duplicate a segment: overlap
+            _schedule(steps, segments + [segments[0]])
+
+
+# ------------------------------------------------------------ normalization
+def _check_merges_sig_equal_neighbors(seed: int):
+    steps, segments = _random_partition(seed)
+    sched = _schedule(steps, segments)
+    norm = sched.normalized()
+    # expected runs: adjacent segments whose resolved plans' sigs agree merge
+    sigs = [p.cache_sig() for _, _, p in sched.segment_plans()]
+    runs = 1 + sum(1 for a, b in zip(sigs, sigs[1:]) if a != b)
+    assert len(norm.segments) == runs
+    assert norm.normalized() == norm  # idempotent
+    # per-step behavior is untouched by normalization
+    for step in range(steps):
+        assert norm.plan_for(step).cache_sig() == sched.plan_for(step).cache_sig()
+    # distinct sigs are what the schedule will trace
+    assert len(sched.cache_sigs()) == len(set(sigs))
+    assert len(sched.cache_sigs()) <= len(norm.segments)
+
+
+def _check_resplit_invariance(seed: int):
+    """Splitting a segment in two (same delta) is a different spelling of
+    the same schedule: normalized forms — and hashes — are equal."""
+    steps, segments = _random_partition(seed)
+    rng = np.random.RandomState(seed + 1)
+    wide = [i for i, (s, e, _) in enumerate(segments) if e - s >= 2]
+    if not wide:
+        return  # all one-step segments: nothing to split
+    i = wide[rng.randint(len(wide))]
+    start, stop, delta = segments[i]
+    mid = int(rng.randint(start + 1, stop))
+    resplit = segments[:i] + [(start, mid, delta), (mid, stop, delta)] + segments[i + 1:]
+    a, b = _schedule(steps, segments), _schedule(steps, resplit)
+    assert a != b  # raw spellings differ ...
+    assert a.normalized() == b.normalized()  # ... normalized forms don't
+    assert hash(a.normalized()) == hash(b.normalized())
+
+
+def _check_identical_delta_is_bare_plan(seed: int):
+    """(a) of the satellite: however [0, steps) is partitioned, empty
+    deltas make the schedule constant — it resolves to the bare plan and
+    lands on the bare plan's RunnerKey (the same trace)."""
+    steps, segments = _random_partition(seed, empty_deltas=True)
+    sched = _schedule(steps, segments)
+    base = sched.base
+    assert sched.is_constant()
+    assert sched.constant_plan() == base.normalized()
+    assert segment_resolved(sched) == base.normalized()
+    assert len(sched.normalized().segments) == 1
+    cache = CompiledRunnerCache()
+    modes = ta.uniform_modes(TINY, "diff")
+    assert (cache.key_for(TINY, modes, sched, bucket=2)
+            == cache.key_for(TINY, modes, base, bucket=2))
+    assert segment_view(sched) == segment_view(base)
+
+
+def _check_trace_count_is_distinct_sigs(seed: int):
+    """(b) of the satellite, against the REAL trace counter: replaying the
+    denoise loop's per-segment cache lookups (abstract tracing only — no
+    kernel executes, exactly like the trace audit) compiles one trace per
+    distinct segment sig, never one per step or per segment spelling."""
+    steps, segments = _random_partition(seed, max_steps=8)
+    sched = _schedule(steps, segments).normalized()
+    cache = CompiledRunnerCache()
+    modes = ta.uniform_modes(TINY, "diff")
+    dparams, mparams, lat, t, labels = ta.abstract_inputs(TINY, 2)
+    state = ta.abstract_state(TINY, 2)
+    traced = set()
+    for step in range(steps):  # the loop make_denoise_fn runs
+        fn = cache.step_for(TINY, modes, sched.plan_for(step), bucket=2)
+        if id(fn) not in traced:
+            jax.eval_shape(fn, dparams, mparams, state, lat, t, labels)
+            traced.add(id(fn))
+    assert cache.n_traces == len(sched.cache_sigs())
+    assert len(cache) == len(sched.cache_sigs())
+
+
+# --------------------------------------- deterministic sweeps (always run)
+@pytest.mark.parametrize("seed", range(25))
+def test_partition_properties(seed):
+    _check_mutations_raise(seed)
+    _check_merges_sig_equal_neighbors(seed)
+    _check_resplit_invariance(seed)
+    _check_identical_delta_is_bare_plan(seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_trace_count_equals_distinct_sigs(seed):
+    _check_trace_count_is_distinct_sigs(seed)
+
+
+# ------------------------------------------- hypothesis wrappers (optional)
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_hyp_mutations_raise(seed):
+        _check_mutations_raise(seed)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_hyp_merges_sig_equal_neighbors(seed):
+        _check_merges_sig_equal_neighbors(seed)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_hyp_resplit_invariance(seed):
+        _check_resplit_invariance(seed)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_hyp_identical_delta_is_bare_plan(seed):
+        _check_identical_delta_is_bare_plan(seed)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_hyp_trace_count_equals_distinct_sigs(seed):
+        _check_trace_count_is_distinct_sigs(seed)
+
+
+# ---------------------------------------------------------- the serve path
+@pytest.fixture(scope="module")
+def setup():
+    params = dit_mod.init(jax.random.PRNGKey(0), CFG)
+    sched = diffusion.cosine_schedule(100)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (2, CFG.input_size, CFG.input_size, CFG.in_channels))
+    return params, sched, x
+
+
+@pytest.mark.slow
+def test_two_segment_schedule_compiles_exactly_two_traces(setup):
+    """The acceptance criterion: a 2-segment schedule over a 12-step loop
+    compiles exactly 2 traces (runner-cache trace counter), and serving
+    it is bit-identical to both matching constant plans."""
+    params, noise, x = setup
+    base = DittoPlan(steps=12, policy="diff", max_batch=4, collect_stats=False)
+    schedule = PlanSchedule(base, [(0, 4, {}),
+                                   (4, 12, dict(low_bits=4, fused=True))])
+    cache = CompiledRunnerCache()
+    sess = ServeSession(params, CFG, noise, schedule, cache=cache)
+    out = sess.serve(x).sample
+    assert cache.n_traces == 2, cache.stats()
+    assert len(cache) == 2
+    ref8 = ServeSession(params, CFG, noise, base).serve(x).sample
+    ref4 = ServeSession(params, CFG, noise,
+                        base.replace(low_bits=4, fused=True)).serve(x).sample
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref8))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref4))
+
+
+@pytest.mark.slow
+def test_constant_schedule_reuses_the_bare_plans_trace(setup):
+    """The other acceptance leg: after serving the bare plan, a constant
+    schedule (spelled as two segments) causes ZERO new traces and returns
+    bit-identical samples."""
+    params, noise, x = setup
+    base = DittoPlan(steps=3, policy="diff", max_batch=4, collect_stats=False)
+    cache = CompiledRunnerCache()
+    sess = ServeSession(params, CFG, noise, base, cache=cache)
+    ref = sess.serve(x).sample
+    traces0, runners0 = cache.n_traces, len(cache)
+    const = PlanSchedule(base, [(0, 2, {}), (2, 3, {})])
+    out = sess.serve(x, plan=const).sample
+    assert cache.n_traces == traces0 and len(cache) == runners0 == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def _trajectory(params, noise, x, plan, cache):
+    """Per-step denoise outputs + final sample for one trajectory."""
+    eng = DittoEngine(policy=plan.policy, collect_oracle=False)
+    fn = dit_runner.make_denoise_fn(params, CFG, eng, plan, runner_cache=cache,
+                                    bucket=x.shape[0])
+    outs = []
+
+    def probe(z, t, labels):
+        y = fn(z, t, labels)
+        outs.append(np.asarray(y))
+        return y
+
+    eng.begin_sample()
+    sample = diffusion.SAMPLERS[plan.sampler](noise, probe, x, steps=plan.steps,
+                                              labels=None)
+    return outs, np.asarray(sample)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("segments", [
+    [(0, 1, {}), (1, 4, {"low_bits": 4})],          # boundary at step 1
+    [(0, 2, {}), (2, 4, {"low_bits": 4})],          # boundary at step k=2
+    [(0, 3, {}), (3, 4, {"low_bits": 4})],          # boundary at steps-1
+    [(0, 1, {}), (1, 2, {"low_bits": 4}), (2, 4, {})],  # one-step segment
+], ids=["k1", "k2", "k3", "one-step"])
+def test_boundary_bit_identity_at_every_step(setup, segments):
+    """A schedule switching low_bits 8→4 at step k produces, at EVERY
+    step, outputs bit-identical to the matching constant plan run from
+    the same state (int8 and packed-int4 are mutually bit-exact, so one
+    int8 run is the reference for all segments — including the one-step
+    segment that switches back)."""
+    params, noise, x = setup
+    base = DittoPlan(steps=4, policy="diff", max_batch=4, collect_stats=False)
+    cache = CompiledRunnerCache()  # shared: segment traces reused across runs
+    ref_outs, ref_sample = _trajectory(params, noise, x, base, cache)
+    schedule = PlanSchedule(base, segments)
+    outs, sample = _trajectory(params, noise, x, schedule, cache)
+    assert len(outs) == len(ref_outs) == 4
+    for step, (got, ref) in enumerate(zip(outs, ref_outs)):
+        np.testing.assert_array_equal(got, ref, err_msg=f"step {step}")
+    np.testing.assert_array_equal(sample, ref_sample)

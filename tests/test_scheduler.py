@@ -12,15 +12,20 @@ Contracts under test (docs/architecture.md §scheduler):
   * per-request plan overrides share one runner cache but never share a
     trace when their plans lower differently;
   * requests split across dispatches reassemble in row order;
-  * eager dispatch fires exactly when a plan group fills a bucket.
+  * eager dispatch fires exactly when a plan group fills a bucket;
+  * grouping is behavioral (cache_sig()-based): sig-equal plans and
+    PlanSchedules constructed separately coalesce, behaviorally
+    different schedules never batch together.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import diffusion
-from repro.core.ditto import DittoPlan, quant
+from repro.core.ditto import DittoPlan, PlanSchedule, quant
 from repro.nn import dit as dit_mod
 from repro.serve import CompiledRunnerCache, ServeScheduler, ServeSession
 
@@ -168,3 +173,108 @@ def test_submit_rejects_empty_request(setup):
     s = ServeScheduler(params, CFG, sched, PLAN)
     with pytest.raises(ValueError):
         s.submit(jnp.zeros((0, 8, 8, 4)), None)
+
+
+# ------------------------------------------------------ schedule coalescing
+# The grouping key is behavioral (loop fields + normalized per-segment
+# cache_sig()s), not plan-object equality: sig-equal plans/schedules
+# constructed separately must coalesce, behaviorally different ones must
+# never batch together.
+SCHED_A = PlanSchedule(PLAN, [(0, 2, {}), (2, 3, dict(low_bits=4))])
+
+
+def test_equal_schedules_coalesce_into_one_group(setup):
+    """Two DIFFERENT schedule objects that normalize identically (one
+    spells the int8 prefix as two segments) land in one bucket group."""
+    params, sched = setup
+    other = PlanSchedule(PLAN, [(0, 1, {}), (1, 2, {}), (2, 3, dict(low_bits=4))])
+    assert other is not SCHED_A and other != SCHED_A  # raw objects differ ...
+    s = ServeScheduler(params, CFG, sched, PLAN, eager=False)
+    s.submit(*_request(2, 40), plan=SCHED_A)
+    s.submit(*_request(2, 41), plan=other)
+    assert s.stats()["plan_groups"] == 1  # ... but the group key coalesces
+
+
+def test_constant_schedule_coalesces_with_bare_plan(setup):
+    """Satellite-5 regression: grouping by the raw normalized plan object
+    would split a constant schedule from its equivalent bare plan (they
+    are different types); the cache_sig()-based key coalesces them."""
+    params, sched = setup
+    const = PlanSchedule(PLAN, [(0, 1, {}), (1, 3, {})])
+    s = ServeScheduler(params, CFG, sched, PLAN, eager=False)
+    s.submit(*_request(2, 42))  # session default: the bare plan
+    s.submit(*_request(2, 43), plan=const)
+    assert s.stats()["plan_groups"] == 1
+
+
+def test_sig_equal_duck_typed_plan_coalesces(setup):
+    """Same regression from the other side: a duck-typed plan subclass is
+    never equal to a DittoPlan (dataclass eq checks the class), but when
+    its loop fields and cache_sig() agree it must share the group."""
+
+    @dataclasses.dataclass(frozen=True)
+    class TaggedPlan(DittoPlan):
+        tag: str = "client-a"  # not a sig field: behaviorally identical
+
+    params, sched = setup
+    tagged = TaggedPlan(**dataclasses.asdict(PLAN))
+    assert tagged != PLAN and tagged.cache_sig() == PLAN.cache_sig()
+    s = ServeScheduler(params, CFG, sched, PLAN, eager=False)
+    s.submit(*_request(2, 44))
+    s.submit(*_request(2, 45), plan=tagged)
+    assert s.stats()["plan_groups"] == 1
+
+
+def test_behaviorally_distinct_schedules_split_groups(setup):
+    """Schedules differing in any step's lowering (same sigs, different
+    boundary) never batch together."""
+    params, sched = setup
+    later = PlanSchedule(PLAN, [(0, 1, {}), (1, 3, dict(low_bits=4))])
+    s = ServeScheduler(params, CFG, sched, PLAN, eager=False)
+    s.submit(*_request(2, 46), plan=SCHED_A)
+    s.submit(*_request(2, 47), plan=later)
+    assert s.stats()["plan_groups"] == 2
+
+
+@pytest.mark.slow
+def test_mixed_schedules_share_cache_but_not_traces(setup):
+    """An int8→int4 schedule and a plain int8 plan coexist in one
+    scheduler/cache: two groups, and the schedule's extra segment is the
+    only extra runner — sig-equal segments share the bare plan's trace."""
+    params, sched = setup
+    cache = CompiledRunnerCache()
+    s = ServeScheduler(params, CFG, sched, PLAN, cache=cache)
+    ta = s.submit(*_request(2, 50), plan=SCHED_A)
+    t8 = s.submit(*_request(2, 51))
+    assert s.stats()["plan_groups"] == 2
+    s.flush()
+    assert ta.done and t8.done
+    keys = list(cache.trace_counts)
+    assert {k.low_bits for k in keys} == {4, 8}
+    assert len(cache) == 2  # int8 segment trace shared with the bare plan
+    # both tickets bit-identical to solo serves under the matching plan
+    sess = ServeSession(params, CFG, sched, PLAN, cache=CompiledRunnerCache())
+    for t, seed, plan in ((ta, 50, SCHED_A), (t8, 51, PLAN)):
+        ref = sess.serve(*_request(2, seed), plan=plan).sample
+        np.testing.assert_array_equal(np.asarray(t.result()), np.asarray(ref))
+
+
+@pytest.mark.slow
+def test_ticket_row_slicing_bit_identical_under_schedules(setup):
+    """Ragged requests coalesced under one schedule: every ticket's rows
+    (including a request split across dispatches) equal its own solo
+    serve under the same schedule."""
+    params, sched = setup
+    sizes = [3, 3, 2]
+    reqs = [_request(b, 60 + i) for i, b in enumerate(sizes)]
+    sess = ServeSession(params, CFG, sched, SCHED_A)
+    refs = [sess.serve(x, l).sample for x, l in reqs]
+
+    s = ServeScheduler(params, CFG, sched, SCHED_A)
+    tickets = [s.submit(x, l) for x, l in reqs]
+    s.flush()
+    assert s.stats()["dispatches"] == 2 and s.pad_rows == 0
+    for t, ref, b in zip(tickets, refs, sizes):
+        got = t.result()
+        assert got.shape[0] == b
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

@@ -12,6 +12,12 @@ them unchanged):
     identical computations get distinct keys. The audit must flag
     ``trace-dup``.
 
+Both directions are re-proved at the schedule level through
+``expand_schedule``: a ``PlanSchedule`` over a leaky base collides its
+int8/int4 segments on one key (``trace-stale``), and
+``RedundantSchedule`` splits sig-equal segments per start step
+(``trace-dup``).
+
 Everything here is ``jax.make_jaxpr`` / ``jax.eval_shape`` over
 ``ShapeDtypeStruct`` inputs: no weights exist and no kernel executes —
 demonstrated directly by fingerprinting a plan with ``interpret=False``
@@ -23,7 +29,7 @@ import dataclasses
 import pytest
 
 from repro.analysis import trace_audit as ta
-from repro.core.ditto.plan import DittoPlan
+from repro.core.ditto.plan import DittoPlan, PlanSchedule
 from repro.kernels.common import resolve_interpret
 from repro.nn import dit as dit_mod
 
@@ -128,6 +134,72 @@ def test_redundant_sig_field_flagged_as_duplication(state):
         [_case("mb64", r1.cache_sig(), fp(r1, state), r1),
          _case("mb8", r2.cache_sig(), fp(r2, state), r2)], group="dup")
     assert [f.rule for f in found] == ["trace-dup"]  # ... same computation
+
+
+# ---------------------------------------------- injected schedule failures
+def test_leaky_schedule_flagged_as_stale_trace(state):
+    """Schedule-level stale direction: over a leaky base, the int8 and
+    int4+fused segments of a histogram-style schedule collide on one
+    cache key, so the late segment would silently reuse the early
+    segment's lowering. ``expand_schedule`` must surface the collision."""
+    sched = PlanSchedule(LeakyPlan(collect_stats=False, steps=12),
+                         [(0, 6, {}), (6, 12, {"low_bits": 4})])
+    cases = ta.expand_schedule("leaky", sched)
+    assert len(cases) == 2  # unequal plans: normalization must NOT merge
+    assert cases[0][1].cache_sig() == cases[1][1].cache_sig()
+    found = ta.audit_cases(
+        [_case(label, p.cache_sig(), fp(p, state), p) for label, p in cases],
+        group="leaky-sched")
+    assert [f.rule for f in found] == ["trace-stale"]
+    assert "missing from cache_sig()" in found[0].message
+
+
+@dataclasses.dataclass(frozen=True)
+class _StepTagged(DittoPlan):
+    """A plan whose sig leaks its segment's start step."""
+
+    step_tag: int = 0
+
+    def cache_sig(self):
+        return DittoPlan.cache_sig(self) + (self.step_tag,)
+
+
+class RedundantSchedule(PlanSchedule):
+    """Per-segment sig split — the schedule-level trace-duplication bug:
+    every segment gets its own cache key even when the lowerings are
+    identical, compiling one trace per segment instead of per distinct
+    sig (the per-step version of the bug ``steps`` used to be)."""
+
+    def segment_plans(self):
+        return tuple((start, stop,
+                      _StepTagged(**dataclasses.asdict(p), step_tag=start))
+                     for start, stop, p in PlanSchedule.segment_plans(self))
+
+
+def test_redundant_schedule_flagged_as_duplication(state):
+    sched = RedundantSchedule(DittoPlan(collect_stats=False, steps=12),
+                              [(0, 6, {}), (6, 12, {})])
+    cases = ta.expand_schedule("dup", sched)
+    assert len(cases) == 2  # tag-split plans survive normalization ...
+    labels = [label for label, _ in cases]
+    sigs = [p.cache_sig() for _, p in cases]
+    assert sigs[0] != sigs[1]  # ... with distinct keys
+    found = ta.audit_cases(
+        [_case(label, sig, fp(p, state), p)
+         for (label, p), sig in zip(cases, sigs)], group="dup-sched")
+    assert [f.rule for f in found] == ["trace-dup"]
+    assert labels == ["dup[0:6)", "dup[6:12)"]
+
+
+def test_constant_schedule_expands_to_the_bare_plans_case():
+    """The healthy counterpart: a constant schedule audits as exactly its
+    bare plan — one case, the bare sig — so the shipped matrix's 'const'
+    entry proves zero new traces by construction."""
+    base = DittoPlan(collect_stats=False, steps=12)
+    cases = ta.expand_schedule(
+        "const", PlanSchedule(base, [(0, 5, {}), (5, 12, {})]))
+    assert [(label, p.cache_sig()) for label, p in cases] == \
+        [("const[0:12)", base.normalized().cache_sig())]
 
 
 # --------------------------------------------------------- the shipped tree
