@@ -1,0 +1,139 @@
+"""Serving-latency benchmark: async SLO-aware dispatch vs sync flush.
+
+A seeded Poisson request stream (ragged batch 1-3 under max_batch=4) is
+replayed against the dit* model three times:
+
+  sync      : the pre-async serving shape — eager full-bucket dispatch at
+              submit, everything still queued waits for the END-of-stream
+              flush. A ragged request that lands in a partially-filled
+              bucket during an arrival lull waits the whole lull out; the
+              tail latencies are the stream's gaps, not its compute.
+  deadline  : the same submissions through ``async_mode=True`` with a
+              per-request latency budget (``deadline_ms``): full buckets
+              still dispatch free, but a request whose budget nears fires
+              a deliberate partial-bucket dispatch — p99 becomes
+              budget + serve time instead of lull + serve time, at the
+              cost of the partial dispatches' pad rows.
+  warm      : the deadline regime after ``warmup()`` AOT-compiles the
+              bucket ladder — the first request of each bucket skips
+              trace AND compile, so the cold-start spike leaves p50/p99.
+
+Per-request samples are asserted BIT-IDENTICAL across all three regimes
+(batch composition and dispatch timing are invisible: per-sample
+calibration — the invariant tests/test_async_serving.py property-tests).
+Reported per regime: p50/p99 request latency (submit -> completion on the
+scheduler clock), throughput, pad rows, dispatch-trigger mix and deadline
+misses; plus first-request latency cold vs warmed. Results land in
+benchmarks/BENCH_serve.json (common.record_perf).
+
+    PYTHONPATH=src python benchmarks/bench_latency.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import common
+from repro.serve import CompiledRunnerCache, DittoPlan, ServeScheduler
+
+STEPS = 6
+MAX_BATCH = 4
+N_REQUESTS = 14
+MEAN_GAP_S = 0.3  # Poisson arrivals: exponential inter-arrival times
+DEADLINE_MS = 800.0
+INTERVAL_MS = 50.0
+SEED = 42
+
+
+def _stream():
+    rng = np.random.default_rng(SEED)
+    arrivals = np.cumsum(rng.exponential(MEAN_GAP_S, size=N_REQUESTS))
+    sizes = rng.integers(1, MAX_BATCH, size=N_REQUESTS)  # ragged on purpose
+    return arrivals, sizes
+
+
+def _replay(params, dcfg, sched, plan, requests, arrivals, *,
+            async_mode, deadline_ms=None, warmup=False):
+    s = ServeScheduler(params, dcfg, sched, plan, cache=CompiledRunnerCache(),
+                       async_mode=async_mode, dispatch_interval_ms=INTERVAL_MS)
+    warm = s.warmup() if warmup else None
+    t0 = time.monotonic()
+    tickets = []
+    for (x, labels), at in zip(requests, arrivals):
+        ahead = at - (time.monotonic() - t0)
+        if ahead > 0:
+            time.sleep(ahead)
+        tickets.append(s.submit(x, labels, deadline_ms=deadline_ms))
+    if async_mode:
+        outs = [t.result(timeout=600.0) for t in tickets]
+        s.close()
+    else:
+        s.flush()  # the sync server's only answer to a ragged tail
+        outs = [t.result() for t in tickets]
+    wall = time.monotonic() - t0
+    lats = [t.done_t - t.submit_t for t in tickets]
+    return dict(outs=outs, lats_ms=[l * 1e3 for l in lats], wall_s=wall,
+                stats=s.stats(), warm=warm)
+
+
+def run():
+    bm = common.MODELS["dit*"]
+    dcfg, params = common.train_or_load(bm)
+    sched = common.schedule_for(bm)
+    plan = DittoPlan(steps=STEPS, sampler=bm.sampler, collect_stats=False,
+                     max_batch=MAX_BATCH)
+    arrivals, sizes = _stream()
+    requests = [common.sample_inputs(bm, batch=int(b), seed=300 + i)
+                for i, b in enumerate(sizes)]
+
+    sync = _replay(params, dcfg, sched, plan, requests, arrivals,
+                   async_mode=False)
+    ddl = _replay(params, dcfg, sched, plan, requests, arrivals,
+                  async_mode=True, deadline_ms=DEADLINE_MS)
+    warm = _replay(params, dcfg, sched, plan, requests, arrivals,
+                   async_mode=True, deadline_ms=DEADLINE_MS, warmup=True)
+
+    # acceptance property: dispatch timing is invisible in the samples
+    for a, b, c in zip(sync["outs"], ddl["outs"], warm["outs"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def pct(lats, q):
+        return round(float(np.percentile(lats, q)), 1)
+
+    n_rows = int(sizes.sum())
+    rows = [
+        ("bench_latency/requests", 0, N_REQUESTS),
+        ("bench_latency/request_rows", 0, n_rows),
+        ("bench_latency/mean_gap_ms", 0, MEAN_GAP_S * 1e3),
+        ("bench_latency/deadline_budget_ms", 0, DEADLINE_MS),
+        ("bench_latency/sync_p50_ms", 0, pct(sync["lats_ms"], 50)),
+        ("bench_latency/sync_p99_ms", 0, pct(sync["lats_ms"], 99)),
+        ("bench_latency/sync_throughput_rps", 0,
+         round(N_REQUESTS / sync["wall_s"], 2)),
+        ("bench_latency/sync_pad_rows", 0, sync["stats"]["pad_rows"]),
+        ("bench_latency/deadline_p50_ms", 0, pct(ddl["lats_ms"], 50)),
+        ("bench_latency/deadline_p99_ms", 0, pct(ddl["lats_ms"], 99)),
+        ("bench_latency/deadline_throughput_rps", 0,
+         round(N_REQUESTS / ddl["wall_s"], 2)),
+        ("bench_latency/deadline_pad_rows", 0, ddl["stats"]["pad_rows"]),
+        ("bench_latency/deadline_trigger_mix", 0, ddl["stats"]["triggers"]),
+        ("bench_latency/deadline_misses", 0, ddl["stats"]["deadline_misses"]),
+        ("bench_latency/p99_speedup_vs_sync", 0,
+         round(pct(sync["lats_ms"], 99) / max(pct(ddl["lats_ms"], 99), 1e-9), 2)),
+        ("bench_latency/warm_aot_compiled", 0, warm["warm"]["aot_compiled"]),
+        ("bench_latency/warmup_wall_s", 0, round(warm["warm"]["wall_s"], 2)),
+        ("bench_latency/cold_first_request_ms", 0, round(ddl["lats_ms"][0], 1)),
+        ("bench_latency/warm_first_request_ms", 0, round(warm["lats_ms"][0], 1)),
+        ("bench_latency/warm_p50_ms", 0, pct(warm["lats_ms"], 50)),
+        ("bench_latency/warm_p99_ms", 0, pct(warm["lats_ms"], 99)),
+        ("bench_latency/warm_aot_hits", 0, warm["stats"]["aot_hits"]),
+        ("bench_latency/bitidentical_samples", 0, True),
+    ]
+    common.record_perf("bench_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -32,6 +32,7 @@ MODULES = [
     "bench_fused_step",
     "bench_scheduler",
     "bench_schedule",
+    "bench_latency",
 ]
 
 

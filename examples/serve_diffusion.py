@@ -19,10 +19,20 @@ compare against), and the runner-cache hit/trace stats. Fault tolerance:
 the serving loop checkpoints its request log atomically and can resume
 mid-queue.
 
+With ``--deadline-ms`` (and/or ``--warmup``) the same queue instead goes
+through the async SLO-aware front-end (:class:`repro.serve.ServeScheduler`
+with ``async_mode=True``): every request is submitted individually with a
+latency budget, a background dispatch thread coalesces them into bucket
+batches — full buckets dispatch immediately, a request whose budget nears
+fires a partial-bucket dispatch — and ``--warmup`` AOT-compiles the
+bucket ladder up front so no request pays trace+compile. Samples are
+bit-identical to the synchronous path.
+
     PYTHONPATH=src python examples/serve_diffusion.py [--requests 6] [--batch 4] [--eager]
     PYTHONPATH=src python examples/serve_diffusion.py --low-bits 4   # packed-int4 low tiles
     PYTHONPATH=src python examples/serve_diffusion.py --fused        # single-pass fused kernel
     PYTHONPATH=src python examples/serve_diffusion.py --int4-from 8  # int8 early, int4+fused late
+    PYTHONPATH=src python examples/serve_diffusion.py --deadline-ms 2000 --warmup  # async SLO mode
 """
 import argparse
 import json
@@ -41,7 +51,7 @@ from repro import configs
 from repro.core import diffusion
 from repro.data.synthetic import DataCfg, batch_for
 from repro.launch import steps as steps_mod
-from repro.serve import DittoPlan, PlanSchedule, ServeSession
+from repro.serve import DittoPlan, PlanSchedule, ServeScheduler, ServeSession
 from repro.sim import harness
 
 
@@ -57,6 +67,47 @@ def build_model(train_steps=200):
     for step in range(train_steps):
         state, _ = train(state, batch_for(arch, dc, step))
     return arch, dcfg, state["params"]
+
+
+def serve_async(args, arch, dcfg, params, sched, plan, done, queue):
+    """Async SLO path: one submission per request, background dispatch."""
+    import time
+
+    s = ServeScheduler(params, dcfg, sched, plan, async_mode=True,
+                       dispatch_interval_ms=25.0)
+    if args.warmup:
+        w = s.warmup()
+        print(f"[serve] warmup: {w['aot_compiled']} executable(s) AOT-compiled "
+              f"({w['traces']} trace(s)) in {w['wall_s']:.1f}s")
+    t0 = time.monotonic()
+    tickets = []
+    with s:
+        for rid, cls in queue:
+            key = jax.random.fold_in(jax.random.PRNGKey(42), rid)
+            x = jax.random.normal(
+                key, (1, arch.input_size, arch.input_size, arch.in_channels))
+            tickets.append(
+                (rid, cls, s.submit(x, jnp.array([cls]),
+                                    deadline_ms=args.deadline_ms)))
+        for _, _, t in tickets:
+            t.result(timeout=600.0)
+        st = s.stats()
+    wall = time.monotonic() - t0
+    for rid, cls, t in tickets:
+        lat = t.done_t - t.submit_t
+        done[rid] = {"class": cls, "wall_s": lat}
+        print(f"[serve] request {rid}: latency {lat * 1e3:.0f}ms")
+    tmp = args.log + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(done, f)
+    os.replace(tmp, args.log)
+    print(f"[serve] served {len(tickets)} request(s) in {wall:.1f}s: "
+          f"{st['dispatches']} dispatch(es) {st['triggers']}, "
+          f"{st['pad_rows']} pad row(s), "
+          f"{st['deadline_misses']} deadline miss(es)")
+    print(f"[serve] runner cache: {st['runners']} compiled runner(s), "
+          f"{st['traces']} trace(s), {st['hits']} hit(s), "
+          f"{st['aot_hits']} AOT hit(s)")
 
 
 def main(argv=None):
@@ -80,6 +131,15 @@ def main(argv=None):
                          "steps [0, STEP) run the base lowering, steps "
                          "[STEP, --steps) run low_bits=4 + fused (bit-identical "
                          "samples; exactly one extra trace for the late segment)")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="serve through the async SLO-aware ServeScheduler: "
+                         "each request carries this latency budget; partial "
+                         "buckets dispatch when a budget nears instead of "
+                         "waiting for a full bucket")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the whole bucket ladder before serving "
+                         "(implies the async scheduler) so the first request "
+                         "of each bucket skips trace AND compile")
     args = ap.parse_args(argv)
     if args.int4_from is not None and not 0 < args.int4_from < args.steps:
         ap.error(f"--int4-from must be inside (0, {args.steps})")
@@ -97,9 +157,12 @@ def main(argv=None):
     # ONE DittoPlan is the whole serving configuration: sampling loop,
     # kernel lowering and serve behavior (the plan is also the runner-cache
     # trace identity — see repro.serve.cache.RunnerKey)
+    # bucket ladders are power-of-two (bucket_for/DittoPlan validate this
+    # now), so round a ragged --batch up to the next bucket
+    max_batch = 1 << (max(args.batch, 1) - 1).bit_length()
     plan = DittoPlan(steps=args.steps, compiled=not args.eager,
                      low_bits=args.low_bits, fused=args.fused,
-                     max_batch=max(args.batch, 1))
+                     max_batch=max_batch)
     if args.int4_from is not None:
         # a schedule is a plan per phase: the denoise loop partitions by
         # segment, each distinct segment sig compiles one trace
@@ -107,6 +170,8 @@ def main(argv=None):
             (0, args.int4_from, {}),
             (args.int4_from, args.steps, dict(low_bits=4, fused=True)),
         ])
+    if args.deadline_ms is not None or args.warmup:
+        return serve_async(args, arch, dcfg, params, sched, plan, done, queue)
     sess = ServeSession(params, dcfg, sched, plan)
     while queue:
         batch_reqs, queue = queue[: args.batch], queue[args.batch :]

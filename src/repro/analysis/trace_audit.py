@@ -169,7 +169,10 @@ def abstract_inputs(cfg, batch: int):
         dparams[nm] = dict(a_scale=S((bh, 1, 1), jnp.float32),
                            b_scale=S((bh, 1, 1), jnp.float32))
     lat = S((batch, cfg.input_size, cfg.input_size, cfg.in_channels), jnp.float32)
-    t = S((batch,), jnp.float32)
+    # int32, matching the samplers' jnp.full(..., t, jnp.int32) exactly —
+    # CompiledRunnerCache.warmup lowers AOT executables from these structs,
+    # so any dtype drift from the live call would defeat the warmup
+    t = S((batch,), jnp.int32)
     labels = S((batch,), jnp.int32)
     return dparams, mparams, lat, t, labels
 
@@ -276,6 +279,7 @@ def default_plan_matrix():
         ("sampler-plms", base.replace(sampler="plms")),
         ("policy-diff", base.replace(policy="diff")),
         ("max-batch-8", base.replace(max_batch=8)),
+        ("deadline-250", base.replace(deadline_ms=250.0)),
         ("eager", base.replace(compiled=False)),
         # distinct-sig probes: each must select a distinct jaxpr
         ("stats", base.replace(collect_stats=True)),

@@ -12,8 +12,8 @@ configuration in three groups:
              Pallas step lowers to (validated once, at construction);
   sampling : ``steps``, ``sampler``, ``policy`` — the denoising loop and
              the engine's mode policy;
-  serve    : ``compiled``, ``collect_stats``, ``max_batch`` — runtime
-             behavior of the serving layer.
+  serve    : ``compiled``, ``collect_stats``, ``max_batch``,
+             ``deadline_ms`` — runtime behavior of the serving layer.
 
 A plan IS a trace identity: :meth:`cache_sig` returns the ordered tuple
 of exactly the fields that select a distinct XLA lowering, and
@@ -65,6 +65,7 @@ class DittoPlan:
     compiled: bool = True
     collect_stats: bool = True
     max_batch: int = DEFAULT_MAX_BATCH
+    deadline_ms: float | None = None  # per-request latency budget (SLO); None = no budget
 
     def __post_init__(self):
         validate_low_bits(self.low_bits)
@@ -74,6 +75,17 @@ class DittoPlan:
             raise ValueError(f"steps must be >= 1, got {self.steps}")
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_batch & (self.max_batch - 1):
+            # the bucket ladder is {1, 2, 4, ..., max_batch}; a non-power-of-two
+            # cap would let bucket_for emit non-canonical sizes (min(8, 6) = 6),
+            # silently fragmenting the runner cache past log2(max_batch)+1
+            raise ValueError(
+                f"max_batch must be a power of two (the canonical bucket "
+                f"ladder), got {self.max_batch}")
+        if self.deadline_ms is not None and not self.deadline_ms > 0:
+            raise ValueError(
+                f"deadline_ms must be > 0 (or None for no budget), "
+                f"got {self.deadline_ms}")
         if self.sampler not in _SAMPLERS:
             raise ValueError(f"sampler must be one of {_SAMPLERS}, got {self.sampler!r}")
         if self.policy not in _POLICIES:
@@ -94,9 +106,10 @@ class DittoPlan:
         """Ordered trace-identity tuple — the plan fields that select a
         distinct jitted step. ``RunnerKey`` embeds this verbatim; the
         field order is a stable contract (see ``RunnerKey``'s accessors).
-        ``steps``/``sampler``/``policy``/``compiled``/``max_batch`` are
-        deliberately absent: they shape the loop around the step, not the
-        step itself, so plans differing only there share one trace
+        ``steps``/``sampler``/``policy``/``compiled``/``max_batch``/
+        ``deadline_ms`` are deliberately absent: they shape the loop (or
+        the serving policy) around the step, not the step itself, so
+        plans differing only there share one trace
         (``steps`` counts how often the step runs — the trace-identity
         audit in ``repro.analysis.trace_audit`` proves it has no jaxpr
         effect, and keeping it in the sig re-traced the whole denoiser
@@ -233,6 +246,10 @@ class PlanSchedule:
     @property
     def max_batch(self) -> int:
         return self.base.max_batch
+
+    @property
+    def deadline_ms(self) -> float | None:
+        return self.base.deadline_ms
 
     @property
     def collect_stats(self) -> bool:

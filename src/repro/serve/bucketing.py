@@ -37,12 +37,18 @@ def bucket_for(n: int, *, max_batch: int = DEFAULT_MAX_BATCH) -> int:
     """
     if n < 1:
         raise ValueError(f"batch must be >= 1, got {n}")
+    if max_batch < 1 or max_batch & (max_batch - 1):
+        # a non-power-of-two cap would silently emit non-canonical buckets
+        # (min(8, 6) = 6) and fragment the runner cache past the documented
+        # log2(max_batch)+1 entries; DittoPlan rejects it at construction,
+        # this guards direct callers
+        raise ValueError(f"max_batch must be a power of two, got {max_batch}")
     if n > max_batch:
         raise ValueError(f"batch {n} exceeds max_batch {max_batch}; chunk the request first")
     b = 1
     while b < n:
         b *= 2
-    return min(b, max_batch)
+    return b
 
 
 def pad_batch(x: jax.Array, labels: jax.Array | None, bucket: int

@@ -32,6 +32,7 @@ RunnerKey, so migrating callers can share traces with un-migrated ones.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from typing import Any, Callable
@@ -40,7 +41,59 @@ import jax
 
 from ..core.ditto import dit_runner
 from ..core.ditto.plan import (UNSET, DittoPlan, is_unset, plan_from_kwargs,
-                               segment_resolved)
+                               segment_resolved, segment_view)
+
+
+def _args_fingerprint(args) -> tuple:
+    """Shape/dtype/treedef identity of one step-call argument tuple.
+
+    An AOT-compiled executable accepts exactly the avals it was lowered
+    for; the runner dispatches to it only when the live call's fingerprint
+    matches the warmed one, falling back to the plain jitted path (which
+    traces/compiles for the new shapes) otherwise."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (str(treedef),
+            tuple((tuple(l.shape), jax.numpy.dtype(l.dtype).name,
+                   bool(getattr(l, "weak_type", False))) for l in leaves))
+
+
+class _AttributionFrame:
+    """Per-thread trace counter yielded by ``CompiledRunnerCache.attribution``."""
+
+    __slots__ = ("count",)
+
+    def __init__(self):
+        self.count = 0
+
+
+class _Runner:
+    """One cache entry: the jitted step plus an optional AOT-compiled
+    executable installed by :meth:`CompiledRunnerCache.warmup`.
+
+    Calls whose argument fingerprint matches the warmed one run the
+    pre-compiled executable directly — ``jax.jit``'s own dispatch would
+    re-COMPILE on its first call even though the trace (jaxpr) is shared,
+    so without this indirection warmup would only remove trace cost, not
+    compile cost. Any other shapes fall through to the jitted path."""
+
+    # __weakref__: jax.eval_shape/make_jaxpr weakref the callable they
+    # trace (the trace audit and schedule tests trace runners abstractly)
+    __slots__ = ("jitted", "aot_fp", "aot_exe", "_cache", "__weakref__")
+
+    def __init__(self, jitted, cache):
+        self.jitted = jitted
+        self.aot_fp = None
+        self.aot_exe = None
+        self._cache = cache
+
+    def __call__(self, *args):
+        exe = self.aot_exe
+        if exe is not None and self.aot_fp == _args_fingerprint(args):
+            self._cache._count_aot(hit=True)
+            return exe(*args)
+        if exe is not None:
+            self._cache._count_aot(hit=False)
+        return self.jitted(*args)
 
 
 def cfg_signature(cfg) -> tuple:
@@ -95,11 +148,52 @@ class CompiledRunnerCache:
     """
 
     def __init__(self):
-        self._steps: dict[RunnerKey, Callable] = {}
+        self._steps: dict[RunnerKey, _Runner] = {}
         self.trace_counts: dict[RunnerKey, int] = {}
         self.hits = 0
         self.misses = 0
+        self.aot_hits = 0
+        self.aot_misses = 0
         self._lock = threading.RLock()
+        self._tls = threading.local()  # per-thread attribution frames
+
+    # ------------------------------------------------------- attribution
+    def _attr_frames(self) -> list:
+        frames = getattr(self._tls, "frames", None)
+        if frames is None:
+            frames = self._tls.frames = []
+        return frames
+
+    @contextlib.contextmanager
+    def attribution(self):
+        """Count the XLA traces THIS THREAD causes inside the block.
+
+        Tracing runs on the thread that first calls a jitted step, so a
+        per-thread counter attributes each trace to the serve call that
+        actually paid for it. The old before/after reads of the shared
+        ``n_traces`` misattributed traces across threads sharing one
+        cache (the documented deployment shape). Yields an object with a
+        ``count`` attribute; nested contexts each see their own traces."""
+        frame = _AttributionFrame()
+        frames = self._attr_frames()
+        frames.append(frame)
+        try:
+            yield frame
+        finally:
+            frames.remove(frame)
+
+    def _count_trace(self, key: RunnerKey) -> None:
+        with self._lock:
+            self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+        for frame in self._attr_frames():
+            frame.count += 1
+
+    def _count_aot(self, *, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.aot_hits += 1
+            else:
+                self.aot_misses += 1
 
     # ------------------------------------------------------------ resolve
     @staticmethod
@@ -155,15 +249,69 @@ class CompiledRunnerCache:
 
             def counting_step(*args):
                 # executes only while jax is TRACING (jit caches the jaxpr
-                # afterwards), so this counts compilations, not calls
-                with self._lock:
-                    self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                # afterwards), so this counts compilations, not calls —
+                # and attributes them to the tracing thread's open
+                # attribution frames (see ``attribution``)
+                self._count_trace(key)
                 return raw(*args)
 
-            fn = jax.jit(counting_step)
-            self._steps[key] = fn
+            runner = _Runner(jax.jit(counting_step), self)
+            self._steps[key] = runner
             self.trace_counts.setdefault(key, 0)
-            return fn
+            return runner
+
+    # ---------------------------------------------------------------- warmup
+    def warmup(self, cfg, modes: dict[str, str] | tuple, plans, buckets,
+               *, labels: bool = True, params=None) -> dict:
+        """AOT-compile the bucket ladder: one ``jax.jit(...).lower(...)
+        .compile()`` per (segment plan, bucket), so the first REAL request
+        of each key pays neither trace nor compile cost.
+
+        ``plans`` is an iterable of :class:`DittoPlan`/``PlanSchedule``
+        (a schedule warms every distinct segment sig); ``buckets`` the
+        batch sizes to pre-compile (typically the full power-of-two
+        ladder up to ``max_batch``). Inputs are abstract
+        ``ShapeDtypeStruct`` trees mirroring the runtime call exactly —
+        no weights are materialized and no kernel executes; ``labels``
+        selects the class-conditional argument shape (must match real
+        requests' label presence or the warmed executable won't be hit).
+        ``params`` (the live model param tree) pins the abstract mparams
+        to the SAME pytree structure the runtime passes — trees of equal
+        shapes but different node types (freshly-``init``-ed Param
+        wrappers vs checkpoint-restored plain dicts) fingerprint
+        differently, and a mismatch silently turns every warmed key into
+        an ``aot_miss``; omit it only when the runtime params are known
+        to be freshly initialized.
+        The compiled executable is installed on the cache entry; later
+        calls with matching shapes dispatch to it directly (``jax.jit``
+        would otherwise re-compile on its own first call despite the
+        shared trace). Returns ``{"aot_compiled": n, "traces": m}``.
+        """
+        from ..analysis.trace_audit import abstract_inputs, abstract_state
+
+        compiled = 0
+        traces0 = self.n_traces
+        states: dict[int, Any] = {}
+        # identity eval_shape: the struct tree with the runtime's treedef
+        real_mparams = (None if params is None
+                        else jax.eval_shape(lambda p: p, params))
+        for plan in plans:
+            for _, _, seg in segment_view(plan):
+                for bucket in buckets:
+                    fn = self.step_for(cfg, modes, seg, bucket=bucket)
+                    if fn.aot_exe is not None:
+                        continue
+                    dparams, mparams, lat, t, lab = abstract_inputs(cfg, bucket)
+                    if real_mparams is not None:
+                        mparams = real_mparams
+                    if bucket not in states:
+                        states[bucket] = abstract_state(cfg, bucket)
+                    args = (dparams, mparams, states[bucket], lat, t,
+                            lab if labels else None)
+                    fn.aot_exe = fn.jitted.lower(*args).compile()
+                    fn.aot_fp = _args_fingerprint(args)
+                    compiled += 1
+        return {"aot_compiled": compiled, "traces": self.n_traces - traces0}
 
     # ---------------------------------------------------------------- stats
     @property
@@ -175,10 +323,12 @@ class CompiledRunnerCache:
 
     def stats(self) -> dict[str, Any]:
         return {"runners": len(self._steps), "traces": self.n_traces,
-                "hits": self.hits, "misses": self.misses}
+                "hits": self.hits, "misses": self.misses,
+                "aot_hits": self.aot_hits, "aot_misses": self.aot_misses}
 
     def clear(self) -> None:
         with self._lock:
             self._steps.clear()
             self.trace_counts.clear()
             self.hits = self.misses = 0
+            self.aot_hits = self.aot_misses = 0

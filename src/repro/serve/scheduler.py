@@ -7,15 +7,16 @@ call — batch-3 requests each pad to bucket 4, throwing away a quarter of
 every dispatch. The scheduler closes that gap by coalescing ACROSS
 submissions:
 
-  * ``submit(x, labels, plan=None) -> Ticket`` queues a request (with an
-    optional per-request :class:`DittoPlan` override) and returns
-    immediately. Whenever a plan group's queue holds at least
-    ``max_batch`` rows, a full bucket is dispatched eagerly — requests
-    never wait behind an arbitrary flush to make forward progress.
+  * ``submit(x, labels, plan=None, deadline_ms=...) -> Ticket`` queues a
+    request (with an optional per-request :class:`DittoPlan` override and
+    an optional latency budget) and returns immediately. Whenever a plan
+    group's queue holds at least ``max_batch`` rows, a full bucket is
+    dispatched eagerly — requests never wait behind an arbitrary flush to
+    make forward progress.
   * ``flush()`` dispatches everything still queued (the ragged tail pays
     the only padding in the stream) and resolves all tickets.
   * ``Ticket.result()`` returns this request's rows of the sample —
-    flushing first if the request is still (partly) queued.
+    blocking until a dispatch covers them.
 
 Requests are grouped by behavior, not object identity: the grouping key
 is the loop-level fields plus the normalized ``(start, stop,
@@ -24,8 +25,11 @@ or :class:`PlanSchedule`\\ s constructed separately — including a constant
 schedule and its equivalent bare plan, or duck-typed plans whose extra
 fields don't reach the sig — coalesce into ONE bucket group, while
 submissions that differ in sampling loop or in the kernel lowering of
-ANY step never batch together. Per-request overrides (one client on
-``fused``, another on an int8→int4 schedule) therefore coexist in one
+ANY step never batch together. ``deadline_ms`` deliberately stays OUT of
+the key (and out of ``cache_sig()`` — gated by the trace audit): it
+changes WHEN a request dispatches, never what it computes, so requests
+with different budgets still coalesce. Per-request overrides (one client
+on ``fused``, another on an int8→int4 schedule) therefore coexist in one
 scheduler sharing one runner cache — and can never share a trace, since
 the plan is the trace identity (``RunnerKey`` embeds
 ``plan.cache_sig()``).
@@ -35,18 +39,48 @@ requests into one; both are invisible in the results because activation
 calibration is PER SAMPLE (``quant.sample_scale``): no element of a
 sample's quantized trajectory depends on which other samples share its
 batch, so the coalesced rows are bit-identical to a per-request
-``serve()`` (property-tested in tests/test_scheduler.py).
+``serve()`` (property-tested in tests/test_scheduler.py and
+tests/test_async_serving.py).
+
+Async SLO-aware mode
+--------------------
+
+``async_mode=True`` starts a background dispatch thread and turns the
+flush policy time-based: a group dispatches when it holds a full bucket
+OR when the oldest queued request's latency budget (``deadline_ms``,
+from the submit call or the plan) is within one ``dispatch_interval`` of
+expiring — a deliberate partial-bucket dispatch that trades pad rows for
+the SLO. ``Ticket.result()`` then blocks on a completion event instead
+of synchronously flushing the world. The policy lives in
+``_next_job_locked`` (deadline-due first, then full buckets, then
+demanded/drained tails); ``poll()`` runs the same policy one step on the
+calling thread, which with an injected ``clock`` makes the time-based
+behavior deterministic under test — the background thread itself always
+waits on real time.
+
+Completed tickets RETIRE: the scheduler keeps aggregate counters, not
+the tickets' device arrays (each resolved Ticket holds exactly its own
+sample until the client drops it). ``retain=True`` restores the full
+``self.tickets`` / ``self.dispatches`` / ``Ticket.results`` record
+keeping for benches and tests that introspect dispatch composition —
+with the documented cost that every ServeResult (engines, records,
+padded samples) stays live for the scheduler's lifetime.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
+import time
 from collections import deque
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from ..core.ditto.plan import DittoPlan, PlanSchedule, segment_view
+from ..core import diffusion
+from ..core.ditto import DittoEngine, make_denoise_fn
+from ..core.ditto.plan import UNSET, DittoPlan, PlanSchedule, is_unset, segment_view
 from .bucketing import bucket_for
 from .cache import CompiledRunnerCache
 from .session import ServeResult, ServeSession
@@ -56,33 +90,64 @@ class Ticket:
     """Handle for one submitted request; resolves to its own sample rows."""
 
     def __init__(self, scheduler: "ServeScheduler", index: int, batch: int,
-                 plan: DittoPlan | PlanSchedule):
+                 plan: DittoPlan | PlanSchedule, deadline_ms: float | None,
+                 submit_t: float):
         self._scheduler = scheduler
         self.index = index  # submission order, scheduler-wide
         self.batch = batch  # rows in this request
         self.plan = plan  # normalized plan/schedule this request runs under
+        self.deadline_ms = deadline_ms  # latency budget; None = no SLO
+        self.submit_t = submit_t  # scheduler-clock time of submit()
+        self.done_t: float | None = None  # scheduler-clock time of completion
+        # absolute budget expiry on the scheduler clock; the dispatch policy
+        # compares against this, never against wall time directly
+        self._deadline_t = (None if deadline_ms is None
+                            else submit_t + deadline_ms / 1e3)
         self._pieces: list[jax.Array] = []  # filled in row order by dispatches
         self._filled = 0
-        self.results: list[ServeResult] = []  # ServeResults that covered rows of this request
+        self._sample: jax.Array | None = None
+        self._error: BaseException | None = None
+        self._event = threading.Event()
+        self.results: list[ServeResult] = []  # populated only under retain=True
 
     @property
     def done(self) -> bool:
-        return self._filled == self.batch
+        return self._event.is_set()
 
-    def result(self) -> jax.Array:
+    def result(self, timeout: float | None = None) -> jax.Array:
         """This request's sample at its TRUE batch size (rows in submission
-        order). Triggers ``flush()`` if any of the request is still queued."""
-        if not self.done:
-            self._scheduler.flush()
-        if len(self._pieces) == 1:
-            return self._pieces[0]
-        return jnp.concatenate(self._pieces, axis=0)
+        order). Blocks until served; in sync mode a still-queued request
+        triggers ``flush()``, in async mode it marks the request demanded
+        so the dispatch thread drains its group next."""
+        if not self._event.is_set():
+            self._scheduler._demand(self)
+            if not self._event.wait(timeout):
+                raise TimeoutError(
+                    f"request {self.index} not served within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._sample
 
     # ------------------------------------------------------------- internal
-    def _deliver(self, rows: jax.Array, result: ServeResult) -> None:
+    # all mutation happens under the scheduler's condition lock
+    def _deliver(self, rows: jax.Array, result: ServeResult | None) -> None:
         self._pieces.append(rows)
         self._filled += rows.shape[0]
-        self.results.append(result)
+        if result is not None:
+            self.results.append(result)
+
+    def _finish(self, now: float) -> None:
+        self._sample = (self._pieces[0] if len(self._pieces) == 1
+                        else jnp.concatenate(self._pieces, axis=0))
+        self._pieces = []  # drop the dispatch-sliced intermediates
+        self.done_t = now
+        self._event.set()
+
+    def _fail(self, exc: BaseException, now: float) -> None:
+        self._error = exc
+        self._pieces = []
+        self.done_t = now
+        self._event.set()
 
 
 @dataclasses.dataclass
@@ -112,6 +177,24 @@ class _Group:
         return sum(p.remaining for p in self.pending)
 
 
+def _naive_pad(batch: int, max_batch: int) -> int:
+    """Pad rows ``batch`` would waste as an independent serve() call."""
+    total, b = 0, batch
+    while b > 0:
+        c = min(b, max_batch)
+        total += bucket_for(c, max_batch=max_batch) - c
+        b -= c
+    return total
+
+
+def _bucket_ladder(max_batch: int) -> list[int]:
+    out, b = [], 1
+    while b <= max_batch:
+        out.append(b)
+        b *= 2
+    return out
+
+
 class ServeScheduler:
     """Continuous-batching front-end over one :class:`ServeSession`.
 
@@ -121,18 +204,83 @@ class ServeScheduler:
     behavior, queueing everything until ``flush()`` (useful for tests and
     offline/batch workloads that want maximal packing decisions made at
     one point in time).
+
+    ``async_mode=True`` starts the background dispatch thread (see module
+    docstring): submissions return immediately, dispatch is driven by the
+    full-bucket / deadline policy, ``Ticket.result()`` blocks on
+    completion. ``dispatch_interval_ms`` is the policy's time granularity
+    — a request's budget counts as "nearing" within one interval of
+    expiry, and the acceptance bound for deadline tests is one interval.
+    ``clock`` (a ``() -> float`` seconds callable) injects a fake clock
+    for deterministic tests; it must be monotonic. ``collect_done=True``
+    exposes completed tickets on the ``done`` queue (consumer's job to
+    drain it). ``retain=True`` keeps full per-dispatch records — see the
+    retirement note in the module docstring.
     """
 
     def __init__(self, params, cfg, sched, plan: DittoPlan | PlanSchedule | None = None, *,
-                 cache: CompiledRunnerCache | None = None, eager: bool = True):
-        self.session = ServeSession(params, cfg, sched,
-                                    plan if plan is not None else DittoPlan(),
-                                    cache=cache)
+                 cache: CompiledRunnerCache | None = None, eager: bool = True,
+                 async_mode: bool = False, dispatch_interval_ms: float = 10.0,
+                 retain: bool = False, collect_done: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
+        self._init_runtime(
+            ServeSession(params, cfg, sched,
+                         plan if plan is not None else DittoPlan(), cache=cache),
+            eager=eager, async_mode=async_mode,
+            dispatch_interval_ms=dispatch_interval_ms, retain=retain,
+            collect_done=collect_done, clock=clock)
+
+    @classmethod
+    def from_session(cls, session, *, eager: bool = True, async_mode: bool = False,
+                     dispatch_interval_ms: float = 10.0, retain: bool = False,
+                     collect_done: bool = False,
+                     clock: Callable[[], float] = time.monotonic) -> "ServeScheduler":
+        """Wrap an existing session-like object (anything with ``.plan``,
+        ``.serve(x, labels, plan=)`` and ``.stats()``) — the hook tests
+        and benches use to drive the dispatch policy without a model."""
+        s = cls.__new__(cls)
+        s._init_runtime(session, eager=eager, async_mode=async_mode,
+                        dispatch_interval_ms=dispatch_interval_ms,
+                        retain=retain, collect_done=collect_done, clock=clock)
+        return s
+
+    def _init_runtime(self, session, *, eager, async_mode, dispatch_interval_ms,
+                      retain, collect_done, clock):
+        self.session = session
         self.eager = eager
+        self.async_mode = async_mode
+        self.retain = retain
+        self.dispatch_interval = dispatch_interval_ms / 1e3
+        self._clock = clock
+        self._cv = threading.Condition()  # guards everything below
         self._groups: dict[tuple, _Group] = {}
+        self._live: dict[int, Ticket] = {}  # unresolved tickets only
+        self._urgent: set[int] = set()  # ticket indices demanded via result()
+        self._draining = False
+        self._inflight = 0
+        self._closed = False
         self._n_submitted = 0
+        self._rows_submitted = 0
+        self._n_dispatches = 0
+        self._dispatched_rows = 0
+        self._pad_rows = 0
+        self._naive_pad_rows = 0
+        self._completed = 0
+        self._failed = 0
+        self._deadline_misses = 0
+        self._triggers = {"full": 0, "deadline": 0, "demand": 0, "drain": 0}
+        # retained record keeping — empty unless retain=True (retirement
+        # keeps the live set bounded by the number of UNRESOLVED requests)
         self.tickets: list[Ticket] = []
         self.dispatches: list[ServeResult] = []
+        self.done: queue.SimpleQueue | None = (
+            queue.SimpleQueue() if collect_done else None)
+        self._thread: threading.Thread | None = None
+        if async_mode:
+            self._thread = threading.Thread(target=self._dispatch_loop,
+                                            name="ditto-serve-dispatch",
+                                            daemon=True)
+            self._thread.start()
 
     # ------------------------------------------------------------------ api
     @staticmethod
@@ -143,50 +291,257 @@ class ServeScheduler:
         equality so sig-equal plans/schedules constructed separately — a
         constant schedule vs its bare plan, duck-typed plan subclasses —
         land in one group; anything that can change the served rows
-        (different loop, different lowering at any step) cannot."""
+        (different loop, different lowering at any step) cannot.
+        ``deadline_ms`` is deliberately absent: urgency is per-request
+        metadata, not behavior."""
         segments = tuple((start, stop, p.cache_sig())
                          for start, stop, p in segment_view(plan))
         return (plan.steps, plan.sampler, plan.policy, plan.compiled,
                 plan.max_batch, segments)
 
     def submit(self, x: jax.Array, labels=None,
-               plan: DittoPlan | PlanSchedule | None = None) -> Ticket:
+               plan: DittoPlan | PlanSchedule | None = None, *,
+               deadline_ms: float | None = UNSET) -> Ticket:
         """Queue one request; returns its :class:`Ticket` immediately.
 
         ``plan`` (a DittoPlan or PlanSchedule) overrides the scheduler
-        default for this request. Full ``max_batch`` buckets are
-        dispatched as soon as they fill (unless ``eager=False``)."""
+        default for this request. ``deadline_ms`` overrides the plan's
+        latency budget for this request (``None`` = no budget). Full
+        ``max_batch`` buckets are dispatched as soon as they fill (unless
+        ``eager=False``)."""
         if x.shape[0] < 1:
             raise ValueError("empty request")
         plan = (plan if plan is not None else self.session.plan).normalized()
-        key = (self._group_key(plan), labels is not None)
-        group = self._groups.get(key)
-        if group is None:
-            group = self._groups[key] = _Group(plan)
-        ticket = Ticket(self, self._n_submitted, x.shape[0], plan)
-        self._n_submitted += 1
-        self.tickets.append(ticket)
-        group.pending.append(_Pending(ticket, x, labels))
-        if self.eager:
-            while group.queued_rows >= plan.max_batch:
-                self._dispatch(group, plan.max_batch)
+        if is_unset(deadline_ms):
+            deadline_ms = plan.deadline_ms
+        elif deadline_ms is not None and not deadline_ms > 0:
+            raise ValueError(f"deadline_ms must be > 0 (or None), got {deadline_ms}")
+        now = self._clock()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            key = (self._group_key(plan), labels is not None)
+            group = self._groups.get(key)
+            if group is None:
+                group = self._groups[key] = _Group(plan)
+            ticket = Ticket(self, self._n_submitted, x.shape[0], plan,
+                            deadline_ms, now)
+            self._n_submitted += 1
+            self._rows_submitted += ticket.batch
+            self._naive_pad_rows += _naive_pad(ticket.batch, plan.max_batch)
+            self._live[ticket.index] = ticket
+            if self.retain:
+                self.tickets.append(ticket)
+            group.pending.append(_Pending(ticket, x, labels))
+            if self.async_mode:
+                self._cv.notify_all()  # wake the dispatch thread
+            elif self.eager:
+                while group.queued_rows >= plan.max_batch:
+                    self._dispatch_locked(group, plan.max_batch, "full")
         return ticket
 
     def flush(self) -> list[Ticket]:
         """Dispatch every queued row (full buckets first; the ragged tail
         is the only padded dispatch) and return the tickets resolved by
-        this call."""
-        undone = [t for t in self.tickets if not t.done]
-        for group in self._groups.values():
-            while group.queued_rows:
-                self._dispatch(group, min(group.queued_rows, group.plan.max_batch))
-        return [t for t in undone if t.done]
+        this call. In async mode this blocks until the dispatch thread
+        has drained every group and nothing is in flight."""
+        with self._cv:
+            snapshot = list(self._live.values())
+            if self.async_mode:
+                self._draining = True
+                self._cv.notify_all()
+                while not self._closed and (
+                        self._inflight
+                        or any(g.queued_rows for g in self._groups.values())):
+                    self._cv.wait()
+                self._draining = False
+            else:
+                for group in self._groups.values():
+                    while group.queued_rows:
+                        self._dispatch_locked(
+                            group, min(group.queued_rows, group.plan.max_batch),
+                            "drain")
+            return [t for t in snapshot if t.done]
+
+    def poll(self) -> int:
+        """Run at most one due dispatch on the calling thread and return
+        the rows it dispatched (0 = nothing due). Same policy as the
+        background thread (``_next_job_locked``) — the deterministic
+        counterpart for fake-clock tests and thread-free embeddings."""
+        with self._cv:
+            job = self._next_job_locked()
+            if job is None:
+                return 0
+            group, rows, trigger = job
+            batch = self._take_locked(group, rows)
+            self._inflight += 1
+        try:
+            self._serve_and_deliver(group, batch, trigger)
+        finally:
+            with self._cv:
+                self._inflight -= 1
+                self._cv.notify_all()
+        return rows
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the dispatch thread; ``drain=True`` (default) flushes the
+        queues first so no ticket is left unresolved."""
+        if self._closed:
+            return
+        if drain:
+            self.flush()
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "ServeScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        # a failing with-body shouldn't hang on a drain of queued work
+        self.close(drain=exc[0] is None)
+
+    # --------------------------------------------------------------- warmup
+    def warmup(self, *, plans=None, buckets=None, labels: bool = True,
+               probe_seed: int = 0) -> dict:
+        """AOT-compile the bucket ladder before the first request.
+
+        Runs a cheap eager calibration probe per distinct (policy, steps)
+        — batch-1, deterministic seeded noise, the 2-forward prefix before
+        the Defo decision, which is sampler-independent (both samplers'
+        first update is the same DDIM step) — to obtain the frozen
+        per-layer modes, then lowers + compiles one executable per (plan
+        segment sig, bucket) through
+        :meth:`CompiledRunnerCache.warmup`. First requests then skip both
+        the XLA trace and the XLA compile. Caveat: a request whose Defo
+        decision differs from the probe's lands on a different RunnerKey
+        and pays a cold compile (``aot_misses`` in ``stats()`` counts
+        fingerprint mismatches on warmed keys).
+
+        ``plans`` defaults to the session plan; ``buckets`` to each
+        plan's full power-of-two ladder; ``labels`` must match whether
+        requests pass class labels (it is part of the traced signature).
+        """
+        t0 = time.monotonic()
+        plans = [p.normalized() for p in
+                 (plans if plans is not None else [self.session.plan])]
+        by_probe: dict[tuple, list] = {}
+        for p in plans:
+            by_probe.setdefault((p.policy, p.steps), []).append(p)
+        out = {"aot_compiled": 0, "traces": 0}
+        for group_plans in by_probe.values():
+            modes = self._probe_modes(group_plans[0], labels=labels,
+                                      probe_seed=probe_seed)
+            for p in group_plans:
+                ladder = (_bucket_ladder(p.max_batch) if buckets is None
+                          else buckets)
+                r = self.session.cache.warmup(self.session.cfg, modes, [p],
+                                              ladder, labels=labels,
+                                              params=self.session.params)
+                out["aot_compiled"] += r["aot_compiled"]
+                out["traces"] += r["traces"]
+        out["wall_s"] = time.monotonic() - t0
+        return out
+
+    def _probe_modes(self, plan, *, labels: bool, probe_seed: int) -> dict:
+        """Frozen per-layer modes from an eager calibration prefix: run
+        batch-1 seeded-noise forwards until the engine is ready for the
+        compiled pass (scales calibrated; Defo decided after step 2)."""
+        cfg = self.session.cfg
+        eng = DittoEngine(policy=plan.policy, collect_oracle=False)
+        fn = make_denoise_fn(self.session.params, cfg, eng)
+        x = jax.random.normal(
+            jax.random.PRNGKey(probe_seed),
+            (1, cfg.input_size, cfg.input_size, cfg.in_channels), jnp.float32)
+        lab = jnp.zeros((1,), jnp.int32) if labels else None
+        ts = diffusion.ddim_timesteps(self.session.sched.T, plan.steps)
+        eng.begin_sample()
+        for i in range(len(ts)):
+            if eng.ready_for_compiled():
+                break
+            t = int(ts[i])
+            t_prev = int(ts[i + 1]) if i + 1 < len(ts) else -1
+            t_vec = jnp.full((1,), t, jnp.int32)
+            eps = fn(x, t_vec, lab)
+            x = diffusion.ddim_step(self.session.sched, x, eps, t, t_prev)
+        return eng.compiled_modes()
 
     # ------------------------------------------------------------ internals
-    def _dispatch(self, group: _Group, rows: int) -> ServeResult:
-        """Serve exactly ``rows`` queued rows of ``group`` as one batch
-        (FIFO, splitting a request across dispatches when needed) and
-        deliver each covered ticket its slice."""
+    def _demand(self, ticket: Ticket) -> None:
+        """A client is blocked in ``result()`` on a still-queued ticket."""
+        if not self.async_mode:
+            self.flush()
+            return
+        with self._cv:
+            if ticket.index in self._live:
+                self._urgent.add(ticket.index)
+                self._cv.notify_all()
+
+    def _next_job_locked(self) -> tuple[_Group, int, str] | None:
+        """The dispatch policy: pick the next (group, rows, trigger) to
+        serve, or None if nothing is due. Deadline-due partials preempt
+        full buckets — a full bucket is never urgent (it loses no budget
+        by dispatching one policy round later), an expiring request is."""
+        now = self._clock()
+        for group in self._groups.values():
+            if any(p.ticket._deadline_t is not None
+                   and p.ticket._deadline_t - now <= self.dispatch_interval
+                   for p in group.pending):
+                q = group.queued_rows
+                return group, min(q, group.plan.max_batch), "deadline"
+        if self.eager or self._draining:
+            for group in self._groups.values():
+                if group.queued_rows >= group.plan.max_batch:
+                    return group, group.plan.max_batch, "full"
+        if self._urgent:
+            for group in self._groups.values():
+                if any(p.ticket.index in self._urgent for p in group.pending):
+                    q = group.queued_rows
+                    return group, min(q, group.plan.max_batch), "demand"
+        if self._draining:
+            for group in self._groups.values():
+                q = group.queued_rows
+                if q:
+                    return group, min(q, group.plan.max_batch), "drain"
+        return None
+
+    def _next_wakeup_locked(self) -> float | None:
+        """Seconds (real-clock semantics) until the earliest queued budget
+        becomes due, or None to sleep until notified."""
+        now = self._clock()
+        waits = [p.ticket._deadline_t - self.dispatch_interval - now
+                 for g in self._groups.values() for p in g.pending
+                 if p.ticket._deadline_t is not None]
+        if not waits:
+            return None
+        return max(min(waits), 1e-4)  # floor avoids a zero-length spin
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    if self._closed:
+                        return
+                    job = self._next_job_locked()
+                    if job is not None:
+                        break
+                    self._cv.wait(self._next_wakeup_locked())
+                group, rows, trigger = job
+                batch = self._take_locked(group, rows)
+                self._inflight += 1
+            try:
+                self._serve_and_deliver(group, batch, trigger)
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+
+    def _take_locked(self, group: _Group, rows: int):
+        """Pop exactly ``rows`` queued rows of ``group`` (FIFO, splitting a
+        request across dispatches when needed)."""
         xs, ls, segments = [], [], []
         take = rows
         while take:
@@ -201,41 +556,95 @@ class ServeScheduler:
             if not p.remaining:
                 group.pending.popleft()
         x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
-        labels = None if not ls else (ls[0] if len(ls) == 1 else jnp.concatenate(ls, axis=0))
-        result = self.session.serve(x, labels, plan=group.plan)
-        self.dispatches.append(result)
-        off = 0
-        for ticket, c in segments:
-            ticket._deliver(result.sample[off:off + c], result)
-            off += c
+        labels = None if not ls else (ls[0] if len(ls) == 1
+                                      else jnp.concatenate(ls, axis=0))
+        return x, labels, segments
+
+    def _serve_and_deliver(self, group: _Group, batch, trigger: str
+                           ) -> ServeResult | None:
+        """Serve one taken batch (OUTSIDE the lock — the policy keeps
+        accepting submissions while the device runs) and deliver each
+        covered ticket its slice."""
+        x, labels, segments = batch
+        try:
+            result = self.session.serve(x, labels, plan=group.plan)
+        except BaseException as exc:
+            now = self._clock()
+            with self._cv:
+                self._failed += len(segments)
+                for ticket, _ in segments:
+                    ticket._fail(exc, now)
+                    self._retire_locked(ticket)
+                self._cv.notify_all()
+            if not self.async_mode:
+                raise  # sync callers get the error on their own stack
+            return None
+        now = self._clock()
+        with self._cv:
+            self._n_dispatches += 1
+            self._dispatched_rows += x.shape[0]
+            self._pad_rows += result.pad_rows
+            self._triggers[trigger] += 1
+            if self.retain:
+                self.dispatches.append(result)
+            off = 0
+            for ticket, c in segments:
+                # the slice materializes the ticket's own rows as a fresh
+                # device array — tickets never pin the padded dispatch
+                # sample (or its engines/records) past this block
+                ticket._deliver(result.sample[off:off + c],
+                                result if self.retain else None)
+                off += c
+                if ticket._filled == ticket.batch:
+                    ticket._finish(now)
+                    self._completed += 1
+                    if (ticket._deadline_t is not None
+                            and now > ticket._deadline_t):
+                        self._deadline_misses += 1
+                    self._retire_locked(ticket)
+            self._cv.notify_all()
         return result
+
+    def _retire_locked(self, ticket: Ticket) -> None:
+        self._live.pop(ticket.index, None)
+        self._urgent.discard(ticket.index)
+        if self.done is not None:
+            self.done.put(ticket)
+
+    def _dispatch_locked(self, group: _Group, rows: int, trigger: str
+                         ) -> ServeResult | None:
+        """Sync-mode dispatch: take + serve + deliver on the calling
+        thread (the condition lock is re-entrant, so the nested acquire
+        in _serve_and_deliver is fine)."""
+        batch = self._take_locked(group, rows)
+        return self._serve_and_deliver(group, batch, trigger)
 
     # ---------------------------------------------------------------- stats
     @property
     def pad_rows(self) -> int:
         """Replicated (wasted) rows across all dispatches so far."""
-        return sum(r.pad_rows for r in self.dispatches)
+        return self._pad_rows
 
     def naive_pad_rows(self) -> int:
         """Pad rows the same submissions would have wasted as independent
         per-request ``serve()`` calls — the baseline the coalescing is
         beating (recorded by benchmarks/bench_scheduler.py)."""
-        total = 0
-        for t in self.tickets:
-            b = t.batch
-            while b > 0:
-                c = min(b, t.plan.max_batch)
-                total += bucket_for(c, max_batch=t.plan.max_batch) - c
-                b -= c
-        return total
+        return self._naive_pad_rows
 
     def stats(self) -> dict[str, Any]:
-        queued = sum(g.queued_rows for g in self._groups.values())
-        return {"submitted": self._n_submitted,
-                "submitted_rows": sum(t.batch for t in self.tickets),
-                "queued_rows": queued,
-                "dispatches": len(self.dispatches),
-                "dispatched_rows": sum(sum(c.batch for c in r.chunks) for r in self.dispatches),
-                "pad_rows": self.pad_rows,
-                "plan_groups": len(self._groups),
-                **self.session.stats()}
+        with self._cv:
+            queued = sum(g.queued_rows for g in self._groups.values())
+            return {"submitted": self._n_submitted,
+                    "submitted_rows": self._rows_submitted,
+                    "queued_rows": queued,
+                    "inflight": self._inflight,
+                    "live_tickets": len(self._live),
+                    "completed": self._completed,
+                    "failed": self._failed,
+                    "dispatches": self._n_dispatches,
+                    "dispatched_rows": self._dispatched_rows,
+                    "pad_rows": self._pad_rows,
+                    "plan_groups": len(self._groups),
+                    "triggers": dict(self._triggers),
+                    "deadline_misses": self._deadline_misses,
+                    **self.session.stats()}

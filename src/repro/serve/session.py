@@ -25,6 +25,7 @@ deprecated shim that builds the equivalent plan and warns once.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -110,6 +111,9 @@ class ServeSession:
         self.cache = cache if cache is not None else CompiledRunnerCache()
         self.batches_served = 0
         self.requests_served = 0
+        # sessions are documented as shareable across request threads (one
+        # shared cache); bare += on the counters would drop increments
+        self._stats_lock = threading.Lock()
 
     # ------------------------------------------------------------------ api
     def serve(self, x: jax.Array, labels=None, *,
@@ -128,8 +132,9 @@ class ServeSession:
             lc = None if labels is None else labels[lo:hi]
             chunks.append(self._serve_chunk(xc, lc, plan))
             samples.append(chunks[-1].sample)
-        self.batches_served += 1
-        self.requests_served += n
+        with self._stats_lock:
+            self.batches_served += 1
+            self.requests_served += n
         sample = samples[0] if len(samples) == 1 else jax.numpy.concatenate(samples, axis=0)
         return ServeResult(sample=sample, chunks=chunks)
 
@@ -138,17 +143,19 @@ class ServeSession:
         # eager chunks run unbucketed (no trace to share) — bucket=None,
         # so pad accounting and the serve log can't claim a padded dispatch
         bucket = bucket_for(b, max_batch=plan.max_batch) if plan.compiled else None
-        traces0 = self.cache.n_traces
         t0 = time.monotonic()
-        records, sample, eng = harness.serve_records(
-            self.params, self.cfg, self.sched, x, labels, plan,
-            runner_cache=self.cache, bucket=bucket,
-        )
-        jax.block_until_ready(sample)
+        # per-thread attribution: traces_delta counts the traces THIS call's
+        # thread caused, not whatever other threads did to the shared
+        # cache.n_traces between two reads
+        with self.cache.attribution() as att:
+            records, sample, eng = harness.serve_records(
+                self.params, self.cfg, self.sched, x, labels, plan,
+                runner_cache=self.cache, bucket=bucket,
+            )
+            jax.block_until_ready(sample)
         wall = time.monotonic() - t0
         return ChunkResult(sample=sample, records=records, engine=eng, batch=b,
-                           bucket=bucket, wall_s=wall,
-                           traces_delta=self.cache.n_traces - traces0)
+                           bucket=bucket, wall_s=wall, traces_delta=att.count)
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:

@@ -1,0 +1,485 @@
+"""Async SLO-aware serving: dispatch policy, ticket retirement, thread
+safety — and the regression tests for the three bugs the async loop
+exposed in the serve stack.
+
+Contracts under test (docs/architecture.md §async serving):
+
+  * retirement: a long request stream does NOT accumulate device arrays
+    in the scheduler — completed tickets retire to counters; retain=True
+    is the opt-in record keeping (the old always-on behavior, now a
+    documented memory cost);
+  * attribution: ``traces_delta`` counts the traces the calling thread
+    caused, not whatever other threads did to the shared cache between
+    two reads; session counters don't drop increments under threads;
+  * deadline policy: a queued request whose budget nears dispatches as a
+    deliberate partial bucket within one dispatch interval (fake clock,
+    ``poll()``-driven — fully deterministic);
+  * async mode: results are bit-identical to per-request serve() and to
+    sync-mode scheduling, under concurrent submitters, mixed plans and
+    mixed deadlines; no ticket starves;
+  * warmup: the AOT-compiled bucket ladder serves the first request with
+    zero new traces (``aot_hits`` > 0).
+
+Fast tests run against a fake session (the scheduler only needs
+``.serve/.plan/.stats``); bit-identity and warmup use the real stack and
+are marked slow.
+"""
+import gc
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diffusion
+from repro.core.ditto import DittoPlan
+from repro.nn import dit as dit_mod
+from repro.serve import (CompiledRunnerCache, ServeScheduler, ServeSession,
+                         bucket_for)
+from repro.serve.session import ChunkResult, ServeResult
+
+CFG = dit_mod.DiTCfg(d_model=64, n_layers=2, n_heads=2, patch=2, in_channels=4,
+                     input_size=8, n_classes=4)
+PLAN = DittoPlan(steps=3, policy="diff", max_batch=4, collect_stats=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init(key, CFG)
+    sched = diffusion.cosine_schedule(100)
+    return params, sched
+
+
+def _request(b, seed):
+    key = jax.random.PRNGKey(100 + seed)
+    x = jax.random.normal(key, (b, CFG.input_size, CFG.input_size, CFG.in_channels))
+    labels = (jnp.arange(b) + seed) % CFG.n_classes
+    return x, labels
+
+
+# ----------------------------------------------------------- fake plumbing
+class _FakeClock:
+    """Deterministic scheduler clock: poll()-driven tests advance it by
+    hand, so 'one dispatch interval' is an exact bound, not a race."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+class _FakeSession:
+    """Duck-typed ServeSession: the scheduler only touches .plan, .serve
+    and .stats. serve() is x -> 2x (bit-exact per row, so ticket slicing
+    is still checkable) with the real bucket-padding accounting."""
+
+    def __init__(self, plan, wall_s=0.0, fail=False):
+        self.plan = plan
+        self.wall_s = wall_s
+        self.fail = fail
+        self.calls = []
+
+    def serve(self, x, labels, plan=None):
+        plan = self.plan if plan is None else plan
+        if self.wall_s:
+            time.sleep(self.wall_s)
+        if self.fail:
+            raise RuntimeError("injected dispatch failure")
+        self.calls.append(x.shape[0])
+        b = x.shape[0]
+        bucket = bucket_for(b, max_batch=plan.max_batch)
+        sample = x * 2.0
+        return ServeResult(sample=sample, chunks=[ChunkResult(
+            sample=sample, records=[], engine=None, batch=b, bucket=bucket,
+            wall_s=self.wall_s, traces_delta=0)])
+
+    def stats(self):
+        return {}
+
+
+def _fake_scheduler(**kw):
+    """A scheduler wired to a _FakeSession — no params, no jit."""
+    fake = _FakeSession(kw.pop("plan", PLAN), wall_s=kw.pop("wall_s", 0.0),
+                        fail=kw.pop("fail", False))
+    return ServeScheduler.from_session(fake, **kw)
+
+
+# ----------------------------------------------- bugfix 1: ticket retention
+def test_completed_tickets_retire_to_counters():
+    """100-request stream: the scheduler's live-array footprint stays
+    bounded (tickets retire on completion); stats survive as counters."""
+    s = _fake_scheduler()
+    gc.collect()
+    base = len(jax.live_arrays())
+    for i in range(100):
+        x = jnp.full((1 + i % 3, 8, 8, 4), float(i))
+        t = s.submit(x)
+        del x
+    s.flush()
+    gc.collect()
+    st = s.stats()
+    assert st["submitted"] == 100 and st["live_tickets"] == 0
+    assert st["queued_rows"] == 0 and st["completed"] == 100
+    assert s.tickets == [] and s.dispatches == []  # retired, not recorded
+    # counters replaced the list scans
+    assert st["dispatched_rows"] == st["submitted_rows"] == sum(
+        1 + i % 3 for i in range(100))
+    assert s.naive_pad_rows() > s.pad_rows
+    # every per-request array (inputs, dispatch samples, ticket pieces)
+    # is gone; only a small constant of scheduler plumbing may remain
+    assert len(jax.live_arrays()) - base < 20, \
+        "completed tickets still pin device arrays"
+
+
+def test_retain_restores_record_keeping():
+    s = _fake_scheduler(retain=True)
+    tickets = [s.submit(jnp.ones((2, 8, 8, 4))) for _ in range(4)]
+    s.flush()
+    assert len(s.tickets) == 4 and len(s.dispatches) == 2
+    assert all(len(t.results) >= 1 for t in tickets)
+    gc.collect()
+    # and the cost is real: dispatches/results hold the served arrays
+    assert any(d.sample is not None for d in s.dispatches)
+
+
+def test_result_is_idempotent_after_retirement():
+    s = _fake_scheduler()
+    x = jnp.ones((3, 8, 8, 4))
+    t = s.submit(x)
+    a = t.result()
+    b = t.result()  # second read: no flush, same assembled sample
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(x) * 2.0)
+    assert a is b
+    assert t._pieces == []  # intermediates dropped at completion
+
+
+# ------------------------------------------- bugfix 2: per-call attribution
+def test_attribution_frames_are_per_thread():
+    """The mechanism behind ChunkResult.traces_delta: a trace caused by
+    another thread must NOT land in this thread's open frame (the old
+    before/after n_traces reads attributed it to whoever read last)."""
+    cache = CompiledRunnerCache()
+    key = object()
+    seen = []
+
+    with cache.attribution() as mine:
+        other = threading.Thread(target=lambda: cache._count_trace(key))
+        other.start()
+        other.join()
+        cache._count_trace(key)  # this thread's own trace
+        seen.append(mine.count)
+    assert seen == [1]  # own trace counted, foreign trace not
+    assert cache.n_traces == 2  # the global ledger still sees both
+
+
+def test_attribution_nests():
+    cache = CompiledRunnerCache()
+    with cache.attribution() as outer:
+        with cache.attribution() as inner:
+            cache._count_trace(object())
+        cache._count_trace(object())
+    assert inner.count == 1 and outer.count == 2
+
+
+def test_session_counters_are_locked(setup, monkeypatch):
+    """N threads x M serves on one shared session: batches_served and
+    requests_served are exact (bare += used to drop increments)."""
+    from repro.sim import harness
+
+    params, sched = setup
+
+    def fake_serve_records(params, cfg, sched_, x, labels, plan,
+                           runner_cache=None, bucket=None):
+        return [], x, None
+
+    monkeypatch.setattr(harness, "serve_records", fake_serve_records)
+    sess = ServeSession(params, CFG, sched, PLAN)
+    N, M = 8, 50
+    barrier = threading.Barrier(N)
+
+    def worker(i):
+        barrier.wait()
+        for _ in range(M):
+            sess.serve(jnp.ones((2, 8, 8, 4)))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sess.batches_served == N * M
+    assert sess.requests_served == N * M * 2
+
+
+# --------------------------------------------- deadline policy (fake clock)
+def test_deadline_triggers_partial_dispatch():
+    """A 2-row request under bucket 4 with a 100 ms budget: nothing
+    dispatches while the budget is comfortable; within one dispatch
+    interval of expiry poll() fires a partial (padless bucket-2) dispatch."""
+    clock = _FakeClock()
+    s = _fake_scheduler(clock=clock, dispatch_interval_ms=10.0)
+    t = s.submit(jnp.ones((2, 8, 8, 4)), deadline_ms=100.0)
+    assert s.poll() == 0  # budget comfortable, bucket not full
+    clock.advance(0.050)
+    assert s.poll() == 0
+    clock.advance(0.045)  # now 95 ms in: remaining 5 ms <= 10 ms interval
+    assert s.poll() == 2
+    assert t.done and s.stats()["triggers"]["deadline"] == 1
+    assert s.stats()["deadline_misses"] == 0
+    assert t.done_t <= t._deadline_t  # served before expiry
+
+
+def test_deadline_from_plan_and_override():
+    clock = _FakeClock()
+    s = _fake_scheduler(clock=clock, plan=PLAN.replace(deadline_ms=50.0))
+    t_plan = s.submit(jnp.ones((1, 8, 8, 4)))  # inherits the plan's 50 ms
+    t_none = s.submit(jnp.ones((1, 8, 8, 4)), deadline_ms=None)  # opts out
+    assert t_plan._deadline_t == pytest.approx(0.050)
+    assert t_none._deadline_t is None
+    with pytest.raises(ValueError):
+        s.submit(jnp.ones((1, 8, 8, 4)), deadline_ms=0.0)
+
+
+def test_no_deadline_missed_by_more_than_one_interval():
+    """Poisson-ish arrival replay on the fake clock, polled every
+    interval: every budgeted ticket completes by deadline + one interval
+    (the policy's acceptance bound)."""
+    clock = _FakeClock()
+    interval = 0.010
+    s = _fake_scheduler(clock=clock, dispatch_interval_ms=interval * 1e3)
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.02, size=30))
+    budgets = rng.choice([60.0, 120.0, 250.0], size=30)
+    tickets, nxt = [], 0
+    horizon = arrivals[-1] + 0.5
+    while clock() < horizon:
+        while nxt < len(arrivals) and arrivals[nxt] <= clock():
+            b = 1 + nxt % 3
+            tickets.append(s.submit(jnp.full((b, 8, 8, 4), float(nxt)),
+                                    deadline_ms=float(budgets[nxt])))
+            nxt += 1
+        while s.poll():
+            pass
+        clock.advance(interval)
+    s.flush()
+    assert all(t.done for t in tickets)
+    for t in tickets:
+        assert t.done_t <= t._deadline_t + interval + 1e-9, \
+            f"ticket {t.index} missed its budget by more than one interval"
+    st = s.stats()
+    assert st["triggers"]["deadline"] > 0  # partials actually happened
+    # full buckets still preferred when the queue allows them
+    assert st["dispatched_rows"] == st["submitted_rows"]
+
+
+def test_full_bucket_preempts_nothing_and_costs_nothing():
+    """Rows that fill a bucket dispatch immediately (trigger=full) with
+    zero padding even when budgets exist."""
+    clock = _FakeClock()
+    s = _fake_scheduler(clock=clock)
+    a = s.submit(jnp.ones((2, 8, 8, 4)), deadline_ms=1000.0)
+    b = s.submit(jnp.ones((2, 8, 8, 4)), deadline_ms=1000.0)
+    assert a.done and b.done  # eager sync submit dispatched at 4 rows
+    assert s.pad_rows == 0 and s.stats()["triggers"]["full"] == 1
+
+
+# ----------------------------------------------------------- async plumbing
+def test_async_full_bucket_dispatches_without_poll():
+    s = _fake_scheduler(async_mode=True)
+    try:
+        tickets = [s.submit(jnp.full((2, 8, 8, 4), float(i))) for i in range(2)]
+        for i, t in enumerate(tickets):
+            out = t.result(timeout=5.0)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.full((2, 8, 8, 4), 2.0 * i))
+        assert s.stats()["triggers"]["full"] == 1 and s.pad_rows == 0
+    finally:
+        s.close()
+
+
+def test_async_result_demands_ragged_tail():
+    """result() on a queued partial request unblocks via the demand path
+    instead of deadlocking (no budget, bucket never fills)."""
+    s = _fake_scheduler(async_mode=True)
+    try:
+        t = s.submit(jnp.ones((3, 8, 8, 4)))
+        out = t.result(timeout=5.0)
+        assert out.shape[0] == 3
+        assert s.stats()["triggers"]["demand"] == 1
+    finally:
+        s.close()
+
+
+def test_async_flush_blocks_until_drained():
+    s = _fake_scheduler(async_mode=True, wall_s=0.05)
+    try:
+        tickets = [s.submit(jnp.ones((1, 8, 8, 4))) for _ in range(5)]
+        resolved = s.flush()
+        assert all(t.done for t in tickets)
+        assert {t.index for t in resolved} == {t.index for t in tickets}
+        st = s.stats()
+        assert st["queued_rows"] == 0 and st["inflight"] == 0
+    finally:
+        s.close()
+
+
+def test_async_result_timeout():
+    s = _fake_scheduler(async_mode=True, wall_s=0.5)
+    try:
+        t = s.submit(jnp.ones((4, 8, 8, 4)))  # full bucket: dispatches, slowly
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.02)
+        assert t.result(timeout=5.0).shape[0] == 4  # and still completes
+    finally:
+        s.close()
+
+
+def test_failed_dispatch_resolves_tickets_with_error():
+    s = _fake_scheduler(async_mode=True, fail=True)
+    try:
+        t = s.submit(jnp.ones((4, 8, 8, 4)))
+        with pytest.raises(RuntimeError, match="injected"):
+            t.result(timeout=5.0)
+        st = s.stats()
+        assert st["failed"] == 1 and st["live_tickets"] == 0
+    finally:
+        s.close(drain=False)
+
+
+def test_close_rejects_new_submissions():
+    s = _fake_scheduler(async_mode=True)
+    s.submit(jnp.ones((4, 8, 8, 4)))
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(jnp.ones((1, 8, 8, 4)))
+
+
+def test_context_manager_drains():
+    with _fake_scheduler(async_mode=True) as s:
+        t = s.submit(jnp.ones((1, 8, 8, 4)))
+    assert t.done and s._closed
+
+
+def test_async_concurrent_submitters_fake():
+    """8 threads x 10 ragged budgeted requests against one async
+    scheduler: every ticket resolves to ITS OWN rows (x -> 2x is
+    per-request distinguishable), nothing starves."""
+    s = _fake_scheduler(async_mode=True, dispatch_interval_ms=5.0)
+    errors = []
+
+    def client(i):
+        try:
+            for j in range(10):
+                b = 1 + (i + j) % 3
+                fill = float(i * 100 + j)
+                t = s.submit(jnp.full((b, 8, 8, 4), fill),
+                             deadline_ms=50.0 if j % 2 else None)
+                out = t.result(timeout=30.0)
+                np.testing.assert_array_equal(
+                    np.asarray(out), np.full((b, 8, 8, 4), 2.0 * fill))
+        except Exception as e:  # surface thread failures in the main test
+            errors.append(e)
+
+    try:
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60.0)
+        assert errors == []
+        st = s.stats()
+        assert st["completed"] == 80 and st["live_tickets"] == 0
+        assert st["deadline_misses"] == 0 or st["deadline_misses"] < 80
+    finally:
+        s.close()
+
+
+# ------------------------------------------------- real-stack (slow) tests
+@pytest.mark.slow
+def test_async_bit_identical_to_solo_serve(setup):
+    """The acceptance property: async scheduling (threads, deadlines,
+    partial dispatches) returns bit-identical samples to per-request
+    serve() — batch composition is invisible (per-sample calibration)."""
+    params, sched = setup
+    reqs = [_request(b, 70 + i) for i, b in enumerate([3, 2, 3, 1])]
+    sess = ServeSession(params, CFG, sched, PLAN)
+    refs = [sess.serve(x, l).sample for x, l in reqs]
+
+    with ServeScheduler(params, CFG, sched, PLAN, async_mode=True,
+                        dispatch_interval_ms=20.0) as s:
+        tickets = [s.submit(x, l, deadline_ms=250.0 if i % 2 else None)
+                   for i, (x, l) in enumerate(reqs)]
+        outs = [t.result(timeout=600.0) for t in tickets]
+    st = s.stats()
+    assert st["completed"] == 4 and st["live_tickets"] == 0
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.slow
+def test_concurrent_clients_stress(setup):
+    """Satellite stress test: N client threads, ragged batches, mixed
+    plans (int8 / int4 lowerings) and mixed budgets against ONE async
+    scheduler + ONE cache. Every result is bit-identical to a solo
+    serve() under the matching plan; no starvation."""
+    params, sched = setup
+    p4 = PLAN.replace(low_bits=4)
+    cases = []  # (b, seed, plan, deadline)
+    for i in range(8):
+        cases.append((1 + i % 3, 80 + i, p4 if i % 3 == 0 else PLAN,
+                      400.0 if i % 2 else None))
+    ref_sess = ServeSession(params, CFG, sched, PLAN, cache=CompiledRunnerCache())
+    refs = [ref_sess.serve(*_request(b, seed), plan=plan).sample
+            for b, seed, plan, _ in cases]
+
+    cache = CompiledRunnerCache()
+    outs = [None] * len(cases)
+    errors = []
+    with ServeScheduler(params, CFG, sched, PLAN, cache=cache,
+                        async_mode=True, dispatch_interval_ms=50.0) as s:
+        def client(i):
+            try:
+                b, seed, plan, ddl = cases[i]
+                t = s.submit(*_request(b, seed), plan=plan, deadline_ms=ddl)
+                outs[i] = t.result(timeout=600.0)
+            except Exception as e:
+                errors.append((i, e))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(cases))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600.0)
+    assert errors == []
+    for i, (out, ref) in enumerate(zip(outs, refs)):
+        assert out is not None, f"client {i} starved"
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=f"client {i}")
+    # the two lowerings never shared a trace, one cache served both
+    assert {k.low_bits for k in cache.trace_counts} == {4, 8}
+
+
+@pytest.mark.slow
+def test_warmup_removes_first_request_trace_cost(setup):
+    """AOT warmup: after warmup(), the first real request causes ZERO new
+    traces and dispatches through the pre-compiled executables."""
+    params, sched = setup
+    cache = CompiledRunnerCache()
+    s = ServeScheduler(params, CFG, sched, PLAN, cache=cache)
+    w = s.warmup()
+    assert w["aot_compiled"] == 3  # bucket ladder {1, 2, 4}
+    traces0 = cache.n_traces
+    t = s.submit(*_request(3, 90))
+    out = t.result()
+    assert out.shape[0] == 3
+    assert cache.n_traces == traces0, "warmed request re-traced"
+    assert cache.stats()["aot_hits"] > 0
+    assert cache.stats()["aot_misses"] == 0

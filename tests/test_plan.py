@@ -62,6 +62,30 @@ def test_plan_validates_at_construction():
         DittoPlan().replace(low_bits=16)
 
 
+def test_max_batch_must_be_power_of_two():
+    """Satellite regression: a non-power-of-two cap used to flow through to
+    bucket_for, whose min(b, max_batch) silently emitted non-canonical
+    buckets (5 -> 6) and fragmented the runner cache."""
+    for bad in (3, 6, 12, 100):
+        with pytest.raises(ValueError):
+            DittoPlan(max_batch=bad)
+    for ok in (1, 2, 4, 8, 64):
+        assert DittoPlan(max_batch=ok).max_batch == ok
+
+
+def test_deadline_validates_and_stays_out_of_sig():
+    with pytest.raises(ValueError):
+        DittoPlan(deadline_ms=0.0)
+    with pytest.raises(ValueError):
+        DittoPlan(deadline_ms=-5.0)
+    p = DittoPlan(deadline_ms=250.0)
+    assert p.deadline_ms == 250.0
+    assert DittoPlan().deadline_ms is None
+    # a latency budget changes WHEN a request dispatches, never what it
+    # computes — it must not split the trace cache (audit-gated too)
+    assert p.cache_sig() == DittoPlan().cache_sig()
+
+
 def test_plan_frozen_and_hashable():
     p = DittoPlan(steps=8, low_bits=4)
     assert p == DittoPlan(steps=8, low_bits=4)

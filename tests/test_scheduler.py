@@ -116,7 +116,9 @@ def test_request_split_across_dispatches(setup):
     ref6 = sess.serve(x6, l6).sample
     ref2 = sess.serve(x2, l2).sample
 
-    s = ServeScheduler(params, CFG, sched, PLAN)
+    # retain=True: ticket/dispatch introspection below needs the opt-in
+    # record keeping (tickets retire to counters by default)
+    s = ServeScheduler(params, CFG, sched, PLAN, retain=True)
     t6 = s.submit(x6, l6)  # eager: dispatches rows 0..3 immediately
     assert s.stats()["dispatches"] == 1 and not t6.done
     t2 = s.submit(x2, l2)  # 2 leftover + 2 new = full bucket 4

@@ -55,6 +55,22 @@ def test_bucket_for_rounds_to_pow2():
         bucket_for(17, max_batch=16)
 
 
+def test_bucket_for_rejects_non_pow2_max_batch():
+    """Satellite regression: min(b, max_batch) used to return the
+    NON-CANONICAL bucket 6 for (5, max_batch=6), silently fragmenting the
+    runner cache past log2(max_batch)+1 entries. Now both directions are
+    enforced: every returned bucket is a power of two, and a non-pow2 cap
+    is rejected outright."""
+    with pytest.raises(ValueError):
+        bucket_for(5, max_batch=6)
+    with pytest.raises(ValueError):
+        bucket_for(1, max_batch=12)
+    # canonical ladder only — never a bucket between pow2 points
+    for n in range(1, 17):
+        b = bucket_for(n, max_batch=16)
+        assert b & (b - 1) == 0 and b >= n
+
+
 def test_pad_batch_replicates_rows():
     x, labels = _request(3)
     xp, lp = pad_batch(x, labels, 8)
@@ -207,7 +223,8 @@ def test_legacy_kwargs_hit_the_same_runner_key():
         CFG, modes, DittoPlan(steps=6, low_bits=4, block=64, collect_stats=False),
         bucket=8)
     assert f_old is f_new
-    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 1, "misses": 1}
+    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 1, "misses": 1,
+                             "aot_hits": 0, "aot_misses": 0}
 
 
 @pytest.mark.slow
@@ -238,10 +255,12 @@ def test_cache_key_hit_miss_bookkeeping():
     f1 = cache.step_for(CFG, modes, plan, bucket=8)
     f2 = cache.step_for(CFG, dict(reversed(list(modes.items()))), plan, bucket=8)
     assert f1 is f2  # mode signature is order-insensitive
-    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 1, "misses": 1}
+    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 1, "misses": 1,
+                             "aot_hits": 0, "aot_misses": 0}
     f3 = cache.step_for(CFG, modes, plan.replace(steps=8), bucket=8)
     assert f3 is f1  # steps is loop-level: same trace, a cache HIT
-    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 2, "misses": 1}
+    assert cache.stats() == {"runners": 1, "traces": 0, "hits": 2, "misses": 1,
+                             "aot_hits": 0, "aot_misses": 0}
     cache.step_for(CFG, modes, plan, bucket=4)  # different bucket
     cache.step_for(CFG, modes, plan.replace(low_bits=4), bucket=8)  # different lowering
     cache.step_for(CFG, {"l1": "act", "l2": "act"}, plan, bucket=8)  # different modes
@@ -250,7 +269,8 @@ def test_cache_key_hit_miss_bookkeeping():
     k2 = cache.key_for(CFG, modes, plan, bucket=4)
     assert k1 != k2 and k1.mode_sig == k2.mode_sig and k1.plan_sig == k2.plan_sig
     cache.clear()
-    assert cache.stats() == {"runners": 0, "traces": 0, "hits": 0, "misses": 0}
+    assert cache.stats() == {"runners": 0, "traces": 0, "hits": 0, "misses": 0,
+                             "aot_hits": 0, "aot_misses": 0}
 
 
 # ---------------------------------------------------------------- session
