@@ -33,6 +33,7 @@ MODULES = [
     "bench_scheduler",
     "bench_schedule",
     "bench_latency",
+    "bench_faults",
 ]
 
 

@@ -33,6 +33,14 @@ bit-identical to the synchronous path.
     PYTHONPATH=src python examples/serve_diffusion.py --fused        # single-pass fused kernel
     PYTHONPATH=src python examples/serve_diffusion.py --int4-from 8  # int8 early, int4+fused late
     PYTHONPATH=src python examples/serve_diffusion.py --deadline-ms 2000 --warmup  # async SLO mode
+    PYTHONPATH=src python examples/serve_diffusion.py --chaos 7       # seeded fault schedule
+
+``--chaos SEED`` serves the queue under a seeded fault schedule
+(:func:`repro.serve.chaos_schedule` over the ``session.serve`` and
+``denoise.step`` sites) with the recovery stack armed: a retry/fallback
+ladder on the dispatch path and the numerical re-anchor watchdog on the
+denoise path. Every request must still resolve — CI runs this as the
+chaos smoke.
 """
 import argparse
 import json
@@ -51,7 +59,8 @@ from repro import configs
 from repro.core import diffusion
 from repro.data.synthetic import DataCfg, batch_for
 from repro.launch import steps as steps_mod
-from repro.serve import DittoPlan, PlanSchedule, ServeScheduler, ServeSession
+from repro.serve import (DittoPlan, PlanSchedule, ServeScheduler, ServeSession,
+                         chaos_schedule, inject)
 from repro.sim import harness
 
 
@@ -71,8 +80,20 @@ def build_model(train_steps=200):
 
 def serve_async(args, arch, dcfg, params, sched, plan, done, queue):
     """Async SLO path: one submission per request, background dispatch."""
+    import contextlib
     import time
 
+    injector = None
+    if args.chaos is not None:
+        # session.serve errors exercise the retry/fallback ladder (a
+        # 3-retry budget always out-lasts 3 one-shot faults); denoise.step
+        # poisons/drift exercise the re-anchor watchdog
+        injector = chaos_schedule(args.chaos, n_faults=3,
+                                  sites=("session.serve", "denoise.step"),
+                                  max_at=6)
+        print(f"[serve] chaos seed {args.chaos}: "
+              + ", ".join(f"{f.kind}@{f.site}[{f.at}]"
+                          for f in injector.faults))
     s = ServeScheduler(params, dcfg, sched, plan, async_mode=True,
                        dispatch_interval_ms=25.0)
     if args.warmup:
@@ -81,18 +102,26 @@ def serve_async(args, arch, dcfg, params, sched, plan, done, queue):
               f"({w['traces']} trace(s)) in {w['wall_s']:.1f}s")
     t0 = time.monotonic()
     tickets = []
-    with s:
-        for rid, cls in queue:
-            key = jax.random.fold_in(jax.random.PRNGKey(42), rid)
-            x = jax.random.normal(
-                key, (1, arch.input_size, arch.input_size, arch.in_channels))
-            tickets.append(
-                (rid, cls, s.submit(x, jnp.array([cls]),
-                                    deadline_ms=args.deadline_ms)))
-        for _, _, t in tickets:
-            t.result(timeout=600.0)
-        st = s.stats()
+    with (inject(injector) if injector is not None
+          else contextlib.nullcontext()):
+        with s:
+            for rid, cls in queue:
+                key = jax.random.fold_in(jax.random.PRNGKey(42), rid)
+                x = jax.random.normal(
+                    key, (1, arch.input_size, arch.input_size, arch.in_channels))
+                tickets.append(
+                    (rid, cls, s.submit(x, jnp.array([cls]),
+                                        deadline_ms=args.deadline_ms)))
+            for _, _, t in tickets:
+                t.result(timeout=600.0)
+            st = s.stats()
     wall = time.monotonic() - t0
+    if injector is not None:
+        print(f"[serve] chaos: {len(injector.fired)}/{len(injector.faults)} "
+              f"fault(s) fired, {st['retries']} retry(ies), "
+              f"{st['fallback_dispatches']} fallback dispatch(es), "
+              f"{st['watchdog_events']} watchdog re-anchor(s), "
+              f"{st['failed']} failed ticket(s)")
     for rid, cls, t in tickets:
         lat = t.done_t - t.submit_t
         done[rid] = {"class": cls, "wall_s": lat}
@@ -140,9 +169,16 @@ def main(argv=None):
                     help="AOT-compile the whole bucket ladder before serving "
                          "(implies the async scheduler) so the first request "
                          "of each bucket skips trace AND compile")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="serve under a seeded fault schedule (implies the "
+                         "async scheduler) with the retry/fallback ladder "
+                         "and the re-anchor watchdog armed; every request "
+                         "must still resolve")
     args = ap.parse_args(argv)
     if args.int4_from is not None and not 0 < args.int4_from < args.steps:
         ap.error(f"--int4-from must be inside (0, {args.steps})")
+    if args.chaos is not None and args.int4_from is not None:
+        ap.error("--chaos arms a constant recovery plan; drop --int4-from")
 
     arch, dcfg, params = build_model()
     sched = diffusion.cosine_schedule(1000)
@@ -170,7 +206,16 @@ def main(argv=None):
             (0, args.int4_from, {}),
             (args.int4_from, args.steps, dict(low_bits=4, fused=True)),
         ])
-    if args.deadline_ms is not None or args.warmup:
+    if args.chaos is not None:
+        # recovery stack: dispatch ladder (fused -> unfused -> int8) plus
+        # the numerical watchdog with the saturation re-anchor armed; none
+        # of these fields is trace identity (DittoPlan.cache_sig), so the
+        # runner cache behaves exactly as in the fault-free run
+        plan = plan.replace(max_retries=3, retry_backoff_ms=25.0,
+                            fallbacks=(dict(fused=False),
+                                       dict(fused=False, low_bits=8)),
+                            watchdog=True, reanchor_full_frac=0.97)
+    if args.deadline_ms is not None or args.warmup or args.chaos is not None:
         return serve_async(args, arch, dcfg, params, sched, plan, done, queue)
     sess = ServeSession(params, dcfg, sched, plan)
     while queue:

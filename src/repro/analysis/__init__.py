@@ -5,9 +5,11 @@ Two pass families guard the serving stack's central invariant — a
 
 * :mod:`.trace_audit` proves both directions of ``cache_sig() ⇔ jaxpr``
   abstractly (``jax.make_jaxpr`` over shape structs, no kernel runs);
-* :mod:`.kernel_contract`, :mod:`.trace_leak` and :mod:`.repo_rules` are
-  pure-AST rules over the kernels package, the plan-threading boundary
-  and repo hygiene (bench registration, pytest markers).
+* :mod:`.kernel_contract`, :mod:`.trace_leak`, :mod:`.repo_rules` and
+  :mod:`.plan_rules` are pure-AST rules over the kernels package, the
+  plan-threading boundary, repo hygiene (bench registration, pytest
+  markers) and the plan definition site (recovery knobs must stay out of
+  ``cache_sig()``/``SEGMENT_FIELDS``).
 
 Everything reports through :mod:`.findings` — one Finding/report/baseline
 format shared with ``tools/check_docs.py``.
@@ -24,6 +26,7 @@ from .findings import (
     write_baseline,
 )
 from .kernel_contract import check_kernels
+from .plan_rules import check_plan_rules
 from .repo_rules import check_repo_rules
 from .trace_leak import check_trace_leaks
 
@@ -31,6 +34,7 @@ __all__ = [
     "Finding",
     "apply_baseline",
     "check_kernels",
+    "check_plan_rules",
     "check_repo_rules",
     "check_trace_leaks",
     "load_baseline",

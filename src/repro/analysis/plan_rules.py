@@ -1,0 +1,96 @@
+"""Plan-contract rules: the recovery knobs must stay out of trace identity.
+
+``plan-sig-purity``
+    No name in ``ROBUSTNESS_FIELDS`` (retries, backoff, fallback chain,
+    watchdog, re-anchor threshold) may be read inside
+    ``DittoPlan.cache_sig`` or listed in ``SEGMENT_FIELDS``. These knobs
+    select HOW a dispatch recovers, never what a step lowers to — leaking
+    one into the sig would fork the runner cache per recovery policy
+    (trace duplication the audit would flag only after the fact), and a
+    segment-schedulable recovery field would let two segments of one
+    schedule disagree on recovery policy mid-dispatch. The abstract trace
+    audit proves the same property dynamically (equal-sig probes); this
+    rule pins it at the definition site with a pure AST read.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from . import astutil
+from .findings import Finding
+
+#: the definition site every finding anchors to
+PLAN_REL = "src/repro/core/ditto/plan.py"
+
+
+def _tuple_assign(tree: ast.Module, name: str) -> tuple[set[str], int]:
+    """Module-level ``NAME = ("a", "b", ...)`` string entries (tuples built
+    by concatenation contribute their literal parts)."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if name in targets:
+                names = {c.value for c in ast.walk(node.value)
+                         if isinstance(c, ast.Constant)
+                         and isinstance(c.value, str)}
+                return names, node.lineno
+    return set(), 0
+
+
+def _method(tree: ast.Module, cls: str, meth: str) -> ast.FunctionDef | None:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            for item in node.body:
+                if isinstance(item, ast.FunctionDef) and item.name == meth:
+                    return item
+    return None
+
+
+def _self_reads(fn: ast.FunctionDef) -> dict[str, int]:
+    """``self.X`` attribute names read anywhere in the method body."""
+    out: dict[str, int] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            out.setdefault(node.attr, node.lineno)
+    return out
+
+
+def check_plan_rules(repo_root: str, plan_rel: str = PLAN_REL) -> list[Finding]:
+    path = os.path.join(repo_root, plan_rel)
+    tree = astutil.parse_module(path)
+    findings: list[Finding] = []
+
+    robustness, _ = _tuple_assign(tree, "ROBUSTNESS_FIELDS")
+    if not robustness:
+        return [Finding(
+            "plan-sig-purity", plan_rel, "ROBUSTNESS_FIELDS",
+            f"{plan_rel} has no module-level ROBUSTNESS_FIELDS tuple — the "
+            f"recovery-knob contract has nothing to check against", 0)]
+
+    segment, s_line = _tuple_assign(tree, "SEGMENT_FIELDS")
+    for name in sorted(robustness & segment):
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, f"SEGMENT_FIELDS:{name}",
+            f"recovery field '{name}' is listed in SEGMENT_FIELDS — a "
+            f"schedule segment could override recovery policy mid-dispatch, "
+            f"and every segment-schedulable field is a cache_sig() field",
+            s_line))
+
+    sig_fn = _method(tree, "DittoPlan", "cache_sig")
+    if sig_fn is None:
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, "cache_sig",
+            f"{plan_rel} defines no DittoPlan.cache_sig method", 0))
+        return findings
+    reads = _self_reads(sig_fn)
+    for name in sorted(robustness & set(reads)):
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, f"cache_sig:{name}",
+            f"DittoPlan.cache_sig reads self.{name} — recovery policy would "
+            f"become trace identity, forking the runner cache per "
+            f"retry/fallback/watchdog configuration with no lowering "
+            f"difference to justify it", reads[name]))
+    return findings

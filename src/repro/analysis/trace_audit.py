@@ -251,6 +251,70 @@ def default_schedule_matrix() -> list:
     ]
 
 
+# ------------------------------------------------------- recovery coverage
+def audit_recovery_sigs(plans, audited_sigs, *, group: str = "recovery"
+                        ) -> list[Finding]:
+    """Prove the failure paths never mint surprise traces: every rung of a
+    plan's degradation ladder (``fallback_plans()``) and every watchdog
+    plan's canonical re-anchor lowering (``fused=False``, default
+    ``low_bits`` — what ``make_denoise_fn`` actually builds) must resolve
+    to a ``cache_sig()`` the audit matrix already fingerprinted. A rung
+    outside the audited set would mean recovery dispatches run a lowering
+    the sig⇔jaxpr proof never saw."""
+    from repro.kernels.common import DEFAULT_LOW_BITS
+
+    findings: list[Finding] = []
+    for label, plan in plans:
+        rungs = plan.fallback_plans() if hasattr(plan, "fallback_plans") else ()
+        for i, rung in enumerate(rungs):
+            if rung.cache_sig() not in audited_sigs:
+                findings.append(Finding(
+                    "fallback-unaudited", PLAN_PATH, f"{group}:{label}#rung{i}",
+                    f"[{group}] plan '{label}' fallback rung {i} resolves to "
+                    f"cache_sig()={rung.cache_sig()} which no audit group "
+                    f"fingerprinted — a failed dispatch would recover onto an "
+                    f"unaudited lowering; add the sig to the plan matrix"))
+        if getattr(plan, "watchdog", False):
+            # a schedule re-anchors off whichever segment plan is live, so
+            # every segment contributes a candidate re-anchor sig
+            seg_plans = ([p for _, _, p in plan.segment_plans()]
+                         if hasattr(plan, "segment_plans") else [plan])
+            rsigs = {p.replace(fused=False,
+                               low_bits=DEFAULT_LOW_BITS).cache_sig()
+                     for p in seg_plans}
+            for rsig in sorted(rsigs - set(audited_sigs)):
+                findings.append(Finding(
+                    "reanchor-unaudited", PLAN_PATH, f"{group}:{label}#reanchor",
+                    f"[{group}] plan '{label}' re-anchors onto "
+                    f"cache_sig()={rsig} which no audit group fingerprinted — "
+                    f"the watchdog's full-bit-width step would run an "
+                    f"unaudited lowering; add the sig to the plan matrix"))
+    return findings
+
+
+def default_recovery_matrix():
+    """(label, plan) recovery representatives: the production-shaped
+    ladders whose rungs/re-anchor sigs the audit must have covered —
+    the kernel-family ladder the example/benches serve (fused→unfused→
+    int8→eager) in both stats flavors, plus a scheduled base."""
+    from repro.core.ditto.plan import DittoPlan, PlanSchedule
+
+    base = DittoPlan(collect_stats=False)
+    ladder = (dict(fused=False), dict(fused=False, low_bits=8),
+              dict(compiled=False))
+    serving = base.replace(low_bits=4, fused=True, watchdog=True,
+                           max_retries=3, retry_backoff_ms=25.0,
+                           fallbacks=ladder)
+    stats_serving = DittoPlan(fused=True, watchdog=True, max_retries=3,
+                              retry_backoff_ms=25.0, reanchor_full_frac=0.97,
+                              fallbacks=(dict(fused=False),))
+    sched = PlanSchedule(serving.replace(steps=12),
+                         [(0, 4, dict(fused=False, low_bits=8)), (4, 12, {})])
+    return [("serving-ladder", serving),
+            ("stats-serving-ladder", stats_serving),
+            ("scheduled-ladder", sched)]
+
+
 # ----------------------------------------------------------- default matrix
 def _tiny_cfgs():
     """Audit configs: a minimal DiT plus a scaled-down echo of the
@@ -281,8 +345,15 @@ def default_plan_matrix():
         ("max-batch-8", base.replace(max_batch=8)),
         ("deadline-250", base.replace(deadline_ms=250.0)),
         ("eager", base.replace(compiled=False)),
+        ("watchdog", base.replace(watchdog=True)),
+        ("retry-ladder", base.replace(
+            max_retries=2, retry_backoff_ms=5.0,
+            fallbacks=(dict(low_bits=4), dict(compiled=False)))),
         # distinct-sig probes: each must select a distinct jaxpr
         ("stats", base.replace(collect_stats=True)),
+        # recovery knobs on top of stats: sig must STAY the stats sig
+        ("watchdog-reanchor", base.replace(
+            collect_stats=True, watchdog=True, reanchor_full_frac=0.9)),
         ("low-bits-4", base.replace(low_bits=4)),
         ("fused", base.replace(fused=True)),
         ("fused-low-bits-4", base.replace(fused=True, low_bits=4)),  # allowlisted vs fused
@@ -304,6 +375,7 @@ def run_trace_audit(log=None) -> list[Finding]:
     findings: list[Finding] = []
     cfgs = dict(_tiny_cfgs())
     fps: dict = {}  # (cfg id, mode, batch, plan) -> fingerprint, across groups
+    audited_sigs: set = set()  # every sig any group fingerprinted
 
     def build(cfg, modes, plans, batch, group, state):
         cases = []
@@ -314,6 +386,7 @@ def run_trace_audit(log=None) -> list[Finding]:
             if fp is None:
                 fp = fps[memo] = trace_fingerprint(cfg, modes, plan, batch, state=state)
             say(f"  traced {group}:{label} sig={plan.cache_sig()} fp={fp}")
+            audited_sigs.add(plan.cache_sig())
             cases.append(TraceCase(label, plan.cache_sig(), fp, plan))
         return cases
 
@@ -341,7 +414,8 @@ def run_trace_audit(log=None) -> list[Finding]:
         group="tiny/diff/b2/sched")
 
     stale_probes = [p for p in plans if p[0] in
-                    ("base", "interpret-explicit", "steps-40", "stats")]
+                    ("base", "interpret-explicit", "steps-40", "watchdog",
+                     "stats")]
     say("group tiny/act/b2: stale direction only (diff knobs inert under act)")
     findings += audit_cases(
         build(tiny, uniform_modes(tiny, "act"), stale_probes, 2, "tiny/act/b2", state),
@@ -360,4 +434,7 @@ def run_trace_audit(log=None) -> list[Finding]:
         build(echo, uniform_modes(echo, "diff"), echo_probes, 2, "xl2-echo/diff/b2",
               abstract_state(echo, 2)),
         group="xl2-echo/diff/b2")
+
+    say("group recovery: ladder rungs / re-anchor sigs ⊆ audited sigs")
+    findings += audit_recovery_sigs(default_recovery_matrix(), audited_sigs)
     return findings

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels.common import DEFAULT_LOW_BITS
 from ...nn import core as nncore
 from ...nn import dit as dit_mod
 from . import compiled as compiled_mod
@@ -273,6 +274,21 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
     bit-identical to the matching constant plan at every step. Eager
     calibration steps predate the compiled path and ignore segment kernel
     knobs (the eager engine has none).
+
+    ``plan.watchdog=True`` arms the numerical health watchdog on the
+    compiled path: every step's output is finite-guarded, and (with
+    ``plan.reanchor_full_frac``) the measured tile-class histograms are
+    watched for Δ-saturation — too many full-precision tiles means the
+    quantized temporal deltas have drifted out of range. Either signal
+    triggers a RE-ANCHOR: the paper's initial-step semantics applied
+    mid-trajectory — the step re-runs with every layer in act mode (full
+    direct int8 GEMMs, no temporal differencing) under one canonical
+    plan (``fused=False``, default ``low_bits``; act-mode lowering
+    ignores both, so every kernel-family serving plan shares ONE audited
+    re-anchor trace), refreshing ``x_prev``/``y_prev`` so later diff
+    steps difference against a clean anchor. Events land on
+    ``engine.watchdog_events``; output that is STILL non-finite raises a
+    typed ``repro.serve.faults.NumericalFault``.
     """
     legacy = dict(compiled=compiled, interpret=interpret, collect_stats=collect_stats,
                   block=block, low_bits=low_bits, fused=fused)
@@ -282,8 +298,74 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
     plan, bucket = _resolve_legacy("core.ditto.make_denoise_fn", plan, bucket,
                                    cache_extra, default=EAGER_PLAN, **legacy)
     schedule = plan.normalized() if isinstance(plan, PlanSchedule) else None
+    watchdog = bool(getattr(plan, "watchdog", False))
+    reanchor_frac = getattr(plan, "reanchor_full_frac", None)
+    if watchdog:
+        # the typed error + poison probe live with the other fault machinery;
+        # imported lazily so core.ditto never hard-depends on repro.serve
+        from ...serve import faults as faults_mod
     runner = DittoDiT(params, cfg, engine)
     box: dict = {}
+
+    def reanchor_step(x, t, labels, trigger: str, extra: dict):
+        """Run THIS step full-bit-width (all layers act mode) under the
+        canonical re-anchor plan, refreshing the temporal anchors."""
+        cur = box["runner"]
+        rplan = cur.plan.replace(fused=False, low_bits=DEFAULT_LOW_BITS)
+        act_modes = {name: "act" for name in cur.ceng.modes}
+        rsig = rplan.cache_sig()
+        if box.get("reanchor_sig") != rsig:
+            if runner_cache is not None:
+                box["reanchor_fn"] = runner_cache.step_for(
+                    cfg, act_modes, rplan, bucket=bucket)
+            else:
+                box["reanchor_fn"] = jax.jit(make_step_fn(cfg, act_modes, rplan))
+            box["reanchor_sig"] = rsig
+        out, cur.state, aux = box["reanchor_fn"](
+            cur.ceng.params, params, cur.state, x, t, labels)
+        if cur.ceng.collect_stats:
+            engine.record_compiled_step(aux, modes=act_modes, reanchor=True)
+        engine.watchdog_events.append(
+            {"step": engine.step_idx, "trigger": trigger, **extra})
+        return out
+
+    def guarded_step(x, t, labels):
+        """One compiled step under the watchdog: finite guard (re-run the
+        step re-anchored on NaN/Inf) + Δ-saturation tracking (re-anchor
+        the NEXT step when the measured full-tile fraction crosses
+        ``reanchor_full_frac``)."""
+        fault = faults_mod.fire("denoise.step")
+        x_in = x
+        if fault is not None and fault.kind == "drift":
+            x_in = faults_mod.corrupt(fault, x)  # saturate the temporal Δs
+        due = box.pop("reanchor_due", None)
+        if due is not None:
+            return reanchor_step(x_in, t, labels, "saturation",
+                                 {"full_frac": due})
+        cur = box["runner"]
+        pre_state = cur.state
+        n0 = len(engine.records)
+        out = cur(x_in, t, labels)
+        if fault is not None and fault.kind in ("poison_nan", "poison_inf"):
+            # poison the step OUTPUT: the int8 path launders input NaNs
+            # (quantization clips them to an integer), so output poisoning
+            # is the faithful stand-in for an fp32-side corruption
+            out = faults_mod.corrupt(fault, out)
+        if not bool(jnp.isfinite(out).all()):
+            # roll back the poisoned step (state AND its records) and
+            # re-run it re-anchored from the pre-step temporal state,
+            # with the UN-corrupted input
+            cur.state = pre_state
+            del engine.records[n0:]
+            return reanchor_step(x, t, labels, "nonfinite", {})
+        if reanchor_frac is not None:
+            hists = [r["tile_hist"] for r in engine.records[n0:]
+                     if "tile_hist" in r]
+            total = sum(sum(h) for h in hists)
+            full = sum(h[2] for h in hists)
+            if total and full >= reanchor_frac * total:
+                box["reanchor_due"] = full / total
+        return out
 
     def fn(x, t, labels):
         if plan.compiled and engine.ready_for_compiled():
@@ -297,13 +379,19 @@ def make_denoise_fn(params, cfg: dit_mod.DiTCfg, engine: DittoEngine,
                                                  cache=runner_cache, bucket=bucket)
                 box["built_for"] = engine.records
                 box["sig"] = sig
+                box.pop("reanchor_due", None)  # saturation never crosses samples
             elif box["sig"] != sig:  # segment boundary: swap lowering, carry state
                 prev = box["runner"]
                 box["runner"] = CompiledDittoDiT(params, cfg, engine, seg_plan,
                                                  cache=runner_cache, bucket=bucket)
                 box["runner"].state = prev.state
                 box["sig"] = sig
-            out = box["runner"](x, t, labels)
+            if watchdog:
+                out = guarded_step(x, t, labels)
+                if not bool(jnp.isfinite(out).all()):
+                    raise faults_mod.NumericalFault(engine.step_idx)
+            else:
+                out = box["runner"](x, t, labels)
         else:
             out = runner(x, t, labels)
         engine.end_step()

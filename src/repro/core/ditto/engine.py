@@ -71,6 +71,7 @@ class DittoEngine:
         self.records: list[dict] = []  # one per (layer, step)
         self._decided = False
         self._compiled_base = None  # cached (modes, first-record-per-layer)
+        self.watchdog_events: list[dict] = []  # re-anchor events (serve watchdog)
 
     # ------------------------------------------------------------- weights
     def register_linear(self, meta: LayerMeta, w: jax.Array, bias: jax.Array | None = None):
@@ -88,6 +89,7 @@ class DittoEngine:
         self._decided = False
         self._compiled_base = None
         self.records = []
+        self.watchdog_events = []
         for st in self.layers.values():
             st.x_prev = st.y_prev = None
             st.a_prev = st.b_prev = None
@@ -338,7 +340,9 @@ class DittoEngine:
             modes[name] = m
         return modes
 
-    def record_compiled_step(self, aux: dict[str, dict]) -> None:
+    def record_compiled_step(self, aux: dict[str, dict], *,
+                             modes: dict[str, str] | None = None,
+                             reanchor: bool = False) -> None:
         """Append records for one compiled step.
 
         ``aux`` comes out of the jitted step function: per layer, the
@@ -361,12 +365,16 @@ class DittoEngine:
             for r in self.records:
                 base_by_layer.setdefault(r["layer"], r)
             self._compiled_base = (self.compiled_modes(), base_by_layer)
-        modes, base_by_layer = self._compiled_base
+        base_modes, base_by_layer = self._compiled_base
+        if modes is None:
+            modes = base_modes
         for name, a in aux.items():
             base = base_by_layer[name]
             meta = self.meta[name]
             rec: dict[str, Any] = {"layer": name, "step": self.step_idx, "mode": modes[name],
                                    "kind": meta.kind, "macs": base["macs"], "compiled": True}
+            if reanchor:
+                rec["reanchor"] = True
             cls_act = tuple(float(v) for v in a["cls_act"])
             cls_diff = tuple(float(v) for v in a["cls_diff"]) if "cls_diff" in a else None
             cls_sp = tuple(float(v) for v in a["cls_spatial"]) if "cls_spatial" in a else None

@@ -47,6 +47,42 @@ DEFAULT_MAX_BATCH = 64  # mirrored by repro.serve.bucketing
 _SAMPLERS = ("ddim", "plms")
 _POLICIES = ("act", "diff", "spatial", "defo", "defo+")
 
+#: Plan fields a schedule segment may override — exactly the kernel-lowering
+#: fields of :meth:`DittoPlan.cache_sig`. Loop-level fields (``steps``,
+#: ``sampler``, ``policy``, ``compiled``, ``max_batch``) shape the loop
+#: around the steps and must stay constant across a schedule. The tile
+#: classification threshold is not a knob: it is fixed by the packed-int4
+#: contract (``|delta| <= LOW_BIT_MAX`` so class-1 tiles pack losslessly).
+SEGMENT_FIELDS = ("block", "interpret", "collect_stats", "low_bits", "fused")
+
+#: Plan fields a degradation-ladder fallback delta may override: the
+#: segment (kernel-lowering) fields plus ``compiled``, so the last rung can
+#: drop to the eager engine. Loop/queueing fields stay fixed — a fallback
+#: redispatch must cover the same tickets with the same loop shape.
+FALLBACK_FIELDS = SEGMENT_FIELDS + ("compiled",)
+
+#: Recovery-policy fields. None of these changes what a step lowers to, so
+#: none may appear in :meth:`DittoPlan.cache_sig` — two plans differing
+#: only in how they *recover* replay one trace.
+#: ``analysis.plan_rules.check_plan_rules`` enforces this statically.
+ROBUSTNESS_FIELDS = (
+    "max_retries", "retry_backoff_ms", "fallbacks", "watchdog",
+    "reanchor_full_frac",
+)
+
+
+def _canon_delta(delta) -> tuple:
+    """Delta -> canonical sorted ``((field, value), ...)`` tuple."""
+    if delta is None:
+        return ()
+    items = delta.items() if isinstance(delta, dict) else delta
+    try:
+        pairs = [(k, v) for k, v in items]
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"segment delta must be a dict or (field, value) pairs, got {delta!r}")
+    return tuple(sorted(pairs))
+
 
 @dataclasses.dataclass(frozen=True)
 class DittoPlan:
@@ -66,9 +102,16 @@ class DittoPlan:
     collect_stats: bool = True
     max_batch: int = DEFAULT_MAX_BATCH
     deadline_ms: float | None = None  # per-request latency budget (SLO); None = no budget
+    # --- recovery config: never part of cache_sig() ------------------------
+    max_retries: int = 0  # extra dispatch attempts after the first fails
+    retry_backoff_ms: float = 0.0  # base backoff, doubled per retry (capped)
+    fallbacks: tuple = ()  # degradation ladder: plan deltas over FALLBACK_FIELDS
+    watchdog: bool = False  # per-step finite guard + re-anchor on the diff path
+    reanchor_full_frac: float | None = None  # Δ-saturation threshold; None = off
 
     def __post_init__(self):
         validate_low_bits(self.low_bits)
+        self._validate_recovery()
         if self.block < 1:
             raise ValueError(f"block must be >= 1, got {self.block}")
         if self.steps < 1:
@@ -91,6 +134,38 @@ class DittoPlan:
         if self.policy not in _POLICIES:
             raise ValueError(f"policy must be one of {_POLICIES}, got {self.policy!r}")
 
+    def _validate_recovery(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_ms < 0:
+            raise ValueError(
+                f"retry_backoff_ms must be >= 0, got {self.retry_backoff_ms}")
+        canon = tuple(_canon_delta(d) for d in tuple(self.fallbacks))
+        object.__setattr__(self, "fallbacks", canon)
+        for delta in canon:
+            bad = sorted(k for k, _ in delta if k not in FALLBACK_FIELDS)
+            if bad:
+                raise ValueError(
+                    f"fallback delta overrides non-fallback fields {bad}; "
+                    f"allowed fields are {FALLBACK_FIELDS}")
+            # each rung must itself be a valid plan
+            self.replace(**dict(delta), fallbacks=())
+        if self.reanchor_full_frac is not None:
+            if not 0.0 < self.reanchor_full_frac <= 1.0:
+                raise ValueError(
+                    f"reanchor_full_frac must be in (0, 1], "
+                    f"got {self.reanchor_full_frac}")
+            if not self.watchdog:
+                raise ValueError(
+                    "reanchor_full_frac requires watchdog=True (the "
+                    "saturation metric is read by the watchdog)")
+            if not self.collect_stats:
+                raise ValueError(
+                    "reanchor_full_frac requires collect_stats=True (the "
+                    "saturation metric is derived from the recorded "
+                    "tile-class histograms)")
+
     # ------------------------------------------------------------------ api
     def replace(self, **kw) -> "DittoPlan":
         """A copy with fields overridden (re-validated)."""
@@ -107,8 +182,9 @@ class DittoPlan:
         distinct jitted step. ``RunnerKey`` embeds this verbatim; the
         field order is a stable contract (see ``RunnerKey``'s accessors).
         ``steps``/``sampler``/``policy``/``compiled``/``max_batch``/
-        ``deadline_ms`` are deliberately absent: they shape the loop (or
-        the serving policy) around the step, not the step itself, so
+        ``deadline_ms`` and the :data:`ROBUSTNESS_FIELDS` are
+        deliberately absent: they shape the loop (or the serving/recovery
+        policy) around the step, not the step itself, so
         plans differing only there share one trace
         (``steps`` counts how often the step runs — the trace-identity
         audit in ``repro.analysis.trace_audit`` proves it has no jaxpr
@@ -125,6 +201,18 @@ class DittoPlan:
                     interpret=self.interpret, low_bits=self.low_bits,
                     fused=self.fused)
 
+    def fallback_plans(self) -> tuple:
+        """The resolved degradation ladder: one :class:`DittoPlan` per
+        ``fallbacks`` delta, in order. Rungs carry no recovery policy of
+        their own (``max_retries=0``, no further fallbacks) — the ladder
+        is walked by the scheduler, one rung per retry attempt, and must
+        not recurse. ``watchdog``/``reanchor_full_frac`` are inherited:
+        numerical health checks stay on while degraded."""
+        return tuple(
+            self.replace(**dict(delta), max_retries=0, retry_backoff_ms=0.0,
+                         fallbacks=())
+            for delta in self.fallbacks)
+
 
 #: Default plan for the bare eager engine path (`make_denoise_fn` with no
 #: plan): calibration/analysis runs, not the compiled serving fast path.
@@ -132,28 +220,6 @@ EAGER_PLAN = DittoPlan(compiled=False)
 
 
 # ----------------------------------------------------------- plan schedules
-#: Plan fields a schedule segment may override — exactly the kernel-lowering
-#: fields of :meth:`DittoPlan.cache_sig`. Loop-level fields (``steps``,
-#: ``sampler``, ``policy``, ``compiled``, ``max_batch``) shape the loop
-#: around the steps and must stay constant across a schedule. The tile
-#: classification threshold is not a knob: it is fixed by the packed-int4
-#: contract (``|delta| <= LOW_BIT_MAX`` so class-1 tiles pack losslessly).
-SEGMENT_FIELDS = ("block", "interpret", "collect_stats", "low_bits", "fused")
-
-
-def _canon_delta(delta) -> tuple:
-    """Delta -> canonical sorted ``((field, value), ...)`` tuple."""
-    if delta is None:
-        return ()
-    items = delta.items() if isinstance(delta, dict) else delta
-    try:
-        pairs = [(k, v) for k, v in items]
-    except (TypeError, ValueError):
-        raise ValueError(
-            f"segment delta must be a dict or (field, value) pairs, got {delta!r}")
-    return tuple(sorted(pairs))
-
-
 @dataclasses.dataclass(frozen=True)
 class PlanSchedule:
     """Frozen, hashable mapping of timestep ranges -> plan deltas.
@@ -256,6 +322,35 @@ class PlanSchedule:
         # engine-side oracle stats follow the base; the compiled per-segment
         # value comes from each segment plan
         return self.base.collect_stats
+
+    # Recovery policy is loop-level too: the ladder/watchdog govern the
+    # whole dispatch, not one segment, so they delegate to the base.
+    @property
+    def max_retries(self) -> int:
+        return self.base.max_retries
+
+    @property
+    def retry_backoff_ms(self) -> float:
+        return self.base.retry_backoff_ms
+
+    @property
+    def fallbacks(self) -> tuple:
+        return self.base.fallbacks
+
+    @property
+    def watchdog(self) -> bool:
+        return self.base.watchdog
+
+    @property
+    def reanchor_full_frac(self) -> float | None:
+        return self.base.reanchor_full_frac
+
+    def fallback_plans(self) -> tuple:
+        """The ladder for a scheduled dispatch: rungs degrade to CONSTANT
+        plans (the schedule's per-segment variation is abandoned once a
+        dispatch has already failed — simplicity beats optimality on the
+        failure path)."""
+        return self.base.fallback_plans()
 
     # ------------------------------------------------------------------ api
     def plan_for(self, step: int) -> DittoPlan:

@@ -16,14 +16,22 @@ for convenience):
   :class:`ServeScheduler` — continuous batching: coalesces queued ragged
       requests ACROSS submissions into full buckets per plan group
       (bit-identical per-request results; per-request plan overrides
-      share one cache), resolving :class:`Ticket` handles.
+      share one cache), resolving :class:`Ticket` handles;
+  :mod:`faults` — deterministic seeded fault injection driving the
+      recovery paths (degradation ladder, :class:`SchedulerDied`,
+      :class:`RequestShed` load shedding, the numerical re-anchor
+      watchdog) — see docs/architecture.md § fault model.
 
 See docs/architecture.md for the request lifecycle.
 """
 from ..core.ditto.plan import DittoPlan, PlanSchedule
+from . import faults
 from .bucketing import DEFAULT_MAX_BATCH, bucket_for, pad_batch
 from .cache import CompiledRunnerCache, RunnerKey, cfg_signature
-from .scheduler import ServeScheduler, Ticket
+from .faults import (Fault, FaultInjector, InjectedFault, NumericalFault,
+                     ResourceExhausted, chaos_schedule, inject)
+from .scheduler import (DispatchFailed, RequestShed, SchedulerDied,
+                        ServeScheduler, Ticket)
 from .session import ChunkResult, ServeResult, ServeSession
 
 __all__ = [
@@ -40,4 +48,15 @@ __all__ = [
     "Ticket",
     "DittoPlan",
     "PlanSchedule",
+    "faults",
+    "Fault",
+    "FaultInjector",
+    "InjectedFault",
+    "ResourceExhausted",
+    "NumericalFault",
+    "chaos_schedule",
+    "inject",
+    "SchedulerDied",
+    "DispatchFailed",
+    "RequestShed",
 ]

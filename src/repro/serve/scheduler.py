@@ -58,6 +58,19 @@ calling thread, which with an injected ``clock`` makes the time-based
 behavior deterministic under test — the background thread itself always
 waits on real time.
 
+Fault tolerance
+---------------
+
+Dispatch failures walk the plan's degradation ladder (``max_retries``
+re-dispatches with bounded backoff down ``fallbacks`` rungs — see
+``_serve_and_deliver``); batch-assembly failures are transactional
+(``_take_locked``); a dead dispatch thread fails every pending and
+future call with a typed :class:`SchedulerDied` instead of hanging
+(``_on_died``); and ``shed_expired=True`` rejects already-expired queued
+requests with :class:`RequestShed`. Every path is driven determinist-
+ically by ``repro.serve.faults`` probes and covered by the chaos suite
+(tests/test_faults.py). See docs/architecture.md § fault model.
+
 Completed tickets RETIRE: the scheduler keeps aggregate counters, not
 the tickets' device arrays (each resolved Ticket holds exactly its own
 sample until the client drops it). ``retain=True`` restores the full
@@ -81,9 +94,42 @@ import jax.numpy as jnp
 from ..core import diffusion
 from ..core.ditto import DittoEngine, make_denoise_fn
 from ..core.ditto.plan import UNSET, DittoPlan, PlanSchedule, is_unset, segment_view
+from . import faults
 from .bucketing import bucket_for
 from .cache import CompiledRunnerCache
 from .session import ServeResult, ServeSession
+
+#: Per-retry exponential backoff is capped here so a deep ladder cannot
+#: sleep a dispatch past any plausible SLO.
+BACKOFF_CAP_MS = 2000.0
+
+
+class SchedulerDied(RuntimeError):
+    """The background dispatch thread died; the scheduler cannot serve.
+
+    Every pending ``Ticket.result()`` raises this (the original thread
+    exception is the ``__cause__``), as does any later ``submit()``."""
+
+
+class DispatchFailed(RuntimeError):
+    """A dispatch failed after exhausting its retry/fallback ladder."""
+
+    def __init__(self, attempts: int, cause: BaseException):
+        super().__init__(
+            f"dispatch failed after {attempts} attempt(s): {cause!r}")
+        self.attempts = attempts
+        self.__cause__ = cause
+
+
+class RequestShed(RuntimeError):
+    """Deadline-aware load shedding rejected this request: its latency
+    budget expired before any dispatch covered it (``shed_expired=True``).
+    A typed rejection the client can retry — not a silent SLO blowout."""
+
+
+class _TakeFailed(RuntimeError):
+    """Internal: batch assembly failed; covered tickets are already
+    failed and the queue repaired — the dispatch loop just moves on."""
 
 
 class Ticket:
@@ -103,6 +149,7 @@ class Ticket:
         # compares against this, never against wall time directly
         self._deadline_t = (None if deadline_ms is None
                             else submit_t + deadline_ms / 1e3)
+        self.served_with = None  # plan of the successful dispatch (ladder rung)
         self._pieces: list[jax.Array] = []  # filled in row order by dispatches
         self._filled = 0
         self._sample: jax.Array | None = None
@@ -222,18 +269,19 @@ class ServeScheduler:
                  cache: CompiledRunnerCache | None = None, eager: bool = True,
                  async_mode: bool = False, dispatch_interval_ms: float = 10.0,
                  retain: bool = False, collect_done: bool = False,
+                 shed_expired: bool = False,
                  clock: Callable[[], float] = time.monotonic):
         self._init_runtime(
             ServeSession(params, cfg, sched,
                          plan if plan is not None else DittoPlan(), cache=cache),
             eager=eager, async_mode=async_mode,
             dispatch_interval_ms=dispatch_interval_ms, retain=retain,
-            collect_done=collect_done, clock=clock)
+            collect_done=collect_done, shed_expired=shed_expired, clock=clock)
 
     @classmethod
     def from_session(cls, session, *, eager: bool = True, async_mode: bool = False,
                      dispatch_interval_ms: float = 10.0, retain: bool = False,
-                     collect_done: bool = False,
+                     collect_done: bool = False, shed_expired: bool = False,
                      clock: Callable[[], float] = time.monotonic) -> "ServeScheduler":
         """Wrap an existing session-like object (anything with ``.plan``,
         ``.serve(x, labels, plan=)`` and ``.stats()``) — the hook tests
@@ -241,15 +289,17 @@ class ServeScheduler:
         s = cls.__new__(cls)
         s._init_runtime(session, eager=eager, async_mode=async_mode,
                         dispatch_interval_ms=dispatch_interval_ms,
-                        retain=retain, collect_done=collect_done, clock=clock)
+                        retain=retain, collect_done=collect_done,
+                        shed_expired=shed_expired, clock=clock)
         return s
 
     def _init_runtime(self, session, *, eager, async_mode, dispatch_interval_ms,
-                      retain, collect_done, clock):
+                      retain, collect_done, shed_expired, clock):
         self.session = session
         self.eager = eager
         self.async_mode = async_mode
         self.retain = retain
+        self.shed_expired = shed_expired  # reject expired queued requests
         self.dispatch_interval = dispatch_interval_ms / 1e3
         self._clock = clock
         self._cv = threading.Condition()  # guards everything below
@@ -268,6 +318,10 @@ class ServeScheduler:
         self._completed = 0
         self._failed = 0
         self._deadline_misses = 0
+        self._retries = 0
+        self._fallbacks = 0
+        self._shed = 0
+        self._died: BaseException | None = None
         self._triggers = {"full": 0, "deadline": 0, "demand": 0, "drain": 0}
         # retained record keeping — empty unless retain=True (retirement
         # keeps the live set bounded by the number of UNRESOLVED requests)
@@ -293,11 +347,20 @@ class ServeScheduler:
         land in one group; anything that can change the served rows
         (different loop, different lowering at any step) cannot.
         ``deadline_ms`` is deliberately absent: urgency is per-request
-        metadata, not behavior."""
+        metadata, not behavior. The recovery policy (retries, ladder,
+        watchdog) IS part of the key — it never changes a trace (gated by
+        the trace audit), but a dispatch recovers all covered tickets
+        under the group plan's policy, so requests with different ladders
+        must not share a dispatch."""
         segments = tuple((start, stop, p.cache_sig())
                          for start, stop, p in segment_view(plan))
+        recovery = (getattr(plan, "max_retries", 0),
+                    getattr(plan, "retry_backoff_ms", 0.0),
+                    tuple(getattr(plan, "fallbacks", ()) or ()),
+                    bool(getattr(plan, "watchdog", False)),
+                    getattr(plan, "reanchor_full_frac", None))
         return (plan.steps, plan.sampler, plan.policy, plan.compiled,
-                plan.max_batch, segments)
+                plan.max_batch, segments, recovery)
 
     def submit(self, x: jax.Array, labels=None,
                plan: DittoPlan | PlanSchedule | None = None, *,
@@ -320,6 +383,10 @@ class ServeScheduler:
         with self._cv:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            if self._died is not None:
+                raise SchedulerDied(
+                    "scheduler dispatch thread has died; no further "
+                    "requests can be served") from self._died
             key = (self._group_key(plan), labels is not None)
             group = self._groups.get(key)
             if group is None:
@@ -350,9 +417,9 @@ class ServeScheduler:
             if self.async_mode:
                 self._draining = True
                 self._cv.notify_all()
-                while not self._closed and (
+                while (not self._closed and self._died is None and (
                         self._inflight
-                        or any(g.queued_rows for g in self._groups.values())):
+                        or any(g.queued_rows for g in self._groups.values()))):
                     self._cv.wait()
                 self._draining = False
             else:
@@ -373,7 +440,10 @@ class ServeScheduler:
             if job is None:
                 return 0
             group, rows, trigger = job
-            batch = self._take_locked(group, rows)
+            try:
+                batch = self._take_locked(group, rows)
+            except _TakeFailed:
+                return rows  # covered tickets failed; the queue is repaired
             self._inflight += 1
         try:
             self._serve_and_deliver(group, batch, trigger)
@@ -383,9 +453,12 @@ class ServeScheduler:
                 self._cv.notify_all()
         return rows
 
-    def close(self, *, drain: bool = True) -> None:
+    def close(self, *, drain: bool = True, join_timeout_s: float = 5.0) -> None:
         """Stop the dispatch thread; ``drain=True`` (default) flushes the
-        queues first so no ticket is left unresolved."""
+        queues first so no ticket is left unresolved. A dispatch thread
+        that fails to join within ``join_timeout_s`` raises (the
+        scheduler still counts as closed) — a wedged thread holding the
+        device is an error the caller must see, not a silent leak."""
         if self._closed:
             return
         if drain:
@@ -393,9 +466,14 @@ class ServeScheduler:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout=5.0)
-            self._thread = None
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout=join_timeout_s)
+            if thread.is_alive():
+                raise RuntimeError(
+                    f"dispatch thread failed to join within "
+                    f"{join_timeout_s}s (stalled dispatch?); the scheduler "
+                    f"is closed but the thread may still hold the device")
 
     def __enter__(self) -> "ServeScheduler":
         return self
@@ -484,8 +562,17 @@ class ServeScheduler:
         """The dispatch policy: pick the next (group, rows, trigger) to
         serve, or None if nothing is due. Deadline-due partials preempt
         full buckets — a full bucket is never urgent (it loses no budget
-        by dispatching one policy round later), an expiring request is."""
+        by dispatching one policy round later), an expiring request is.
+        With ``shed_expired=True``, requests whose budget already expired
+        un-dispatched are rejected (typed :class:`RequestShed`) before
+        the deadline scan — serving them late helps nobody and steals
+        device time from requests that can still make their SLO."""
+        f = faults.fire("scheduler.policy")
+        if f is not None:
+            faults.perform(f)
         now = self._clock()
+        if self.shed_expired:
+            self._shed_locked(now)
         for group in self._groups.values():
             if any(p.ticket._deadline_t is not None
                    and p.ticket._deadline_t - now <= self.dispatch_interval
@@ -519,7 +606,36 @@ class ServeScheduler:
             return None
         return max(min(waits), 1e-4)  # floor avoids a zero-length spin
 
+    def _shed_locked(self, now: float) -> None:
+        """Reject every queued request whose budget has already expired
+        (none of its rows dispatched yet — a split request in flight is
+        served, not half-shed)."""
+        any_shed = False
+        for group in self._groups.values():
+            for p in [p for p in group.pending
+                      if p.used == 0 and p.ticket._deadline_t is not None
+                      and now > p.ticket._deadline_t]:
+                group.pending.remove(p)
+                self._shed += 1
+                self._failed += 1
+                p.ticket._fail(RequestShed(
+                    f"request {p.ticket.index} shed: deadline_ms="
+                    f"{p.ticket.deadline_ms} expired before dispatch"), now)
+                self._retire_locked(p.ticket)
+                any_shed = True
+        if any_shed:
+            self._cv.notify_all()
+
     def _dispatch_loop(self) -> None:
+        # Any escape from the loop body — a policy/take bug, an injected
+        # scheduler fault, OOM during concatenate — lands in _on_died so a
+        # dead thread fails fast instead of stranding result() callers.
+        try:
+            self._dispatch_loop_inner()
+        except BaseException as exc:  # noqa: BLE001 — death must be typed
+            self._on_died(exc)
+
+    def _dispatch_loop_inner(self) -> None:
         while True:
             with self._cv:
                 while True:
@@ -530,45 +646,135 @@ class ServeScheduler:
                         break
                     self._cv.wait(self._next_wakeup_locked())
                 group, rows, trigger = job
-                batch = self._take_locked(group, rows)
+                try:
+                    batch = self._take_locked(group, rows)
+                except _TakeFailed:
+                    continue  # tickets failed, queue repaired — move on
                 self._inflight += 1
             try:
+                fault = faults.fire("scheduler.dispatch")
+                if fault is not None:
+                    faults.perform(fault)
                 self._serve_and_deliver(group, batch, trigger)
             finally:
                 with self._cv:
                     self._inflight -= 1
                     self._cv.notify_all()
 
+    def _on_died(self, exc: BaseException) -> None:
+        """The dispatch thread is dead: fail every live ticket with a
+        typed :class:`SchedulerDied` (original exception chained) and
+        clear the queues so ``flush()`` waiters wake instead of hanging."""
+        now = self._clock()
+        with self._cv:
+            self._died = exc
+            err = SchedulerDied(
+                f"dispatch thread died: {exc!r}; all pending requests "
+                f"failed")
+            err.__cause__ = exc
+            for ticket in list(self._live.values()):
+                self._failed += 1
+                ticket._fail(err, now)
+                self._retire_locked(ticket)
+            self._groups.clear()
+            self._cv.notify_all()
+
     def _take_locked(self, group: _Group, rows: int):
         """Pop exactly ``rows`` queued rows of ``group`` (FIFO, splitting a
-        request across dispatches when needed)."""
-        xs, ls, segments = [], [], []
-        take = rows
+        request across dispatches when needed).
+
+        Assembly is transactional: rows are planned with pure index math
+        first, and only after slicing/concatenation succeed are the
+        pendings consumed. On failure (this used to be the silent-hang
+        site — an exception here killed the dispatch thread with the
+        tickets still queued) the covered tickets fail with the error,
+        leave the queue, and :class:`_TakeFailed` tells the caller to
+        continue."""
+        plan_items: list[tuple[_Pending, int]] = []
+        take, i = rows, 0
         while take:
-            p = group.pending[0]
+            p = group.pending[i]
             c = min(p.remaining, take)
-            xs.append(p.x[p.used:p.used + c])
-            if p.labels is not None:
-                ls.append(p.labels[p.used:p.used + c])
+            plan_items.append((p, c))
+            take -= c
+            i += 1
+        try:
+            fault = faults.fire("scheduler.take")
+            if fault is not None:
+                faults.perform(fault)
+            xs, ls = [], []
+            for p, c in plan_items:
+                xs.append(p.x[p.used:p.used + c])
+                if p.labels is not None:
+                    ls.append(p.labels[p.used:p.used + c])
+            x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
+            labels = None if not ls else (ls[0] if len(ls) == 1
+                                          else jnp.concatenate(ls, axis=0))
+        except BaseException as exc:
+            now = self._clock()
+            for p, _ in plan_items:
+                self._failed += 1
+                p.ticket._fail(exc, now)
+                self._retire_locked(p.ticket)
+                group.pending.remove(p)
+            self._cv.notify_all()
+            raise _TakeFailed(str(exc)) from exc
+        segments = []
+        for p, c in plan_items:
             segments.append((p.ticket, c))
             p.used += c
-            take -= c
-            if not p.remaining:
-                group.pending.popleft()
-        x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
-        labels = None if not ls else (ls[0] if len(ls) == 1
-                                      else jnp.concatenate(ls, axis=0))
+        while group.pending and not group.pending[0].remaining:
+            group.pending.popleft()
         return x, labels, segments
 
     def _serve_and_deliver(self, group: _Group, batch, trigger: str
                            ) -> ServeResult | None:
         """Serve one taken batch (OUTSIDE the lock — the policy keeps
         accepting submissions while the device runs) and deliver each
-        covered ticket its slice."""
+        covered ticket its slice.
+
+        A failed serve walks the plan's degradation ladder: up to
+        ``max_retries`` re-dispatches with bounded exponential backoff,
+        each retry running the next ``fallback_plans()`` rung (the last
+        rung repeats once the ladder is shorter than the retry budget).
+        Kernel-family rungs (fused→unfused→int8→eager) are bit-identical
+        by the exact-integer-math contract, so a recovered ticket's rows
+        match the fault-free ones bit for bit. Exhausting the ladder
+        fails the covered tickets with :class:`DispatchFailed` (single
+        no-retry attempts keep raising the original error)."""
         x, labels, segments = batch
-        try:
-            result = self.session.serve(x, labels, plan=group.plan)
-        except BaseException as exc:
+        plan = group.plan
+        ladder = (plan,) + tuple(plan.fallback_plans()
+                                 if hasattr(plan, "fallback_plans") else ())
+        attempts = 1 + getattr(plan, "max_retries", 0)
+        backoff_ms = getattr(plan, "retry_backoff_ms", 0.0)
+        result = None
+        used_plan = plan
+        last_exc: BaseException | None = None
+        ran = 0
+        for attempt in range(attempts):
+            used_plan = ladder[min(attempt, len(ladder) - 1)]
+            if attempt:
+                with self._cv:
+                    self._retries += 1
+                    if used_plan is not plan:
+                        self._fallbacks += 1
+                if backoff_ms:
+                    time.sleep(
+                        min(backoff_ms * 2 ** (attempt - 1), BACKOFF_CAP_MS)
+                        / 1e3)
+            ran = attempt + 1
+            try:
+                result = self.session.serve(x, labels, plan=used_plan)
+                break
+            except Exception as exc:
+                last_exc = exc
+            except BaseException as exc:
+                last_exc = exc  # never retry KeyboardInterrupt/SystemExit
+                break
+        if result is None:
+            exc = (last_exc if ran <= 1
+                   else DispatchFailed(ran, last_exc))
             now = self._clock()
             with self._cv:
                 self._failed += len(segments)
@@ -577,7 +783,7 @@ class ServeScheduler:
                     self._retire_locked(ticket)
                 self._cv.notify_all()
             if not self.async_mode:
-                raise  # sync callers get the error on their own stack
+                raise exc  # sync callers get the error on their own stack
             return None
         now = self._clock()
         with self._cv:
@@ -589,6 +795,7 @@ class ServeScheduler:
                 self.dispatches.append(result)
             off = 0
             for ticket, c in segments:
+                ticket.served_with = used_plan
                 # the slice materializes the ticket's own rows as a fresh
                 # device array — tickets never pin the padded dispatch
                 # sample (or its engines/records) past this block
@@ -647,4 +854,8 @@ class ServeScheduler:
                     "plan_groups": len(self._groups),
                     "triggers": dict(self._triggers),
                     "deadline_misses": self._deadline_misses,
+                    "retries": self._retries,
+                    "fallback_dispatches": self._fallbacks,
+                    "shed": self._shed,
+                    "died": self._died is not None,
                     **self.session.stats()}

@@ -33,6 +33,7 @@ import jax
 
 from ..core.ditto.plan import UNSET, DittoPlan, PlanSchedule, plan_from_kwargs
 from ..sim import harness
+from . import faults
 from .bucketing import bucket_for
 from .cache import CompiledRunnerCache
 
@@ -111,6 +112,7 @@ class ServeSession:
         self.cache = cache if cache is not None else CompiledRunnerCache()
         self.batches_served = 0
         self.requests_served = 0
+        self.watchdog_events = 0  # re-anchor steps across all served chunks
         # sessions are documented as shareable across request threads (one
         # shared cache); bare += on the counters would drop increments
         self._stats_lock = threading.Lock()
@@ -122,6 +124,9 @@ class ServeSession:
         size plus per-chunk records/engines for the design-point simulator.
         ``plan`` (a DittoPlan or PlanSchedule) overrides the session
         default for this request only (same shared runner cache)."""
+        fault = faults.fire("session.serve")
+        if fault is not None:
+            faults.perform(fault)
         plan = self.plan if plan is None else plan
         n = x.shape[0]
         chunks: list[ChunkResult] = []
@@ -132,9 +137,12 @@ class ServeSession:
             lc = None if labels is None else labels[lo:hi]
             chunks.append(self._serve_chunk(xc, lc, plan))
             samples.append(chunks[-1].sample)
+        events = sum(
+            len(getattr(c.engine, "watchdog_events", ()) or ()) for c in chunks)
         with self._stats_lock:
             self.batches_served += 1
             self.requests_served += n
+            self.watchdog_events += events
         sample = samples[0] if len(samples) == 1 else jax.numpy.concatenate(samples, axis=0)
         return ServeResult(sample=sample, chunks=chunks)
 
@@ -160,4 +168,5 @@ class ServeSession:
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
         return {"batches": self.batches_served, "requests": self.requests_served,
+                "watchdog_events": self.watchdog_events,
                 **self.cache.stats()}

@@ -1,0 +1,118 @@
+"""The bench regression gate (tools/check_bench.py): a PR cannot
+silently regress a tracked BENCH_serve.json metric.
+
+Covers the compare semantics (floors for speedups, ceilings for cost
+ratios, exactness for bit-identity/trace rows, missing-metric
+detection), the CLI exit codes, the --self-test proof that the gate can
+fail, and — against the committed repo files — that the gate passes,
+so CI's real check is green by construction.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import check_bench  # noqa: E402  (tools/ is not a package)
+
+BASELINE = {"metrics": {
+    "sec/sec/speedup": {"value": 4.0, "rel_tol": 0.25,
+                        "higher_is_better": True},
+    "sec/sec/cost": {"value": 0.8, "rel_tol": 0.05,
+                     "higher_is_better": False},
+    "sec/sec/overhead": {"value": 0.01, "abs_tol": 0.04,
+                         "higher_is_better": False},
+    "sec/sec/bit_identical": {"value": True, "exact": True},
+    "sec/sec/traces": {"value": 2, "exact": True},
+}}
+CLEAN = {"sec/sec/speedup": 4.0, "sec/sec/cost": 0.8, "sec/sec/overhead": 0.01,
+         "sec/sec/bit_identical": True, "sec/sec/traces": 2}
+
+
+def test_clean_and_improvements_pass():
+    assert check_bench.compare(CLEAN, BASELINE) == []
+    better = dict(CLEAN, **{"sec/sec/speedup": 9.0, "sec/sec/cost": 0.5,
+                            "sec/sec/overhead": -0.01})
+    assert check_bench.compare(better, BASELINE) == []
+
+
+@pytest.mark.parametrize("path,value,hint", [
+    ("sec/sec/speedup", 2.9, "below floor"),       # floor = 3.0
+    ("sec/sec/cost", 0.85, "above ceiling"),       # ceiling = 0.84
+    ("sec/sec/overhead", 0.06, "above ceiling"),   # ceiling = 0.05
+    ("sec/sec/bit_identical", False, "exact metric changed"),
+    ("sec/sec/traces", 3, "exact metric changed"),
+])
+def test_regressions_are_flagged(path, value, hint):
+    problems = check_bench.compare(dict(CLEAN, **{path: value}), BASELINE)
+    assert len(problems) == 1 and problems[0].startswith(path)
+    assert hint in problems[0]
+
+
+def test_within_tolerance_passes():
+    ok = dict(CLEAN, **{"sec/sec/speedup": 3.2, "sec/sec/cost": 0.83,
+                        "sec/sec/overhead": 0.04})
+    assert check_bench.compare(ok, BASELINE) == []
+
+
+def test_missing_metric_is_flagged():
+    gone = dict(CLEAN)
+    del gone["sec/sec/speedup"]
+    problems = check_bench.compare(gone, BASELINE)
+    assert len(problems) == 1 and "missing" in problems[0]
+
+
+def test_load_metrics_flattens_sections(tmp_path):
+    bench = tmp_path / "BENCH.json"
+    bench.write_text(json.dumps({
+        "_meta": {"sec": "2026-01-01T00:00:00"},
+        "sec": {"sec/a": {"us": 10, "derived": 1.5},
+                "sec/b": {"us": 0, "derived": True}},
+    }))
+    assert check_bench.load_metrics(str(bench)) == {
+        "sec/sec/a": 1.5, "sec/sec/b": True}
+
+
+def test_cli_exit_codes(tmp_path):
+    bench = tmp_path / "BENCH.json"
+    base = tmp_path / "baseline.json"
+    bench.write_text(json.dumps({"sec": {
+        "sec/speedup": {"us": 0, "derived": 4.0},
+        "sec/bit_identical": {"us": 0, "derived": True}}}))
+    base.write_text(json.dumps({"metrics": {
+        "sec/sec/speedup": {"value": 4.0, "rel_tol": 0.25,
+                            "higher_is_better": True},
+        "sec/sec/bit_identical": {"value": True, "exact": True}}}))
+    argv = ["--bench", str(bench), "--baseline", str(base)]
+    assert check_bench.main(argv) == 0
+    assert check_bench.main(argv + ["--self-test"]) == 0
+
+    bench.write_text(json.dumps({"sec": {
+        "sec/speedup": {"us": 0, "derived": 1.0},   # regressed
+        "sec/bit_identical": {"us": 0, "derived": True}}}))
+    assert check_bench.main(argv) == 1
+
+
+def test_self_test_catches_a_broken_gate():
+    """If compare() stopped detecting anything, --self-test must fail."""
+    real = check_bench.compare
+    try:
+        check_bench.compare = lambda *_: []
+        assert check_bench.self_test(CLEAN, BASELINE) != []
+    finally:
+        check_bench.compare = real
+
+
+def test_committed_bench_record_passes_gate():
+    """The repo's own BENCH_serve.json vs its committed baseline is clean
+    and the self-test proves the gate live — exactly what CI runs."""
+    for extra in ([], ["--self-test"]):
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+             *extra],
+            capture_output=True, text=True, timeout=60)
+        assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,235 @@
+#!/usr/bin/env python
+"""check_bench — regression gate over benchmarks/BENCH_serve.json.
+
+    python tools/check_bench.py [--bench PATH] [--baseline PATH]
+                                [--write-baseline] [--self-test] [-v]
+
+BENCH_serve.json tracks the serving-performance trajectory across PRs
+(one committed measurement per bench section). This gate pins the
+headline metrics against ``benchmarks/bench_baseline.json`` with
+per-metric tolerances so a PR cannot silently regress them:
+
+  * speed ratios (serve/scheduler/fused/latency speedups) may not drop
+    below baseline by more than their ``rel_tol``;
+  * cost ratios (BOPs, watchdog overhead) may not RISE past tolerance —
+    the watchdog row directly encodes the "<5% fault-free overhead"
+    acceptance bound;
+  * exact rows (bit-identity booleans, trace counts) may not change at
+    all — a flipped bit-identity bool or an extra trace is never noise.
+
+Improvements always pass (the baseline is a floor/ceiling, not a pin);
+re-run the benches and ``--write-baseline`` to ratchet it. ``--self-test``
+proves the gate can actually fail: it perturbs one tracked numeric past
+tolerance and flips one exact bool in-memory and asserts both are
+caught (CI runs it before the real check). Exit 1 on any problem.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BENCH = os.path.join(ROOT, "benchmarks", "BENCH_serve.json")
+DEFAULT_BASELINE = os.path.join(ROOT, "benchmarks", "bench_baseline.json")
+
+#: tracked metric -> tolerance policy, baked into the baseline file by
+#: --write-baseline so a plain check needs only the two JSONs.
+#:   higher_is_better + rel_tol : fail if cur < value * (1 - rel_tol)
+#:   lower_is_better  + rel_tol : fail if cur > value * (1 + rel_tol)
+#:   lower_is_better  + abs_tol : fail if cur > value + abs_tol
+#:   exact                      : fail if cur != value
+TRACKED: dict[str, dict] = {
+    # end-to-end serving speedups (wall-clock ratios; generous rel_tol —
+    # they are re-measured on dev boxes, not in CI)
+    "bench_serve/bench_serve/speedup_total": {
+        "higher_is_better": True, "rel_tol": 0.30},
+    "bench_scheduler/bench_scheduler/speedup_total": {
+        "higher_is_better": True, "rel_tol": 0.30},
+    "bench_fused/bench_fused/serve_speedup": {
+        "higher_is_better": True, "rel_tol": 0.20},
+    "bench_latency/bench_latency/p99_speedup_vs_sync": {
+        "higher_is_better": True, "rel_tol": 0.30},
+    # priced cost ratio (deterministic tile math, tight tolerance)
+    "bench_int4/bench_int4/bops_tile_over_act": {
+        "higher_is_better": False, "rel_tol": 0.05},
+    # watchdog fault-free overhead: the acceptance bound is absolute —
+    # baseline value + abs_tol must stay under 0.05 when ratcheting
+    "bench_faults/bench_faults/watchdog_overhead_frac": {
+        "higher_is_better": False, "abs_tol": 0.05},
+    # never-noise rows: trace counts and bit-identity witnesses
+    "bench_schedule/bench_schedule/schedule_traces": {"exact": True},
+    "bench_fused/bench_fused/serve_bit_identical": {"exact": True},
+    "bench_int4/bench_int4/bit_identical": {"exact": True},
+    "bench_schedule/bench_schedule/bit_identical": {"exact": True},
+    "bench_scheduler/bench_scheduler/bitidentical_samples": {"exact": True},
+    "bench_latency/bench_latency/bitidentical_samples": {"exact": True},
+    "bench_faults/bench_faults/watchdog_bitidentical": {"exact": True},
+    "bench_faults/bench_faults/ladder_bitidentical": {"exact": True},
+    "bench_faults/bench_faults/reanchor_recovered_finite": {"exact": True},
+}
+
+
+def load_metrics(path: str) -> dict:
+    """Flatten BENCH_serve.json ({section: {name: {us, derived}}}) to
+    {"section/name": derived}. Row names already carry their section
+    prefix, so tracked paths are double-prefixed by construction."""
+    with open(path) as f:
+        data = json.load(f)
+    out: dict = {}
+    for section, rows in data.items():
+        if section == "_meta" or not isinstance(rows, dict):
+            continue
+        for name, cell in rows.items():
+            out[f"{section}/{name}"] = cell.get("derived")
+    return out
+
+
+def make_baseline(metrics: dict) -> dict:
+    """Snapshot the TRACKED metrics (with their policies) from a flat
+    metrics dict. Every tracked metric must exist — a baseline with holes
+    would let the missing metric regress invisibly."""
+    missing = sorted(set(TRACKED) - set(metrics))
+    if missing:
+        raise SystemExit(
+            "check_bench: cannot write baseline, tracked metric(s) absent "
+            f"from the bench record: {', '.join(missing)} — run the "
+            "benchmarks that produce them first")
+    return {"metrics": {p: {"value": metrics[p], **TRACKED[p]}
+                        for p in sorted(TRACKED)}}
+
+
+def compare(metrics: dict, baseline: dict) -> list[str]:
+    """Return one problem string per violated bound (empty = gate passes)."""
+    problems = []
+    for path, spec in sorted(baseline.get("metrics", {}).items()):
+        base = spec["value"]
+        if path not in metrics:
+            problems.append(f"{path}: tracked metric missing from bench record "
+                            f"(baseline {base!r})")
+            continue
+        cur = metrics[path]
+        if spec.get("exact"):
+            if cur != base:
+                problems.append(f"{path}: exact metric changed "
+                                f"{base!r} -> {cur!r}")
+            continue
+        try:
+            cur_f, base_f = float(cur), float(base)
+        except (TypeError, ValueError):
+            problems.append(f"{path}: non-numeric value {cur!r} for a "
+                            f"tolerance-checked metric")
+            continue
+        if spec.get("higher_is_better"):
+            floor = base_f * (1.0 - spec["rel_tol"])
+            if cur_f < floor:
+                problems.append(f"{path}: {cur_f:g} below floor {floor:g} "
+                                f"(baseline {base_f:g}, rel_tol {spec['rel_tol']})")
+        else:
+            if "abs_tol" in spec:
+                ceil = base_f + spec["abs_tol"]
+                tol = f"abs_tol {spec['abs_tol']}"
+            else:
+                ceil = base_f * (1.0 + spec["rel_tol"])
+                tol = f"rel_tol {spec['rel_tol']}"
+            if cur_f > ceil:
+                problems.append(f"{path}: {cur_f:g} above ceiling {ceil:g} "
+                                f"(baseline {base_f:g}, {tol})")
+    return problems
+
+
+def self_test(metrics: dict, baseline: dict) -> list[str]:
+    """Prove the gate detects regressions: perturb one tracked numeric
+    past tolerance and flip one exact bool (in-memory), assert both are
+    flagged and that the unperturbed pair passes."""
+    failures = []
+    clean = compare(metrics, baseline)
+    if clean:
+        failures.append("self-test precondition failed — committed bench "
+                        "record vs baseline is not clean: " + "; ".join(clean))
+        return failures
+
+    specs = baseline["metrics"]
+    num = next((p for p, s in sorted(specs.items())
+                if not s.get("exact") and p in metrics), None)
+    flag = next((p for p, s in sorted(specs.items())
+                 if s.get("exact") and isinstance(specs[p]["value"], bool)
+                 and p in metrics), None)
+    if num is None or flag is None:
+        failures.append("self-test needs at least one numeric and one "
+                        "boolean tracked metric present")
+        return failures
+
+    bad = dict(metrics)
+    spec = specs[num]
+    v = float(specs[num]["value"])
+    delta = 2.0 * (spec["rel_tol"] * abs(v) if "rel_tol" in spec
+                   else spec["abs_tol"]) + 1e-9
+    bad[num] = v - delta if spec.get("higher_is_better") else v + delta
+    bad[flag] = not bad[flag]
+    caught = compare(bad, baseline)
+    if not any(p.startswith(num) for p in caught):
+        failures.append(f"self-test: perturbing {num} past tolerance was "
+                        f"NOT detected")
+    if not any(p.startswith(flag) for p in caught):
+        failures.append(f"self-test: flipping {flag} was NOT detected")
+
+    gone = dict(metrics)
+    gone.pop(num)
+    if not any(p.startswith(num) for p in compare(gone, baseline)):
+        failures.append(f"self-test: deleting {num} was NOT detected")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--bench", default=DEFAULT_BENCH, metavar="PATH",
+                    help="bench record JSON (default: %(default)s)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE, metavar="PATH",
+                    help="baseline JSON (default: %(default)s)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="snapshot the tracked metrics as the new baseline")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate detects a synthetic regression")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every tracked metric and its bound")
+    args = ap.parse_args(argv)
+
+    metrics = load_metrics(args.bench)
+    if args.write_baseline:
+        baseline = make_baseline(metrics)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"check_bench: wrote {len(baseline['metrics'])} tracked "
+              f"metric(s) to {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if args.self_test:
+        failures = self_test(metrics, baseline)
+        for line in failures:
+            print(f"check_bench: {line}", file=sys.stderr)
+        print("check_bench: self-test "
+              + ("FAILED" if failures else
+                 "ok — synthetic regressions are detected"))
+        return 1 if failures else 0
+
+    if args.verbose:
+        for path, spec in sorted(baseline.get("metrics", {}).items()):
+            print(f"  {path}: {metrics.get(path)!r} vs baseline "
+                  f"{spec['value']!r}")
+    problems = compare(metrics, baseline)
+    for line in problems:
+        print(f"check_bench: REGRESSION {line}", file=sys.stderr)
+    n = len(baseline.get("metrics", {}))
+    print(f"check_bench: {'FAILED' if problems else 'ok'} — "
+          f"{n - len(problems)}/{n} tracked metric(s) within tolerance")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -49,9 +49,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     say = print if args.verbose else (lambda *_: None)
 
-    from repro.analysis import (apply_baseline, check_kernels, check_repo_rules,
-                                check_trace_leaks, load_baseline, render_report,
-                                report_json, write_baseline)
+    from repro.analysis import (apply_baseline, check_kernels, check_plan_rules,
+                                check_repo_rules, check_trace_leaks,
+                                load_baseline, render_report, report_json,
+                                write_baseline)
 
     findings = []
     say("pass: kernel-contract (src/repro/kernels)")
@@ -60,6 +61,8 @@ def main(argv=None) -> int:
     findings += check_trace_leaks(ROOT)
     say("pass: repo rules (bench-registration, marker-audit)")
     findings += check_repo_rules(ROOT)
+    say("pass: plan rules (recovery knobs out of cache_sig/SEGMENT_FIELDS)")
+    findings += check_plan_rules(ROOT)
     if not args.ast_only:
         say("pass: trace-identity audit (abstract jaxprs — no kernel runs)")
         from repro.analysis.trace_audit import run_trace_audit

@@ -6,10 +6,11 @@
 The full tier-1 run stays `PYTHONPATH=src python -m pytest -x -q` (~8 min);
 this entry point sets PYTHONPATH itself, first runs the lints — the docs
 lint (tools/check_docs.py — fenced commands parse, referenced paths
-exist) and dittolint (tools/dittolint.py — kernel-contract AST rules plus
-the abstract trace-identity audit; no kernel executes) — and then
-deselects the long system/pipeline/model-equivalence tests for the
-inner dev loop. The kernel property suite (tests/test_kernel_properties.py:
+exist), dittolint (tools/dittolint.py — kernel-contract AST rules plus
+the abstract trace-identity audit; no kernel executes) and the bench
+regression gate (tools/check_bench.py — tracked BENCH_serve.json metrics
+vs the committed baseline) — and then deselects the long
+system/pipeline/model-equivalence tests for the inner dev loop. The kernel property suite (tests/test_kernel_properties.py:
 Encoding-Unit class boundaries, 128-pad invariance, int4 pack round-trip,
 int8/int4 branch equivalence) runs here too — only its exhaustive shape
 matrix is `slow`-marked and deferred to tier-1.
@@ -22,7 +23,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> int:
-    for lint in ("check_docs.py", "dittolint.py"):
+    for lint in ("check_docs.py", "dittolint.py", "check_bench.py"):
         rc = subprocess.call([sys.executable, os.path.join(ROOT, "tools", lint)],
                              cwd=ROOT)
         if rc != 0:
