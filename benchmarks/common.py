@@ -11,7 +11,7 @@ experiments/bench_models/) and measures the paper's quantities on them:
 
 Class statistics (value ranges, zero/low/full fractions, similarities) are
 measured at this reduced scale; cycle/energy economics are priced at
-paper-scale layer dimensions via sim.scale_records (DESIGN.md §8.2-3).
+paper-scale layer dimensions via sim.scale_records (see sim/cycles.py).
 """
 from __future__ import annotations
 

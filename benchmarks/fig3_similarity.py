@@ -1,7 +1,7 @@
 """Fig. 3 analogue: temporal vs spatial cosine similarity of activations.
 
 Paper: temporal >= 0.947 per model (avg 0.983); spatial ~ 0.31. Also adds
-the AR-decode counterexample backing DESIGN.md §Arch-applicability: the
+the AR-decode counterexample for arch-applicability (PAPER.md): the
 technique's precondition does NOT hold for token-by-token LM decode.
 """
 import sys

@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV. ``us_per_call`` is the simulated
 Ditto-hardware time where meaningful (0 otherwise); ``derived`` is the
 figure's headline metric. A final block prints the roofline summary from
-the dry-run artifacts (EXPERIMENTS.md §Roofline reads the same JSONs).
+the dry-run artifacts (tools/gen_roofline_md.py renders the same JSONs).
 """
 import os
 import sys
@@ -34,6 +34,7 @@ MODULES = [
     "bench_schedule",
     "bench_latency",
     "bench_faults",
+    "bench_mesh",
 ]
 
 

@@ -34,6 +34,17 @@ bit-identical to the synchronous path.
     PYTHONPATH=src python examples/serve_diffusion.py --int4-from 8  # int8 early, int4+fused late
     PYTHONPATH=src python examples/serve_diffusion.py --deadline-ms 2000 --warmup  # async SLO mode
     PYTHONPATH=src python examples/serve_diffusion.py --chaos 7       # seeded fault schedule
+    PYTHONPATH=src python examples/serve_diffusion.py --mesh 8        # 8-shard CPU mesh
+
+``--mesh N`` puts the same scheduler on a :class:`repro.serve.ServeMesh`
+of N single-device shards (forcing N host CPU devices before jax
+initializes): each shard runs its own dispatch queue and session, new
+request groups route to the least-loaded shard, and an idle shard steals
+due work from a busy sibling's queue. Samples stay bit-identical to
+single-device serving — a shard's identity is its data-parallel width
+and axis name (part of ``plan.cache_sig()``), never its concrete
+devices, so all shards share one runner cache and one trace set. CI runs
+this as the mesh smoke.
 
 ``--chaos SEED`` serves the queue under a seeded fault schedule
 (:func:`repro.serve.chaos_schedule` over the ``session.serve`` and
@@ -49,6 +60,17 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# --mesh N serves over N host devices, and jax locks the device count at
+# first init — so the flag must reach XLA_FLAGS before ANY jax import
+# (repro.serve.mesh.force_host_device_count does the same for libraries;
+# an example script peeks its own argv)
+if "--mesh" in sys.argv[1:]:
+    _n = int(sys.argv[sys.argv.index("--mesh") + 1])
+    if _n > 1 and "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n}").strip()
+
 import dataclasses
 
 import jax
@@ -59,8 +81,8 @@ from repro import configs
 from repro.core import diffusion
 from repro.data.synthetic import DataCfg, batch_for
 from repro.launch import steps as steps_mod
-from repro.serve import (DittoPlan, PlanSchedule, ServeScheduler, ServeSession,
-                         chaos_schedule, inject)
+from repro.serve import (DittoPlan, PlanSchedule, ServeMesh, ServeScheduler,
+                         ServeSession, chaos_schedule, inject)
 from repro.sim import harness
 
 
@@ -94,8 +116,13 @@ def serve_async(args, arch, dcfg, params, sched, plan, done, queue):
         print(f"[serve] chaos seed {args.chaos}: "
               + ", ".join(f"{f.kind}@{f.site}[{f.at}]"
                           for f in injector.faults))
+    mesh = ServeMesh(args.mesh, dp=1) if args.mesh else None
+    if mesh is not None:
+        print(f"[serve] mesh: {mesh.n_shards} shard(s) over "
+              f"{mesh.n_devices} device(s), dp={mesh.dp}, "
+              f"steal={'on' if mesh.steal else 'off'}")
     s = ServeScheduler(params, dcfg, sched, plan, async_mode=True,
-                       dispatch_interval_ms=25.0)
+                       dispatch_interval_ms=25.0, mesh=mesh)
     if args.warmup:
         w = s.warmup()
         print(f"[serve] warmup: {w['aot_compiled']} executable(s) AOT-compiled "
@@ -137,6 +164,10 @@ def serve_async(args, arch, dcfg, params, sched, plan, done, queue):
     print(f"[serve] runner cache: {st['runners']} compiled runner(s), "
           f"{st['traces']} trace(s), {st['hits']} hit(s), "
           f"{st['aot_hits']} AOT hit(s)")
+    if mesh is not None:
+        m = st["mesh"]
+        print(f"[serve] mesh: shard dispatches {m['shard_dispatches']}, "
+              f"{m['steals']} steal(s) ({m['stolen_rows']} row(s))")
 
 
 def main(argv=None):
@@ -169,6 +200,11 @@ def main(argv=None):
                     help="AOT-compile the whole bucket ladder before serving "
                          "(implies the async scheduler) so the first request "
                          "of each bucket skips trace AND compile")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="serve through a ServeMesh of N single-device CPU "
+                         "shards (implies the async scheduler): per-shard "
+                         "dispatch queues with cross-shard work stealing; "
+                         "forces N host devices via XLA_FLAGS when needed")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="serve under a seeded fault schedule (implies the "
                          "async scheduler) with the retry/fallback ladder "
@@ -179,6 +215,8 @@ def main(argv=None):
         ap.error(f"--int4-from must be inside (0, {args.steps})")
     if args.chaos is not None and args.int4_from is not None:
         ap.error("--chaos arms a constant recovery plan; drop --int4-from")
+    if args.mesh is not None and args.mesh < 1:
+        ap.error("--mesh needs at least 1 device")
 
     arch, dcfg, params = build_model()
     sched = diffusion.cosine_schedule(1000)
@@ -215,7 +253,8 @@ def main(argv=None):
                             fallbacks=(dict(fused=False),
                                        dict(fused=False, low_bits=8)),
                             watchdog=True, reanchor_full_frac=0.97)
-    if args.deadline_ms is not None or args.warmup or args.chaos is not None:
+    if (args.deadline_ms is not None or args.warmup or args.chaos is not None
+            or args.mesh is not None):
         return serve_async(args, arch, dcfg, params, sched, plan, done, queue)
     sess = ServeSession(params, dcfg, sched, plan)
     while queue:

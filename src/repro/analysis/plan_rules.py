@@ -11,6 +11,20 @@
     schedule disagree on recovery policy mid-dispatch. The abstract trace
     audit proves the same property dynamically (equal-sig probes); this
     rule pins it at the definition site with a pure AST read.
+
+    The mesh leg partitions the sharding knobs the same way, both ways:
+
+    * every ``MESH_SIG_FIELDS`` name (``mesh_devices``/``mesh_axis`` —
+      the layout a step's sharding constraint is traced with) MUST reach
+      ``cache_sig`` (directly or through ``mesh_sig()``) — dropping one
+      would let sharded and unsharded plans collide on a runner (a stale
+      trace); and none may be segment-schedulable or fallback-overridable
+      (a mid-loop or mid-recovery reshard would move the carried temporal
+      state off its submesh);
+    * every ``MESH_POLICY_FIELDS`` name (``serve.mesh.ServeMesh``'s
+      steal/queue knobs) must stay OUT of ``cache_sig`` and out of
+      ``MESH_SIG_FIELDS``/``SEGMENT_FIELDS`` — routing policy shapes how
+      work reaches a shard, never what a step lowers to.
 """
 from __future__ import annotations
 
@@ -22,6 +36,9 @@ from .findings import Finding
 
 #: the definition site every finding anchors to
 PLAN_REL = "src/repro/core/ditto/plan.py"
+
+#: where the scheduler-policy mesh knobs (MESH_POLICY_FIELDS) are defined
+MESH_REL = "src/repro/serve/mesh.py"
 
 
 def _tuple_assign(tree: ast.Module, name: str) -> tuple[set[str], int]:
@@ -93,4 +110,75 @@ def check_plan_rules(repo_root: str, plan_rel: str = PLAN_REL) -> list[Finding]:
             f"become trace identity, forking the runner cache per "
             f"retry/fallback/watchdog configuration with no lowering "
             f"difference to justify it", reads[name]))
+    findings += _check_mesh_partition(repo_root, plan_rel, tree, sig_fn,
+                                      reads, segment, s_line)
+    return findings
+
+
+def _check_mesh_partition(repo_root: str, plan_rel: str, tree: ast.Module,
+                          sig_fn: ast.FunctionDef, sig_reads: dict[str, int],
+                          segment: set[str], s_line: int) -> list[Finding]:
+    """The mesh leg of ``plan-sig-purity`` (see module docstring)."""
+    findings: list[Finding] = []
+    mesh_sig, m_line = _tuple_assign(tree, "MESH_SIG_FIELDS")
+    if not mesh_sig:
+        return [Finding(
+            "plan-sig-purity", plan_rel, "MESH_SIG_FIELDS",
+            f"{plan_rel} has no module-level MESH_SIG_FIELDS tuple — the "
+            f"mesh-signature contract has nothing to check against", 0)]
+
+    # cache_sig may read the fields through the mesh_sig() helper; follow
+    # that one hop so the rule checks what the sig actually contains
+    effective = dict(sig_reads)
+    helper = _method(tree, "DittoPlan", "mesh_sig")
+    if helper is not None and "mesh_sig" in sig_reads:
+        for name, line in _self_reads(helper).items():
+            effective.setdefault(name, line)
+    for name in sorted(mesh_sig - set(effective)):
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, f"cache_sig:!{name}",
+            f"mesh field '{name}' (MESH_SIG_FIELDS) never reaches "
+            f"DittoPlan.cache_sig — a sharded and an unsharded plan "
+            f"differing only there would collide on one runner and the "
+            f"second would silently replay the first's trace", m_line))
+    for name in sorted(mesh_sig & segment):
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, f"SEGMENT_FIELDS:{name}",
+            f"mesh field '{name}' is listed in SEGMENT_FIELDS — a schedule "
+            f"segment could reshard the denoise loop mid-sample, moving the "
+            f"carried temporal state off its submesh", s_line))
+    fallback, f_line = _tuple_assign(tree, "FALLBACK_FIELDS")
+    for name in sorted(mesh_sig & fallback):
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, f"FALLBACK_FIELDS:{name}",
+            f"mesh field '{name}' is fallback-overridable — a degradation "
+            f"rung could move a recovery dispatch onto a different mesh "
+            f"layout mid-ladder; rungs must inherit the shard's mesh",
+            f_line))
+
+    mesh_path = os.path.join(repo_root, MESH_REL)
+    if not os.path.exists(mesh_path):
+        return findings  # serve layer absent (partial checkouts): plan
+        # side of the partition is already proven above
+    policy, p_line = _tuple_assign(astutil.parse_module(mesh_path),
+                                   "MESH_POLICY_FIELDS")
+    if not policy:
+        findings.append(Finding(
+            "plan-sig-purity", MESH_REL, "MESH_POLICY_FIELDS",
+            f"{MESH_REL} has no module-level MESH_POLICY_FIELDS tuple — "
+            f"the steal/queue policy contract has nothing to check against",
+            0))
+    for name in sorted(policy & set(effective)):
+        findings.append(Finding(
+            "plan-sig-purity", plan_rel, f"cache_sig:{name}",
+            f"DittoPlan.cache_sig reads self.{name} — ServeMesh queue/steal "
+            f"policy would become trace identity, forking the runner cache "
+            f"per routing configuration with no lowering difference to "
+            f"justify it", effective[name]))
+    for name in sorted(policy & (mesh_sig | segment)):
+        findings.append(Finding(
+            "plan-sig-purity", MESH_REL, f"policy-vs-sig:{name}",
+            f"'{name}' appears in MESH_POLICY_FIELDS and in "
+            f"MESH_SIG_FIELDS/SEGMENT_FIELDS — one knob cannot be both "
+            f"routing policy and trace identity; pick a side", p_line))
     return findings

@@ -310,9 +310,14 @@ def default_recovery_matrix():
                               fallbacks=(dict(fused=False),))
     sched = PlanSchedule(serving.replace(steps=12),
                          [(0, 4, dict(fused=False, low_bits=8)), (4, 12, {})])
+    # a mesh-stamped ladder: rungs inherit the mesh fields via replace, so
+    # every recovery dispatch (and the watchdog re-anchor) stays on the
+    # shard's submesh — their mesh-sig'd rung sigs must be audited too
+    mesh_serving = serving.replace(mesh_devices=2)
     return [("serving-ladder", serving),
             ("stats-serving-ladder", stats_serving),
-            ("scheduled-ladder", sched)]
+            ("scheduled-ladder", sched),
+            ("mesh-serving-ladder", mesh_serving)]
 
 
 # ----------------------------------------------------------- default matrix
@@ -358,6 +363,21 @@ def default_plan_matrix():
         ("fused", base.replace(fused=True)),
         ("fused-low-bits-4", base.replace(fused=True, low_bits=4)),  # allowlisted vs fused
         ("block-256", base.replace(block=256)),
+        # mesh probes: the sharding constraint is traced over an ABSTRACT
+        # (axis: dp) mesh, so the mesh sig is provable on a 1-device host.
+        # Each mesh sig must select a distinct jaxpr from base AND from
+        # every other mesh width/axis; per-request metadata on a mesh plan
+        # must not (the equal-sig deadline probe).
+        ("mesh-dp2", base.replace(mesh_devices=2)),
+        ("mesh-dp2-deadline", base.replace(mesh_devices=2, deadline_ms=250.0)),
+        ("mesh-dp4", base.replace(mesh_devices=4)),
+        ("mesh-axis-x", base.replace(mesh_devices=2, mesh_axis="x")),
+        # the mesh flavors of the serving ladder's rung sigs (fused=False
+        # keeps low_bits=4; the no-retry rung keeps the fused sig) — the
+        # recovery audit requires them fingerprinted
+        ("mesh-dp2-low-bits-4", base.replace(mesh_devices=2, low_bits=4)),
+        ("mesh-dp2-fused-lb4", base.replace(mesh_devices=2, fused=True,
+                                            low_bits=4)),
     ]
 
 

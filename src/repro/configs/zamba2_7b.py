@@ -4,7 +4,7 @@
 + 3 trailing Mamba2 (13*6 + 3 = 81). The attention block's weights are
 shared across all 13 applications (Zamba-style). For the 500k-decode cell
 the shared attention uses a 4096-token sliding window (ring-buffer cache),
-keeping decode sub-quadratic and the cache bounded — see DESIGN.md §4.
+keeping decode sub-quadratic and the cache bounded.
 """
 from .base import ArchConfig
 

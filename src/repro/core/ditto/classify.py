@@ -8,7 +8,7 @@ Element classes over an int domain tensor:
 ``bitwidth_requirement`` is the paper's "minimum number of bits required to
 represent the value" (sign-magnitude, +1 sign bit, 0 for zero).
 
-Tile classification is the TPU adaptation (DESIGN.md §3): a (tq, tk) tile
+Tile classification is the TPU adaptation (PAPER.md): a (tq, tk) tile
 is zero iff all its elements are zero, low iff max|d| <= LOW_BIT_MAX.
 The threshold is imported from ``kernels.diff_encode`` so the host-side
 accounting and the on-device Encoding-Unit kernel can never disagree.

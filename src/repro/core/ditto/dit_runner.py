@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...distributed.sharding import constrain_batch
 from ...kernels.common import DEFAULT_LOW_BITS
 from ...nn import core as nncore
 from ...nn import dit as dit_mod
@@ -182,8 +183,16 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], plan: DittoPlan | N
         "core.ditto.make_step_fn", plan, block=block, interpret=interpret,
         collect_stats=collect_stats, low_bits=low_bits, fused=fused))
     modes = dict(modes)
+    # Sharded plans stamp their submesh into the trace: the batch axis of
+    # the latents (and of eps_hat) is constrained onto the plan's abstract
+    # (mesh_axis: mesh_devices) mesh, so two plans differing only in
+    # mesh_sig() lower to different jaxprs — which is exactly why
+    # MESH_SIG_FIELDS are cache_sig() fields. mesh_sig=None leaves the
+    # jaxpr untouched (bit-for-bit the pre-mesh trace).
+    msig = plan.mesh_sig()
 
     def step(dparams, mparams, state, latents, t, labels):
+        latents = constrain_batch(latents, msig)
         new_state: dict = {}
         aux: dict = {}
 
@@ -200,7 +209,7 @@ def make_step_fn(cfg: dit_mod.DiTCfg, modes: dict[str, str], plan: DittoPlan | N
             return y
 
         out = _dit_forward(mparams, cfg, lin, attn, latents, t, labels)
-        return out, new_state, aux
+        return constrain_batch(out, msig), new_state, aux
 
     return step
 

@@ -10,6 +10,8 @@ configuration in three groups:
 
   kernel   : ``block``, ``interpret``, ``low_bits``, ``fused`` — what the
              Pallas step lowers to (validated once, at construction);
+  mesh     : ``mesh_devices``, ``mesh_axis`` — the data-parallel submesh a
+             dispatch executes on (``None`` = unsharded single-device);
   sampling : ``steps``, ``sampler``, ``policy`` — the denoising loop and
              the engine's mode policy;
   serve    : ``compiled``, ``collect_stats``, ``max_batch``,
@@ -55,6 +57,19 @@ _POLICIES = ("act", "diff", "spatial", "defo", "defo+")
 #: contract (``|delta| <= LOW_BIT_MAX`` so class-1 tiles pack losslessly).
 SEGMENT_FIELDS = ("block", "interpret", "collect_stats", "low_bits", "fused")
 
+#: Mesh/sharding-signature fields. These select how a compiled step's batch
+#: axis is laid out across a ``jax.sharding.Mesh`` (a
+#: ``sharding_constraint`` over an abstract ``(mesh_axis: mesh_devices)``
+#: mesh is stamped into the traced step), so they ARE trace identity and
+#: every one of them must be read by :meth:`DittoPlan.cache_sig` — sharded
+#: and unsharded runners never collide in the runner cache. They are not
+#: segment-schedulable (a mid-loop mesh change would reshard the carried
+#: state) and not fallback-overridable (a degraded rung stays on its
+#: shard's submesh). ``analysis.plan_rules.check_plan_rules`` enforces the
+#: partition statically; steal/queue policy knobs live on
+#: ``serve.mesh.ServeMesh`` and are checked to stay OUT of the sig.
+MESH_SIG_FIELDS = ("mesh_devices", "mesh_axis")
+
 #: Plan fields a degradation-ladder fallback delta may override: the
 #: segment (kernel-lowering) fields plus ``compiled``, so the last rung can
 #: drop to the eager engine. Loop/queueing fields stay fixed — a fallback
@@ -93,6 +108,9 @@ class DittoPlan:
     interpret: bool | None = None  # None = auto-detect backend
     low_bits: int = DEFAULT_LOW_BITS  # 4 = packed-int4 low-tile branch
     fused: bool = False  # single-pass fused diff-step kernel
+    # --- mesh config: data-parallel layout of one dispatch ------------------
+    mesh_devices: int | None = None  # devices per dispatch submesh; None = unsharded
+    mesh_axis: str = "data"  # mesh axis name the batch dim shards over
     # --- sampling config: the denoising loop ------------------------------
     steps: int = 20
     sampler: str = "ddim"
@@ -133,6 +151,18 @@ class DittoPlan:
             raise ValueError(f"sampler must be one of {_SAMPLERS}, got {self.sampler!r}")
         if self.policy not in _POLICIES:
             raise ValueError(f"policy must be one of {_POLICIES}, got {self.policy!r}")
+        if self.mesh_devices is not None:
+            if self.mesh_devices < 1 or self.mesh_devices & (self.mesh_devices - 1):
+                # buckets are powers of two, so a pow2 submesh width divides
+                # every bucket >= itself — the batch axis always shards evenly
+                # (smaller buckets fall back to a replicated spec, same trace
+                # family, still mesh-signed)
+                raise ValueError(
+                    f"mesh_devices must be a power of two >= 1 (or None for "
+                    f"unsharded), got {self.mesh_devices}")
+        if not (isinstance(self.mesh_axis, str) and self.mesh_axis.isidentifier()):
+            raise ValueError(
+                f"mesh_axis must be an identifier string, got {self.mesh_axis!r}")
 
     def _validate_recovery(self) -> None:
         if self.max_retries < 0:
@@ -189,10 +219,23 @@ class DittoPlan:
         (``steps`` counts how often the step runs — the trace-identity
         audit in ``repro.analysis.trace_audit`` proves it has no jaxpr
         effect, and keeping it in the sig re-traced the whole denoiser
-        per step-count).
+        per step-count). The :data:`MESH_SIG_FIELDS` enter as the final
+        :meth:`mesh_sig` element — a sharded step carries a
+        ``sharding_constraint`` over its submesh in the jaxpr, so plans
+        differing only in mesh layout lower differently and must never
+        share a trace.
         """
         return (self.block, resolve_interpret(self.interpret), self.collect_stats,
-                self.low_bits, self.fused)
+                self.low_bits, self.fused, self.mesh_sig())
+
+    def mesh_sig(self) -> tuple | None:
+        """``(mesh_devices, mesh_axis)`` for a sharded plan, else ``None``.
+        This is the whole mesh identity a compiled step sees: concrete
+        device objects stay out (two shards of the same width replay one
+        trace; placement is a dispatch-time concern of ``serve.mesh``)."""
+        if self.mesh_devices is None:
+            return None
+        return (self.mesh_devices, self.mesh_axis)
 
     def kernel_blk(self) -> dict:
         """The kernel-config dict the ops wrappers accept (``bm/bn/bk``
@@ -322,6 +365,20 @@ class PlanSchedule:
         # engine-side oracle stats follow the base; the compiled per-segment
         # value comes from each segment plan
         return self.base.collect_stats
+
+    # Mesh layout is loop-level: segments may not reshard mid-loop (the
+    # carried state would need a cross-mesh transfer at every boundary), so
+    # every segment plan inherits the base's submesh.
+    @property
+    def mesh_devices(self) -> int | None:
+        return self.base.mesh_devices
+
+    @property
+    def mesh_axis(self) -> str:
+        return self.base.mesh_axis
+
+    def mesh_sig(self) -> tuple | None:
+        return self.base.mesh_sig()
 
     # Recovery policy is loop-level too: the ladder/watchdog govern the
     # whole dispatch, not one segment, so they delegate to the base.

@@ -5,10 +5,14 @@ feedback — each participant quantizes (grad + residual) to int8 with a
 per-leaf fp32 scale, psums the int8 payload (8x less ICI/DCN traffic on
 the wire), dequantizes, and carries the quantization error into the next
 step's residual. With error feedback the *accumulated* update converges to
-the exact all-reduce (property-tested in tests/test_collectives.py).
+the exact all-reduce (property-tested in tests/test_runtime.py).
 
-Used via shard_map over the data axes for explicit-DP training; the
-default GSPMD path keeps exact psums.
+Used via shard_map over a data axis when cross-device traffic must be
+compressed. The in-repo serving path never needs it: a
+:class:`repro.serve.mesh.ServeMesh` replicates params across shards and
+shards only the batch axis, so its collectives are the exact GSPMD
+psums; ``compressed_psum_grads`` is the opt-in bandwidth saver for
+explicit-DP updates outside that path.
 """
 from __future__ import annotations
 

@@ -13,9 +13,12 @@ stack — the PP memory win.
 
 This is a *library* facility with a correctness test
 (tests/test_pipeline.py): outputs are bit-comparable to the sequential
-layer stack. Wiring a full train step through it is a config choice left
-to the launcher (the dry-run's default multi-pod config keeps pod=DP,
-which EXPERIMENTS.md shows is collective-cheaper at these scales).
+layer stack. The in-repo serving path takes the other branch —
+:class:`repro.serve.mesh.ServeMesh` keeps every shard data-parallel
+(params replicated, batch axis sharded), which is collective-cheaper at
+serving batch sizes; ``pipeline_apply`` stays the opt-in layout for
+deployments whose per-device weight memory, not throughput, is the
+binding constraint.
 """
 from __future__ import annotations
 

@@ -21,10 +21,36 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import AbstractMesh, Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
 from ..nn import core
+
+
+def batch_sharding(mesh_sig: tuple, batch: int) -> NamedSharding:
+    """Batch-axis NamedSharding from a ``DittoPlan.mesh_sig()``.
+
+    Built over an :class:`AbstractMesh`, so it works at trace time with no
+    concrete devices — this is how a plan's mesh signature enters the
+    traced jaxpr (``repro.core.ditto.dit_runner`` stamps it as a
+    ``sharding_constraint``; the trace-identity audit reads it back
+    abstractly on a single-device host). A batch the submesh width does
+    not divide falls back to replication — same mesh, still mesh-signed,
+    just an unsplit layout (mirrors ``spec_for``'s divisibility pass).
+    """
+    ndev, axis = mesh_sig
+    amesh = AbstractMesh(((str(axis), int(ndev)),))
+    spec = P(axis) if batch % int(ndev) == 0 else P()
+    return NamedSharding(amesh, spec)
+
+
+def constrain_batch(x: jax.Array, mesh_sig: tuple | None) -> jax.Array:
+    """``with_sharding_constraint`` over :func:`batch_sharding` (no-op for
+    ``mesh_sig=None`` — unsharded plans keep an untouched jaxpr)."""
+    if mesh_sig is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, batch_sharding(mesh_sig, x.shape[0]))
 
 
 def make_rules(arch: ArchConfig, *, multi_pod: bool = False) -> dict[str, Any]:

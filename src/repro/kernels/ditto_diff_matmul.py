@@ -2,7 +2,7 @@
 
     y_t = y_prev + (x_t - x_prev) @ W        (all-int32 exact)
 
-TPU adaptation of the paper's zero-skipping adder-tree PE (DESIGN.md §3):
+TPU adaptation of the paper's zero-skipping adder-tree PE (PAPER.md):
 the grid runs over (M/bm, N/bn, K/bk); for each (i, kk) the per-tile class
 from ``diff_encode`` gates the MXU contribution with ``@pl.when`` — a
 zero-class tile issues NO dot (its Δ is all-zero, so skipping is exact).

@@ -5,7 +5,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # meshes out of host placeholder devices; smoke tests/benches see 1 device.
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
-cell and record memory/cost/collective analyses for EXPERIMENTS.md.
+cell and record memory/cost/collective analyses for the roofline
+report (tools/gen_roofline_md.py renders them).
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]

@@ -20,7 +20,13 @@ for convenience):
   :mod:`faults` — deterministic seeded fault injection driving the
       recovery paths (degradation ladder, :class:`SchedulerDied`,
       :class:`RequestShed` load shedding, the numerical re-anchor
-      watchdog) — see docs/architecture.md § fault model.
+      watchdog) — see docs/architecture.md § fault model;
+  :class:`ServeMesh` — the serving stack on a ``jax.sharding.Mesh``:
+      host devices carved into per-shard dispatch submeshes, the mesh
+      signature ``(dp, axis)`` part of every stamped plan's
+      ``cache_sig()`` (sharded and unsharded runners never collide; all
+      shards share every trace), cross-shard work stealing in the
+      scheduler — see docs/architecture.md § mesh.
 
 See docs/architecture.md for the request lifecycle.
 """
@@ -30,6 +36,7 @@ from .bucketing import DEFAULT_MAX_BATCH, bucket_for, pad_batch
 from .cache import CompiledRunnerCache, RunnerKey, cfg_signature
 from .faults import (Fault, FaultInjector, InjectedFault, NumericalFault,
                      ResourceExhausted, chaos_schedule, inject)
+from .mesh import ServeMesh, force_host_device_count
 from .scheduler import (DispatchFailed, RequestShed, SchedulerDied,
                         ServeScheduler, Ticket)
 from .session import ChunkResult, ServeResult, ServeSession
@@ -59,4 +66,6 @@ __all__ = [
     "SchedulerDied",
     "DispatchFailed",
     "RequestShed",
+    "ServeMesh",
+    "force_host_device_count",
 ]

@@ -14,12 +14,16 @@ wrapped step per
 
 ``plan.cache_sig()`` is the ordered tuple of exactly the
 :class:`~repro.core.ditto.DittoPlan` fields that select a distinct XLA
-lowering — ``(block, interpret, collect_stats, low_bits, fused)`` — so a
-plan IS a trace identity: serve configs that lower different kernel
-bodies (``low_bits=4`` packed-int4, ``fused=True`` single-pass
-DMA-skipping) can never share a trace, while plans differing only in
-loop-level fields (``steps``/``sampler``/``policy``/``max_batch``)
-always do.
+lowering — ``(block, interpret, collect_stats, low_bits, fused,
+mesh_sig)`` — so a plan IS a trace identity: serve configs that lower
+different kernel bodies (``low_bits=4`` packed-int4, ``fused=True``
+single-pass DMA-skipping) or different mesh layouts (``mesh_sig`` stamps
+a batch-axis ``sharding_constraint`` into the step) can never share a
+trace, while plans differing only in loop-level fields
+(``steps``/``sampler``/``policy``/``max_batch``) always do — and all
+shards of one :class:`~repro.serve.mesh.ServeMesh` DO share every trace,
+because a shard's identity is its width and axis name, never its
+concrete devices.
 
 The key is shared by every subsequent batch that maps to it (and shapes —
 which the batch bucket pins). The cache counts actual Python traces via a
@@ -44,17 +48,46 @@ from ..core.ditto.plan import (UNSET, DittoPlan, is_unset, plan_from_kwargs,
                                segment_resolved, segment_view)
 
 
-def _args_fingerprint(args) -> tuple:
-    """Shape/dtype/treedef identity of one step-call argument tuple.
+def _leaf_placement(leaf):
+    """Normalized device placement of one leaf, for the AOT fingerprint.
 
-    An AOT-compiled executable accepts exactly the avals it was lowered
-    for; the runner dispatches to it only when the live call's fingerprint
-    matches the warmed one, falling back to the plain jitted path (which
-    traces/compiles for the new shapes) otherwise."""
+    An AOT executable is pinned to concrete devices; calling it with
+    arguments committed elsewhere (a non-zero mesh shard, a multi-device
+    submesh) is an error, so placement must be part of the dispatch
+    fingerprint. Residence on the default device alone normalizes to
+    ``None`` — the same value an abstract warmup struct (no sharding)
+    fingerprints to — so the pre-mesh solo path and shard 0 of a
+    ``dp=1`` mesh both hit the warmed executable, while sibling shards
+    fall back to the jitted path (shared trace, per-shard compile)."""
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is None:
+        return None
+    ids = tuple(sorted(d.id for d in sharding.device_set))
+    if ids == _DEFAULT_DEVICE_ID():
+        return None
+    return ids
+
+
+def _DEFAULT_DEVICE_ID(_box=[]):
+    if not _box:
+        _box.append((jax.devices()[0].id,))
+    return _box[0]
+
+
+def _args_fingerprint(args) -> tuple:
+    """Shape/dtype/treedef/placement identity of one step-call argument
+    tuple.
+
+    An AOT-compiled executable accepts exactly the avals (and devices) it
+    was lowered for; the runner dispatches to it only when the live
+    call's fingerprint matches the warmed one, falling back to the plain
+    jitted path (which traces/compiles for the new shapes or placement)
+    otherwise."""
     leaves, treedef = jax.tree_util.tree_flatten(args)
     return (str(treedef),
             tuple((tuple(l.shape), jax.numpy.dtype(l.dtype).name,
-                   bool(getattr(l, "weak_type", False))) for l in leaves))
+                   bool(getattr(l, "weak_type", False)), _leaf_placement(l))
+                  for l in leaves))
 
 
 class _AttributionFrame:
@@ -131,6 +164,11 @@ class RunnerKey:
     @property
     def fused(self) -> bool:
         return self.plan_sig[4]
+
+    @property
+    def mesh(self) -> tuple | None:
+        """``(mesh_devices, mesh_axis)`` for a sharded runner, else None."""
+        return self.plan_sig[5]
 
 
 class CompiledRunnerCache:

@@ -1,0 +1,200 @@
+"""ServeMesh: the serving stack on a ``jax.sharding.Mesh``.
+
+The scheduler dispatches one bucket at a time; this module supplies the
+device layer under it. A :class:`ServeMesh` carves ``n_devices`` host
+devices into ``n_shards = n_devices // dp`` *shards* — each shard is a
+1-axis submesh of ``dp`` devices over ``axis`` — and hands the mesh-aware
+:class:`~repro.serve.scheduler.ServeScheduler` one dispatch lane per
+shard (per-shard queues, cross-shard work stealing; see
+docs/architecture.md § mesh).
+
+Identity vs placement is the load-bearing split:
+
+  * ``(dp, axis)`` — :meth:`ServeMesh.signature` — is TRACE IDENTITY. It
+    is stamped onto every dispatched plan (``DittoPlan.mesh_devices`` /
+    ``mesh_axis``, the ``MESH_SIG_FIELDS``), enters ``cache_sig()``, and
+    appears in the traced jaxpr as a ``sharding_constraint`` over an
+    abstract ``(axis: dp)`` mesh — so sharded and unsharded runners can
+    never collide in the :class:`CompiledRunnerCache`, and all shards of
+    one mesh *share* every trace (their submeshes are sig-equal).
+  * WHICH concrete devices a shard owns is a placement concern: inputs
+    are ``device_put`` onto the shard's :meth:`sharding` at dispatch
+    time, never baked into a trace.
+
+Steal/queue policy knobs (:data:`MESH_POLICY_FIELDS`) shape how work
+reaches a shard, not what a step lowers to — ``analysis.plan_rules``
+statically checks they stay OUT of ``cache_sig()``.
+
+Everything here is testable without hardware: force N host CPU devices
+with ``--xla_force_host_platform_device_count=N`` (set in ``XLA_FLAGS``
+before jax initializes; :func:`force_host_device_count` below, the
+bayespec ``set_cpu_cores`` idiom).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.ditto.plan import DittoPlan, PlanSchedule
+from ..distributed.sharding import batch_sharding  # noqa: F401  (re-export)
+
+DEFAULT_AXIS = "data"
+
+#: ServeMesh queue/steal policy knobs. None of these changes what a
+#: compiled step lowers to, so none may ever appear in
+#: ``DittoPlan.cache_sig()`` (or in ``MESH_SIG_FIELDS``) — two meshes
+#: differing only in steal policy replay the same traces.
+#: ``analysis.plan_rules.check_plan_rules`` reads this tuple and enforces
+#: the partition statically (the mesh leg of ``plan-sig-purity``).
+MESH_POLICY_FIELDS = ("steal", "steal_min_rows")
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> bool:
+    """Ask XLA for ``n`` host CPU devices (``XLA_FLAGS``), best-effort.
+
+    Must run before jax initializes its backends — returns False (and
+    changes nothing) when jax is already initialized or the flag is
+    already set; subprocess-based callers (benches, the mesh tests, the
+    ``--mesh`` example flag) set it first thing in the child process.
+    """
+    if _HOST_COUNT_FLAG in os.environ.get("XLA_FLAGS", ""):
+        return False
+    if jax._src.xla_bridge._backends:  # backends already materialized
+        return False
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_HOST_COUNT_FLAG}={int(n)}"
+    ).strip()
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMesh:
+    """``n_devices`` host devices carved into ``n_devices // dp`` shards.
+
+    ``dp`` is the data-parallel width of ONE dispatch: each shard is a
+    ``(axis: dp)`` submesh, and a bucket dispatched to it has its batch
+    axis sharded across those ``dp`` devices. ``dp=1`` (the default)
+    means shard-level parallelism only — 8 devices serve 8 concurrent
+    single-device dispatch lanes; ``dp=n_devices`` means one lane whose
+    every dispatch spans the whole mesh.
+
+    ``steal``/``steal_min_rows`` are scheduler policy: an idle shard may
+    steal queued rows from the hottest sibling once that sibling holds at
+    least ``steal_min_rows`` (see the scheduler's ``_steal_locked``).
+    """
+
+    n_devices: int
+    dp: int = 1
+    axis: str = DEFAULT_AXIS
+    steal: bool = True
+    steal_min_rows: int = 1
+    devices: tuple = ()  # concrete jax devices; () = jax.devices()[:n_devices]
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {self.n_devices}")
+        if self.dp < 1 or self.dp & (self.dp - 1):
+            # plan validation requires a pow2 mesh_devices; the stamped
+            # plans inherit dp verbatim, so reject the mismatch here
+            raise ValueError(f"dp must be a power of two >= 1, got {self.dp}")
+        if self.n_devices % self.dp:
+            raise ValueError(
+                f"n_devices={self.n_devices} must be a multiple of the "
+                f"per-shard width dp={self.dp}")
+        if not (isinstance(self.axis, str) and self.axis.isidentifier()):
+            raise ValueError(f"axis must be an identifier string, got {self.axis!r}")
+        if self.steal_min_rows < 1:
+            raise ValueError(
+                f"steal_min_rows must be >= 1, got {self.steal_min_rows}")
+        devices = tuple(self.devices) or tuple(jax.devices()[: self.n_devices])
+        if len(devices) < self.n_devices:
+            raise ValueError(
+                f"ServeMesh needs {self.n_devices} devices but only "
+                f"{len(devices)} are visible; on CPU force host devices with "
+                f"XLA_FLAGS={_HOST_COUNT_FLAG}={self.n_devices} (before jax "
+                f"initializes)")
+        object.__setattr__(self, "devices", devices)
+
+    # ------------------------------------------------------------- identity
+    @property
+    def n_shards(self) -> int:
+        return self.n_devices // self.dp
+
+    def signature(self) -> tuple:
+        """``(dp, axis)`` — the plan-visible mesh identity. Every shard of
+        this mesh shares it (and therefore every trace); concrete device
+        ids stay out by design."""
+        return (self.dp, self.axis)
+
+    def plan_for(self, plan: DittoPlan | PlanSchedule):
+        """``plan`` stamped with this mesh's signature (schedules stamp
+        their base — segments inherit; a mid-loop reshard is invalid)."""
+        if isinstance(plan, PlanSchedule):
+            return plan.replace(base=self.plan_for(plan.base))
+        return plan.replace(mesh_devices=self.dp, mesh_axis=self.axis)
+
+    # ------------------------------------------------------------ placement
+    def shard_mesh(self, shard: int) -> Mesh:
+        """The concrete ``(axis: dp)`` submesh of shard ``shard``."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard must be in [0, {self.n_shards}), got {shard}")
+        devs = np.asarray(self.devices[shard * self.dp:(shard + 1) * self.dp])
+        return Mesh(devs, (self.axis,))
+
+    def sharding(self, shard: int, batch: int) -> NamedSharding:
+        """Dispatch placement: the batch axis split across shard ``shard``
+        (replicated when ``dp`` does not divide ``batch`` — mirrors the
+        trace-side ``batch_sharding`` fallback, so placement and the
+        traced constraint always agree)."""
+        spec = P(self.axis) if batch % self.dp == 0 else P()
+        return NamedSharding(self.shard_mesh(shard), spec)
+
+    def replicated(self, shard: int) -> NamedSharding:
+        """Per-shard replicated placement (params, labels scalars...)."""
+        return NamedSharding(self.shard_mesh(shard), P())
+
+
+def resolve_mesh(plan: DittoPlan | PlanSchedule, mesh: Mesh | None = None) -> Mesh | None:
+    """The concrete mesh a plan's dispatch should be placed on.
+
+    Unsharded plan -> None (placement untouched). Sharded plan -> the
+    given ``mesh`` when it matches the plan's ``mesh_sig()``, else a
+    default mesh over the first ``mesh_devices`` host devices. A session
+    serving shard k passes its shard submesh; bare sessions pass None and
+    get the default.
+    """
+    sig = plan.mesh_sig()
+    if sig is None:
+        return None
+    ndev, axis = sig
+    if (mesh is not None and mesh.axis_names == (axis,)
+            and mesh.devices.size == ndev):
+        return mesh
+    have = jax.devices()
+    if len(have) < ndev:
+        raise ValueError(
+            f"plan wants a {ndev}-device '{axis}' submesh but only "
+            f"{len(have)} devices are visible; on CPU force host devices "
+            f"with XLA_FLAGS={_HOST_COUNT_FLAG}={ndev}")
+    return Mesh(np.asarray(have[:ndev]), (axis,))
+
+
+def place_dispatch(x, labels, mesh: Mesh | None, axis: str):
+    """Commit one padded dispatch onto its shard submesh: batch axis split
+    over ``axis`` (replicated on non-divisible buckets), labels alongside.
+    ``mesh=None`` is the unsharded path — inputs pass through untouched,
+    keeping pre-mesh serving byte-for-byte unchanged."""
+    if mesh is None:
+        return x, labels
+    ndev = mesh.devices.size
+    spec = P(axis) if x.shape[0] % ndev == 0 else P()
+    x = jax.device_put(x, NamedSharding(mesh, spec))
+    if labels is not None:
+        labels = jax.device_put(labels, NamedSharding(mesh, spec))
+    return x, labels

@@ -78,6 +78,27 @@ sample until the client drops it). ``retain=True`` restores the full
 keeping for benches and tests that introspect dispatch composition —
 with the documented cost that every ServeResult (engines, records,
 padded samples) stays live for the scheduler's lifetime.
+
+Mesh mode
+---------
+
+``mesh`` (a :class:`repro.serve.mesh.ServeMesh`) puts the scheduler on a
+device mesh: one :class:`ServeSession` per shard (all sharing ONE runner
+cache — shard submeshes are sig-equal, so they share every trace), every
+submitted plan stamped with the mesh signature (``mesh_devices`` /
+``mesh_axis`` enter ``cache_sig()``, so mesh groups can never coalesce
+with unsharded ones), and per-shard dispatch: each group is routed to
+the least-loaded shard at creation, and in async mode each shard runs
+its own dispatch thread over its own queues. When a shard's queue runs
+hot — due work (a full bucket, a nearing deadline, a demanded or drained
+tail) the owner is too busy to take — an idle sibling STEALS it: the
+thief runs the same dispatch policy over sibling queues (gated by
+``mesh.steal`` / ``mesh.steal_min_rows``) and serves the batch on its
+own shard, bit-identically (per-sample calibration makes the serving
+device invisible in the rows). Deadline, shedding, and ladder-recovery
+semantics are per dispatch and therefore preserved per shard; a fault
+injected on one shard walks that dispatch's ladder without touching
+siblings. See docs/architecture.md § mesh.
 """
 from __future__ import annotations
 
@@ -177,15 +198,33 @@ class Ticket:
 
     # ------------------------------------------------------------- internal
     # all mutation happens under the scheduler's condition lock
-    def _deliver(self, rows: jax.Array, result: ServeResult | None) -> None:
-        self._pieces.append(rows)
+    def _deliver(self, dst: int, rows: jax.Array,
+                 result: ServeResult | None) -> None:
+        # dst = this piece's row offset within the request, captured at
+        # take time: split pieces may be SERVED on different shard
+        # threads and complete out of order, so append order is not row
+        # order — _finish reassembles by offset
+        self._pieces.append((dst, rows))
         self._filled += rows.shape[0]
         if result is not None:
             self.results.append(result)
 
     def _finish(self, now: float) -> None:
-        self._sample = (self._pieces[0] if len(self._pieces) == 1
-                        else jnp.concatenate(self._pieces, axis=0))
+        pieces = [rows for _, rows in sorted(self._pieces,
+                                             key=lambda p: p[0])]
+        if len(pieces) > 1:
+            # a request split across dispatches may have been served on
+            # different shards (steal / bucket split); concatenate needs
+            # the pieces co-located, so pull stragglers onto piece 0's
+            # device — placement only, the row values are untouched
+            devs: set[Any] = set()
+            for p in pieces:
+                devs.update(getattr(p, "devices", set)())
+            if len(devs) > 1:
+                dev = next(iter(pieces[0].devices()))
+                pieces = [jax.device_put(p, dev) for p in pieces]
+        self._sample = pieces[0] if len(pieces) == 1 else jnp.concatenate(
+            pieces, axis=0)
         self._pieces = []  # drop the dispatch-sliced intermediates
         self.done_t = now
         self._event.set()
@@ -213,10 +252,14 @@ class _Group:
     """FIFO queue of pending requests sharing one behavioral group key.
     ``plan`` is the first-seen normalized plan/schedule of the group —
     every member is behaviorally identical to it (same loop, same
-    per-step sigs), so dispatching all members under it is exact."""
+    per-step sigs), so dispatching all members under it is exact.
+    ``shard`` is the mesh shard whose queue owns the group (0 — the only
+    session — in solo mode); a sibling shard may still steal its due
+    work."""
 
-    def __init__(self, plan: DittoPlan | PlanSchedule):
+    def __init__(self, plan: DittoPlan | PlanSchedule, shard: int = 0):
         self.plan = plan
+        self.shard = shard
         self.pending: deque[_Pending] = deque()
 
     @property
@@ -266,14 +309,28 @@ class ServeScheduler:
     """
 
     def __init__(self, params, cfg, sched, plan: DittoPlan | PlanSchedule | None = None, *,
-                 cache: CompiledRunnerCache | None = None, eager: bool = True,
-                 async_mode: bool = False, dispatch_interval_ms: float = 10.0,
+                 cache: CompiledRunnerCache | None = None, mesh=None,
+                 eager: bool = True, async_mode: bool = False,
+                 dispatch_interval_ms: float = 10.0,
                  retain: bool = False, collect_done: bool = False,
                  shed_expired: bool = False,
                  clock: Callable[[], float] = time.monotonic):
+        plan = plan if plan is not None else DittoPlan()
+        sessions = None
+        if mesh is not None:
+            # one session per shard, one shared cache: shard submeshes are
+            # sig-equal, so every trace is shared; each session commits the
+            # params onto its own shard submesh once
+            cache = cache if cache is not None else CompiledRunnerCache()
+            plan = mesh.plan_for(plan)
+            sessions = [ServeSession(params, cfg, sched, plan, cache=cache,
+                                     mesh=mesh.shard_mesh(k))
+                        for k in range(mesh.n_shards)]
+            session = sessions[0]
+        else:
+            session = ServeSession(params, cfg, sched, plan, cache=cache)
         self._init_runtime(
-            ServeSession(params, cfg, sched,
-                         plan if plan is not None else DittoPlan(), cache=cache),
+            session, mesh=mesh, sessions=sessions,
             eager=eager, async_mode=async_mode,
             dispatch_interval_ms=dispatch_interval_ms, retain=retain,
             collect_done=collect_done, shed_expired=shed_expired, clock=clock)
@@ -294,8 +351,14 @@ class ServeScheduler:
         return s
 
     def _init_runtime(self, session, *, eager, async_mode, dispatch_interval_ms,
-                      retain, collect_done, shed_expired, clock):
+                      retain, collect_done, shed_expired, clock,
+                      mesh=None, sessions=None):
         self.session = session
+        self.mesh = mesh
+        # per-shard sessions (mesh mode); solo mode serves everything on
+        # self.session, which is also sessions[0] in mesh mode
+        self._sessions = sessions if sessions is not None else [session]
+        self._n_shards = mesh.n_shards if mesh is not None else 1
         self.eager = eager
         self.async_mode = async_mode
         self.retain = retain
@@ -322,19 +385,33 @@ class ServeScheduler:
         self._fallbacks = 0
         self._shed = 0
         self._died: BaseException | None = None
-        self._triggers = {"full": 0, "deadline": 0, "demand": 0, "drain": 0}
+        self._triggers = {"full": 0, "deadline": 0, "demand": 0, "drain": 0,
+                          "steal": 0}
+        # mesh accounting: dispatches/rows per serving shard, steal events
+        self._shard_dispatches = [0] * self._n_shards
+        self._shard_rows = [0] * self._n_shards
+        self._shard_inflight = [0] * self._n_shards  # steal gate: owner busy?
+        self._steals = 0
+        self._stolen_rows = 0
+        self._rr = 0  # round-robin tiebreak for group routing
         # retained record keeping — empty unless retain=True (retirement
         # keeps the live set bounded by the number of UNRESOLVED requests)
         self.tickets: list[Ticket] = []
         self.dispatches: list[ServeResult] = []
         self.done: queue.SimpleQueue | None = (
             queue.SimpleQueue() if collect_done else None)
-        self._thread: threading.Thread | None = None
+        self._threads: list[threading.Thread] = []
         if async_mode:
-            self._thread = threading.Thread(target=self._dispatch_loop,
-                                            name="ditto-serve-dispatch",
-                                            daemon=True)
-            self._thread.start()
+            # one dispatch thread per shard (solo = one thread, shard 0);
+            # each thread runs the same policy over its own shard's groups
+            # and — in mesh mode — may steal due work from siblings
+            for k in range(self._n_shards):
+                name = ("ditto-serve-dispatch" if self._n_shards == 1
+                        else f"ditto-serve-shard{k}")
+                t = threading.Thread(target=self._dispatch_loop, args=(k,),
+                                     name=name, daemon=True)
+                self._threads.append(t)
+                t.start()
 
     # ------------------------------------------------------------------ api
     @staticmethod
@@ -374,7 +451,13 @@ class ServeScheduler:
         ``eager=False``)."""
         if x.shape[0] < 1:
             raise ValueError("empty request")
-        plan = (plan if plan is not None else self.session.plan).normalized()
+        plan = plan if plan is not None else self.session.plan
+        if self.mesh is not None:
+            # every dispatched plan carries the mesh signature — an
+            # unstamped override would land in a separate (unsharded)
+            # trace-identity group and never share the warmed runners
+            plan = self.mesh.plan_for(plan)
+        plan = plan.normalized()
         if is_unset(deadline_ms):
             deadline_ms = plan.deadline_ms
         elif deadline_ms is not None and not deadline_ms > 0:
@@ -390,7 +473,8 @@ class ServeScheduler:
             key = (self._group_key(plan), labels is not None)
             group = self._groups.get(key)
             if group is None:
-                group = self._groups[key] = _Group(plan)
+                group = self._groups[key] = _Group(plan,
+                                                   shard=self._route_locked())
             ticket = Ticket(self, self._n_submitted, x.shape[0], plan,
                             deadline_ms, now)
             self._n_submitted += 1
@@ -430,13 +514,16 @@ class ServeScheduler:
                             "drain")
             return [t for t in snapshot if t.done]
 
-    def poll(self) -> int:
+    def poll(self, shard: int | None = None) -> int:
         """Run at most one due dispatch on the calling thread and return
         the rows it dispatched (0 = nothing due). Same policy as the
-        background thread (``_next_job_locked``) — the deterministic
-        counterpart for fake-clock tests and thread-free embeddings."""
+        background threads (``_next_job_locked``) — the deterministic
+        counterpart for fake-clock tests and thread-free embeddings.
+        ``shard`` polls as that shard's dispatch thread would: its own
+        queues first, then the cross-shard steal scan; ``None`` (default)
+        scans every group with no stealing."""
         with self._cv:
-            job = self._next_job_locked()
+            job = self._next_job_locked(shard)
             if job is None:
                 return 0
             group, rows, trigger = job
@@ -444,12 +531,15 @@ class ServeScheduler:
                 batch = self._take_locked(group, rows)
             except _TakeFailed:
                 return rows  # covered tickets failed; the queue is repaired
+            serve_shard = shard if shard is not None else group.shard
             self._inflight += 1
+            self._shard_inflight[serve_shard] += 1
         try:
-            self._serve_and_deliver(group, batch, trigger)
+            self._serve_and_deliver(group, batch, trigger, shard=serve_shard)
         finally:
             with self._cv:
                 self._inflight -= 1
+                self._shard_inflight[serve_shard] -= 1
                 self._cv.notify_all()
         return rows
 
@@ -466,12 +556,12 @@ class ServeScheduler:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-        thread, self._thread = self._thread, None
-        if thread is not None:
+        threads, self._threads = self._threads, []
+        for thread in threads:
             thread.join(timeout=join_timeout_s)
             if thread.is_alive():
                 raise RuntimeError(
-                    f"dispatch thread failed to join within "
+                    f"dispatch thread {thread.name} failed to join within "
                     f"{join_timeout_s}s (stalled dispatch?); the scheduler "
                     f"is closed but the thread may still hold the device")
 
@@ -502,6 +592,18 @@ class ServeScheduler:
         ``plans`` defaults to the session plan; ``buckets`` to each
         plan's full power-of-two ladder; ``labels`` must match whether
         requests pass class labels (it is part of the traced signature).
+
+        In mesh mode the ladder is additionally PRIMED on every sibling
+        shard: executables are placement-specific (``jax.jit`` compiles
+        per argument sharding), so shard 0's abstract AOT copy cannot
+        serve a dispatch placed on shard k. Siblings run one real
+        batch-``b`` dispatch per ladder bucket through their own session
+        — populating jit's placement-keyed executable cache with ZERO new
+        traces (the jaxpr is shared; ``traces`` stays once per mesh
+        signature) — so a first request landing on (or stolen by) any
+        shard skips the cold compile. Priming dispatches count toward
+        session stats, never scheduler dispatch counters; the count is
+        returned as ``primed``.
         """
         t0 = time.monotonic()
         plans = [p.normalized() for p in
@@ -509,7 +611,8 @@ class ServeScheduler:
         by_probe: dict[tuple, list] = {}
         for p in plans:
             by_probe.setdefault((p.policy, p.steps), []).append(p)
-        out = {"aot_compiled": 0, "traces": 0}
+        out = {"aot_compiled": 0, "traces": 0, "primed": 0}
+        cfg = self.session.cfg
         for group_plans in by_probe.values():
             modes = self._probe_modes(group_plans[0], labels=labels,
                                       probe_seed=probe_seed)
@@ -521,6 +624,16 @@ class ServeScheduler:
                                               params=self.session.params)
                 out["aot_compiled"] += r["aot_compiled"]
                 out["traces"] += r["traces"]
+                for sess in self._sessions[1:]:
+                    for b in ladder:
+                        x = jax.random.normal(
+                            jax.random.PRNGKey(probe_seed),
+                            (b, cfg.input_size, cfg.input_size,
+                             cfg.in_channels), jnp.float32)
+                        lab = (jnp.zeros((b,), jnp.int32) if labels
+                               else None)
+                        sess.serve(x, lab, plan=p)
+                        out["primed"] += 1
         out["wall_s"] = time.monotonic() - t0
         return out
 
@@ -558,7 +671,23 @@ class ServeScheduler:
                 self._urgent.add(ticket.index)
                 self._cv.notify_all()
 
-    def _next_job_locked(self) -> tuple[_Group, int, str] | None:
+    def _route_locked(self) -> int:
+        """Shard for a newly created group: least total queued rows across
+        its current groups, round-robin tiebreak (an idle mesh spreads
+        fresh groups across shards instead of piling them on shard 0)."""
+        if self._n_shards == 1:
+            return 0
+        load = [0] * self._n_shards
+        for g in self._groups.values():
+            load[g.shard] += g.queued_rows
+        order = [(self._rr + k) % self._n_shards
+                 for k in range(self._n_shards)]
+        shard = min(order, key=lambda k: load[k])
+        self._rr = (shard + 1) % self._n_shards
+        return shard
+
+    def _next_job_locked(self, shard: int | None = None
+                         ) -> tuple[_Group, int, str] | None:
         """The dispatch policy: pick the next (group, rows, trigger) to
         serve, or None if nothing is due. Deadline-due partials preempt
         full buckets — a full bucket is never urgent (it loses no budget
@@ -566,30 +695,58 @@ class ServeScheduler:
         With ``shed_expired=True``, requests whose budget already expired
         un-dispatched are rejected (typed :class:`RequestShed`) before
         the deadline scan — serving them late helps nobody and steals
-        device time from requests that can still make their SLO."""
+        device time from requests that can still make their SLO.
+
+        ``shard`` scopes the scan to that shard's own groups (the per-
+        shard dispatch threads); ``None`` scans everything (solo mode,
+        ``poll()`` default, sync ``flush()``). A shard with no due work
+        of its own STEALS: it runs the same scan over sibling groups
+        whose owner shard is currently mid-dispatch — work that is due
+        but whose owner is too busy to take — never force-dispatching a
+        partial bucket an idle owner was still coalescing."""
         f = faults.fire("scheduler.policy")
         if f is not None:
             faults.perform(f)
         now = self._clock()
         if self.shed_expired:
             self._shed_locked(now)
-        for group in self._groups.values():
+        groups = (list(self._groups.values()) if shard is None else
+                  [g for g in self._groups.values() if g.shard == shard])
+        job = self._policy_scan_locked(groups, now)
+        if job is not None or shard is None:
+            return job
+        if self.mesh is not None and self.mesh.steal:
+            victims = [g for g in self._groups.values()
+                       if g.shard != shard
+                       and self._shard_inflight[g.shard]
+                       and g.queued_rows >= self.mesh.steal_min_rows]
+            job = self._policy_scan_locked(victims, now)
+            if job is not None:
+                group, rows, _ = job
+                return group, rows, "steal"
+        return None
+
+    def _policy_scan_locked(self, groups, now: float
+                            ) -> tuple[_Group, int, str] | None:
+        """One pass of the deadline -> full -> demand -> drain policy over
+        ``groups`` (a shard's own queues, or — for a steal — a sibling's)."""
+        for group in groups:
             if any(p.ticket._deadline_t is not None
                    and p.ticket._deadline_t - now <= self.dispatch_interval
                    for p in group.pending):
                 q = group.queued_rows
                 return group, min(q, group.plan.max_batch), "deadline"
         if self.eager or self._draining:
-            for group in self._groups.values():
+            for group in groups:
                 if group.queued_rows >= group.plan.max_batch:
                     return group, group.plan.max_batch, "full"
         if self._urgent:
-            for group in self._groups.values():
+            for group in groups:
                 if any(p.ticket.index in self._urgent for p in group.pending):
                     q = group.queued_rows
                     return group, min(q, group.plan.max_batch), "demand"
         if self._draining:
-            for group in self._groups.values():
+            for group in groups:
                 q = group.queued_rows
                 if q:
                     return group, min(q, group.plan.max_batch), "drain"
@@ -626,22 +783,25 @@ class ServeScheduler:
         if any_shed:
             self._cv.notify_all()
 
-    def _dispatch_loop(self) -> None:
+    def _dispatch_loop(self, shard: int = 0) -> None:
         # Any escape from the loop body — a policy/take bug, an injected
         # scheduler fault, OOM during concatenate — lands in _on_died so a
         # dead thread fails fast instead of stranding result() callers.
+        # One thread per shard shares this body; a death on ANY shard
+        # fails the whole scheduler (recovery from serve faults is the
+        # per-dispatch ladder in _serve_and_deliver, not thread death).
         try:
-            self._dispatch_loop_inner()
+            self._dispatch_loop_inner(shard)
         except BaseException as exc:  # noqa: BLE001 — death must be typed
             self._on_died(exc)
 
-    def _dispatch_loop_inner(self) -> None:
+    def _dispatch_loop_inner(self, shard: int) -> None:
         while True:
             with self._cv:
                 while True:
                     if self._closed:
                         return
-                    job = self._next_job_locked()
+                    job = self._next_job_locked(shard)
                     if job is not None:
                         break
                     self._cv.wait(self._next_wakeup_locked())
@@ -651,14 +811,16 @@ class ServeScheduler:
                 except _TakeFailed:
                     continue  # tickets failed, queue repaired — move on
                 self._inflight += 1
+                self._shard_inflight[shard] += 1
             try:
                 fault = faults.fire("scheduler.dispatch")
                 if fault is not None:
                     faults.perform(fault)
-                self._serve_and_deliver(group, batch, trigger)
+                self._serve_and_deliver(group, batch, trigger, shard=shard)
             finally:
                 with self._cv:
                     self._inflight -= 1
+                    self._shard_inflight[shard] -= 1
                     self._cv.notify_all()
 
     def _on_died(self, exc: BaseException) -> None:
@@ -721,17 +883,19 @@ class ServeScheduler:
             raise _TakeFailed(str(exc)) from exc
         segments = []
         for p, c in plan_items:
-            segments.append((p.ticket, c))
+            segments.append((p.ticket, p.used, c))
             p.used += c
         while group.pending and not group.pending[0].remaining:
             group.pending.popleft()
         return x, labels, segments
 
-    def _serve_and_deliver(self, group: _Group, batch, trigger: str
-                           ) -> ServeResult | None:
+    def _serve_and_deliver(self, group: _Group, batch, trigger: str,
+                           shard: int | None = None) -> ServeResult | None:
         """Serve one taken batch (OUTSIDE the lock — the policy keeps
         accepting submissions while the device runs) and deliver each
-        covered ticket its slice.
+        covered ticket its slice. ``shard`` is the SERVING shard — the
+        thief's own on a stolen job, the group's otherwise (per-sample
+        calibration makes the serving devices invisible in the rows).
 
         A failed serve walks the plan's degradation ladder: up to
         ``max_retries`` re-dispatches with bounded exponential backoff,
@@ -743,6 +907,8 @@ class ServeScheduler:
         fails the covered tickets with :class:`DispatchFailed` (single
         no-retry attempts keep raising the original error)."""
         x, labels, segments = batch
+        shard = group.shard if shard is None else shard
+        session = self._sessions[shard] if shard < len(self._sessions) else self.session
         plan = group.plan
         ladder = (plan,) + tuple(plan.fallback_plans()
                                  if hasattr(plan, "fallback_plans") else ())
@@ -765,7 +931,7 @@ class ServeScheduler:
                         / 1e3)
             ran = attempt + 1
             try:
-                result = self.session.serve(x, labels, plan=used_plan)
+                result = session.serve(x, labels, plan=used_plan)
                 break
             except Exception as exc:
                 last_exc = exc
@@ -778,7 +944,7 @@ class ServeScheduler:
             now = self._clock()
             with self._cv:
                 self._failed += len(segments)
-                for ticket, _ in segments:
+                for ticket, _, _ in segments:
                     ticket._fail(exc, now)
                     self._retire_locked(ticket)
                 self._cv.notify_all()
@@ -791,15 +957,20 @@ class ServeScheduler:
             self._dispatched_rows += x.shape[0]
             self._pad_rows += result.pad_rows
             self._triggers[trigger] += 1
+            self._shard_dispatches[shard] += 1
+            self._shard_rows[shard] += x.shape[0]
+            if trigger == "steal":
+                self._steals += 1
+                self._stolen_rows += x.shape[0]
             if self.retain:
                 self.dispatches.append(result)
             off = 0
-            for ticket, c in segments:
+            for ticket, dst, c in segments:
                 ticket.served_with = used_plan
                 # the slice materializes the ticket's own rows as a fresh
                 # device array — tickets never pin the padded dispatch
                 # sample (or its engines/records) past this block
-                ticket._deliver(result.sample[off:off + c],
+                ticket._deliver(dst, result.sample[off:off + c],
                                 result if self.retain else None)
                 off += c
                 if ticket._filled == ticket.batch:
@@ -841,7 +1012,7 @@ class ServeScheduler:
     def stats(self) -> dict[str, Any]:
         with self._cv:
             queued = sum(g.queued_rows for g in self._groups.values())
-            return {"submitted": self._n_submitted,
+            out = {"submitted": self._n_submitted,
                     "submitted_rows": self._rows_submitted,
                     "queued_rows": queued,
                     "inflight": self._inflight,
@@ -857,5 +1028,27 @@ class ServeScheduler:
                     "retries": self._retries,
                     "fallback_dispatches": self._fallbacks,
                     "shed": self._shed,
-                    "died": self._died is not None,
-                    **self.session.stats()}
+                    "died": self._died is not None}
+            if self.mesh is None:
+                out.update(self.session.stats())
+            else:
+                # per-shard sessions share ONE cache: sum the serving
+                # counters across sessions, read the cache stats once
+                for s in self._sessions:
+                    with s._stats_lock:
+                        out["batches"] = out.get("batches", 0) + s.batches_served
+                        out["requests"] = (out.get("requests", 0)
+                                           + s.requests_served)
+                        out["watchdog_events"] = (out.get("watchdog_events", 0)
+                                                  + s.watchdog_events)
+                cache = getattr(self.session, "cache", None)
+                if cache is not None:
+                    out.update(cache.stats())
+                out["mesh"] = {"n_devices": self.mesh.n_devices,
+                               "dp": self.mesh.dp,
+                               "n_shards": self._n_shards,
+                               "shard_dispatches": list(self._shard_dispatches),
+                               "shard_rows": list(self._shard_rows),
+                               "steals": self._steals,
+                               "stolen_rows": self._stolen_rows}
+            return out

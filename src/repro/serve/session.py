@@ -98,9 +98,19 @@ class ServeSession:
     """
 
     def __init__(self, params, cfg, sched, plan: DittoPlan | PlanSchedule | None = None, *,
-                 cache: CompiledRunnerCache | None = None, steps=UNSET, sampler=UNSET,
-                 policy=UNSET, compiled=UNSET, interpret=UNSET, collect_stats=UNSET,
-                 block=UNSET, low_bits=UNSET, fused=UNSET, max_batch=UNSET):
+                 cache: CompiledRunnerCache | None = None, mesh=None, steps=UNSET,
+                 sampler=UNSET, policy=UNSET, compiled=UNSET, interpret=UNSET,
+                 collect_stats=UNSET, block=UNSET, low_bits=UNSET, fused=UNSET,
+                 max_batch=UNSET):
+        # mesh: the concrete shard submesh this session dispatches onto
+        # (mesh-aware schedulers run one session per shard). None + a
+        # mesh-signed plan resolves a default mesh at dispatch time; the
+        # params are committed (replicated) onto the submesh once here so
+        # every dispatch finds them shard-local.
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            params = jax.device_put(params, NamedSharding(mesh, PartitionSpec()))
         self.params = params
         self.cfg = cfg
         self.sched = sched
@@ -155,10 +165,13 @@ class ServeSession:
         # per-thread attribution: traces_delta counts the traces THIS call's
         # thread caused, not whatever other threads did to the shared
         # cache.n_traces between two reads
+        # mesh only when set: meshless sessions keep the exact pre-mesh
+        # call signature (tests duck-type serve_records without a mesh kwarg)
+        mesh_kw = {} if self.mesh is None else {"mesh": self.mesh}
         with self.cache.attribution() as att:
             records, sample, eng = harness.serve_records(
                 self.params, self.cfg, self.sched, x, labels, plan,
-                runner_cache=self.cache, bucket=bucket,
+                runner_cache=self.cache, bucket=bucket, **mesh_kw,
             )
             jax.block_until_ready(sample)
         wall = time.monotonic() - t0

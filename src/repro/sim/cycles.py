@@ -8,8 +8,8 @@ exactly like the paper's hooked-activation simulator.
 
 Because the class statistics are *per-element fractions*, records can be
 re-priced at paper-scale layer dimensions (``scale_records``): stats are
-measured on trained reduced models (no pretrained checkpoints offline —
-DESIGN.md §8.2) while the cycle economics use the real model's (t, k, n).
+measured on trained reduced models (no pretrained checkpoints offline)
+while the cycle economics use the real model's (t, k, n).
 
 Pipelining: per-layer latency = max(compute, memory) + slack; Encoding /
 VPU / Defo unit overheads are the paper-reported fractions.
@@ -91,7 +91,7 @@ def _mem_split(rec: dict, mode: str) -> tuple[float, float]:
         return sram, 0.0
     # y_prev is stored as 16-bit fixed point (the VPU requantizes between
     # layers; a 32-bit store would contradict the paper's own 2.75x
-    # memory-access figure — DESIGN.md §8). read previous + write current:
+    # memory-access figure — PAPER.md). read previous + write current:
     dram = 4.0 * t * n
     if rec.get("boundary_in", True):
         dram += 2.0 * t * k  # x_prev read + x_t write (difference calc)

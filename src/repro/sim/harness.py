@@ -42,9 +42,9 @@ def collect_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels, *, steps: i
 
 def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels=None,
                   plan: DittoPlan | PlanSchedule | None = None, *, runner_cache=None,
-                  bucket: int | None = None, steps=UNSET, sampler=UNSET, policy=UNSET,
-                  compiled=UNSET, interpret=UNSET, collect_stats=UNSET, block=UNSET,
-                  low_bits=UNSET, fused=UNSET):
+                  bucket: int | None = None, mesh=None, steps=UNSET, sampler=UNSET,
+                  policy=UNSET, compiled=UNSET, interpret=UNSET, collect_stats=UNSET,
+                  block=UNSET, low_bits=UNSET, fused=UNSET):
     """The deployment pass: eager calibration (+ the Defo mode decision
     after step 2), then the remaining steps through the jit-compiled Pallas
     path — act layers on int8_matmul, diff layers on diff_encode ->
@@ -75,7 +75,14 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels=None,
     bit-identical to the unbucketed path (see repro.serve.bucketing) while
     letting ragged batch sizes share a trace. Records are collected at
     bucket scale (the padded rows are replicas, so per-element fractions
-    are representative; ``macs`` scale with the bucket)."""
+    are representative; ``macs`` scale with the bucket).
+
+    ``mesh`` (a concrete ``jax.sharding.Mesh``) commits the padded
+    dispatch onto a shard submesh for a mesh-signed plan (batch axis
+    split over the plan's ``mesh_axis``; per-sample calibration keeps the
+    sharded sample bit-identical — see repro.serve.mesh). ``mesh=None``
+    with a sharded plan resolves a default mesh over the leading host
+    devices; unsharded plans ignore it entirely."""
     plan = plan_from_kwargs("sim.harness.serve_records", plan, steps=steps,
                             sampler=sampler, policy=policy, compiled=compiled,
                             interpret=interpret, collect_stats=collect_stats,
@@ -85,6 +92,11 @@ def serve_records(params, cfg: dit_mod.DiTCfg, sched, x_T, labels=None,
         from ..serve import bucketing  # function-level: repro.serve imports sim.harness
 
         x_T, labels = bucketing.pad_batch(x_T, labels, bucket)
+    if plan.mesh_sig() is not None:
+        from ..serve import mesh as mesh_mod  # function-level, as above
+
+        mesh = mesh_mod.resolve_mesh(plan, mesh)
+        x_T, labels = mesh_mod.place_dispatch(x_T, labels, mesh, plan.mesh_axis)
     eng = DittoEngine(policy=plan.policy, collect_oracle=plan.collect_stats)
     fn = make_denoise_fn(params, cfg, eng, plan, runner_cache=runner_cache,
                          bucket=x_T.shape[0])

@@ -51,6 +51,8 @@ TRACKED: dict[str, dict] = {
         "higher_is_better": True, "rel_tol": 0.20},
     "bench_latency/bench_latency/p99_speedup_vs_sync": {
         "higher_is_better": True, "rel_tol": 0.30},
+    "bench_mesh/bench_mesh/wall_ratio": {
+        "higher_is_better": True, "rel_tol": 0.30},
     # priced cost ratio (deterministic tile math, tight tolerance)
     "bench_int4/bench_int4/bops_tile_over_act": {
         "higher_is_better": False, "rel_tol": 0.05},
@@ -68,6 +70,8 @@ TRACKED: dict[str, dict] = {
     "bench_faults/bench_faults/watchdog_bitidentical": {"exact": True},
     "bench_faults/bench_faults/ladder_bitidentical": {"exact": True},
     "bench_faults/bench_faults/reanchor_recovered_finite": {"exact": True},
+    "bench_mesh/bench_mesh/bitidentical": {"exact": True},
+    "bench_mesh/bench_mesh/mesh_traces": {"exact": True},
 }
 
 

@@ -13,6 +13,14 @@ Scans README.md and every markdown file under docs/ for
     against the repo root, ``src/`` and ``src/repro/``; bare filenames
     must match somewhere in the tree (typo catcher).
 
+Module docstrings get the same dangling-path check: every ``*.py`` under
+``src/``, ``benchmarks/``, ``tools/`` and ``examples/`` has its module
+docstring scanned for tokens ending in a known file extension (prose
+mentions like ``tests/test_docs.py`` or ``ROADMAP.md``) — each must
+resolve in the tree. A module docstring is the first thing a reader
+trusts; a path that was renamed or never existed sends them somewhere
+that cannot answer.
+
 Additionally scans the docs AND ``examples/*.py`` for the pre-DittoPlan
 call style: ``ServeSession`` / ``serve_records`` / ``make_denoise_fn`` /
 ``make_step_fn`` invoked with splatted config kwargs (``steps=``,
@@ -30,6 +38,7 @@ before the pytest fast suite); tests/test_docs.py keeps it in tier-1.
 """
 from __future__ import annotations
 
+import ast
 import os
 import re
 import shlex
@@ -109,6 +118,55 @@ def deprecated_api_errors(rel: str, text: str) -> list[str]:
     """Rendered-string view of :func:`deprecated_api_findings` (the stable
     API tests/test_docs.py asserts against)."""
     return [f.render() for f in deprecated_api_findings(rel, text)]
+
+
+# ------------------------------------------- module-docstring path lint
+#: roots whose *.py module docstrings are scanned for dangling path refs
+PY_ROOTS = ("src", "benchmarks", "tools", "examples")
+_DOC_TOKEN_RE = re.compile(r"[A-Za-z0-9_.\-/]+")
+
+
+def py_files() -> list[str]:
+    files = []
+    for root in PY_ROOTS:
+        top = os.path.join(ROOT, root)
+        for dirpath, dirnames, names in os.walk(top):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            files.extend(os.path.join(dirpath, n) for n in sorted(names)
+                         if n.endswith(".py"))
+    return files
+
+
+def docstring_findings(path: str, basenames: set[str]) -> list[Finding]:
+    """Dangling path references in one module's docstring.
+
+    Prose is noisy ("retry/fallback/watchdog" is not a path), so only
+    tokens ending in a known file extension are treated as path claims;
+    dir-qualified ones resolve like the markdown lint (repo root, src/,
+    src/repro/), bare filenames against the tree's basenames."""
+    rel = os.path.relpath(path, ROOT)
+    with open(path) as f:
+        try:
+            tree = ast.parse(f.read())
+        except SyntaxError:
+            return []  # not this lint's finding to make
+    doc = ast.get_docstring(tree)
+    if not doc:
+        return []
+    base_line = tree.body[0].lineno
+    findings = []
+    for i, line in enumerate(doc.splitlines()):
+        for raw in _DOC_TOKEN_RE.findall(line):
+            tok = raw.strip(".,;:-")
+            if (not tok.endswith(KNOWN_EXTS) or "://" in tok
+                    or tok.startswith(("/", "."))):
+                continue
+            if not path_exists(tok, basenames):
+                findings.append(Finding(
+                    "docs-missing-path", rel, tok,
+                    f"module docstring references missing path '{tok}'",
+                    base_line + i))
+    return findings
 
 
 def example_files() -> list[str]:
@@ -223,6 +281,9 @@ def main(argv=None) -> int:
     for path in files + example_files():
         with open(path) as f:
             findings.extend(deprecated_api_findings(os.path.relpath(path, ROOT), f.read()))
+    # module docstrings must not point readers at paths that don't exist
+    for path in py_files():
+        findings.extend(docstring_findings(path, basenames))
     if json_path:
         with open(json_path, "w") as f:
             f.write(report_json(findings))

@@ -1,4 +1,4 @@
-"""Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/*.json."""
+"""Generate the roofline markdown table from experiments/dryrun/*.json."""
 import glob
 import json
 import os
